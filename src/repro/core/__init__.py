@@ -1,0 +1,59 @@
+"""Core futurized accelerator runtime (the paper's contribution).
+
+Public surface mirrors HPXCL:
+
+    from repro.core import get_all_devices, Dim3, when_all, wait_all, dataflow
+
+    devices = get_all_devices(1, 0).get()          # Listing 1
+    dev = devices[0]
+    buf = dev.create_buffer(1000, jnp.float32).get()
+    futs = [buf.enqueue_write(0, host_data)]
+    prog = dev.create_program_with_file("kernel.py").get()
+    futs.append(prog.build("sum"))
+    wait_all(futs)                                  # Listing 2, line 38
+    prog.run([buf, res, n], "sum", grid=Dim3(1), block=Dim3(32), out=[res]).get()
+    result = res.enqueue_read_sync()
+"""
+from repro.core.agas import GID, Placement, Registry, registry
+from repro.core.buffer import Buffer
+from repro.core.device import Device, get_all_devices
+from repro.core.executor import Runtime, WorkQueue, get_runtime, reset_runtime
+from repro.core.futures import (
+    Future,
+    FutureState,
+    Promise,
+    async_,
+    dataflow,
+    make_exceptional_future,
+    make_ready_future,
+    wait_all,
+    when_all,
+    when_any,
+)
+from repro.core.program import Dim3, Program
+
+__all__ = [
+    "GID",
+    "Placement",
+    "Registry",
+    "registry",
+    "Buffer",
+    "Device",
+    "get_all_devices",
+    "Runtime",
+    "WorkQueue",
+    "get_runtime",
+    "reset_runtime",
+    "Future",
+    "FutureState",
+    "Promise",
+    "async_",
+    "dataflow",
+    "make_exceptional_future",
+    "make_ready_future",
+    "wait_all",
+    "when_all",
+    "when_any",
+    "Dim3",
+    "Program",
+]

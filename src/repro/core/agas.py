@@ -1,0 +1,92 @@
+"""AGAS analogue: a process-global registry of Global IDs (paper §3, §4).
+
+Every runtime object (device, buffer, program) is registered under a GID;
+client handles hold the GID and resolve through the registry, which makes
+them location-transparent: moving the backing data to another device only
+updates the placement record, never the handle.  In multi-controller JAX
+the "remote" case is a non-addressable device in ``jax.devices()``; the
+registry does not care which it is.
+"""
+from __future__ import annotations
+
+import itertools
+import threading
+from dataclasses import dataclass, field
+from typing import Any, Optional
+
+__all__ = ["GID", "Placement", "Registry", "registry"]
+
+GID = int
+
+
+@dataclass(frozen=True)
+class Placement:
+    """Where an object's backing data lives."""
+
+    device_key: str  # e.g. "cpu:0", "tpu:13"
+    process_index: int = 0
+    mesh_axes: "tuple[str, ...] | None" = None  # set for mesh-sharded objects
+    spec: Any = None  # PartitionSpec for mesh-sharded objects
+
+    @property
+    def is_sharded(self) -> bool:
+        return self.mesh_axes is not None
+
+
+@dataclass
+class _Record:
+    obj: Any
+    placement: Placement
+    kind: str = "object"
+    meta: dict = field(default_factory=dict)
+
+
+class Registry:
+    """GID -> (object, placement). Thread-safe; one per process."""
+
+    def __init__(self):
+        self._counter = itertools.count(1)
+        self._records: dict[GID, _Record] = {}
+        self._lock = threading.Lock()
+
+    def register(self, obj: Any, placement: Placement, kind: str = "object", **meta) -> GID:
+        gid = next(self._counter)
+        with self._lock:
+            self._records[gid] = _Record(obj, placement, kind, dict(meta))
+        return gid
+
+    def resolve(self, gid: GID) -> Any:
+        with self._lock:
+            rec = self._records.get(gid)
+        if rec is None:
+            raise KeyError(f"GID {gid} is not registered")
+        return rec.obj
+
+    def placement(self, gid: GID) -> Placement:
+        with self._lock:
+            rec = self._records.get(gid)
+        if rec is None:
+            raise KeyError(f"GID {gid} is not registered")
+        return rec.placement
+
+    def update_placement(self, gid: GID, placement: Placement) -> None:
+        with self._lock:
+            rec = self._records.get(gid)
+            if rec is None:
+                raise KeyError(f"GID {gid} is not registered")
+            rec.placement = placement
+
+    def unregister(self, gid: GID) -> None:
+        with self._lock:
+            self._records.pop(gid, None)
+
+    def by_kind(self, kind: str) -> "list[tuple[GID, Any]]":
+        with self._lock:
+            return [(g, r.obj) for g, r in self._records.items() if r.kind == kind]
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._records)
+
+
+registry = Registry()

@@ -1,0 +1,158 @@
+"""Device memory buffer (paper §4, Fig. 2 ``buffer``).
+
+Operations are submitted to the owning device's ``ops`` queue and return
+futures — ``enqueue_write`` / ``enqueue_read`` are the
+``cudaMemcpyAsync(H2D/D2H)`` analogues; ``copy_to`` moves a buffer between
+devices ("effective memory exchange between different entities", §4) and
+updates the AGAS placement (percolation).
+
+Offsets are in *elements* (dtype-safe), applied on a flat view of the
+buffer, matching HPXCL's (offset, size) windows.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import agas
+from repro.core.futures import Future
+
+__all__ = ["Buffer"]
+
+
+@partial(jax.jit, static_argnums=(3,), donate_argnums=(0,))
+def _flat_update(dst, src, offset, dst_shape):
+    flat = dst.reshape(-1)
+    flat = jax.lax.dynamic_update_slice(flat, src.reshape(-1).astype(flat.dtype), (offset,))
+    return flat.reshape(dst_shape)
+
+
+@partial(jax.jit, static_argnums=(2,))
+def _flat_slice(src, offset, count):
+    return jax.lax.dynamic_slice(src.reshape(-1), (offset,), (count,))
+
+
+class Buffer:
+    """Memory allocated on a specific device; handle is location-transparent."""
+
+    def __init__(self):  # use Device.create_buffer*, not this
+        self.device = None
+        self.shape: tuple = ()
+        self.dtype = None
+        self._array: "jax.Array | None" = None
+        self.gid: agas.GID = 0
+
+    # -- allocation (runs on the device ops queue) ---------------------------
+
+    @staticmethod
+    def _allocate(device, shape, dtype, fill) -> "Buffer":
+        b = Buffer()
+        b.device = device
+        b.shape = (shape,) if isinstance(shape, int) else tuple(shape)
+        b.dtype = np.dtype(dtype)
+        if fill is None:
+            arr = jnp.zeros(b.shape, dtype=b.dtype)
+        else:
+            arr = jnp.full(b.shape, fill, dtype=b.dtype)
+        b._array = jax.device_put(arr, device.jax_device)
+        b.gid = agas.registry.register(
+            b, agas.Placement(device.key, device.jax_device.process_index), kind="buffer"
+        )
+        return b
+
+    @property
+    def size(self) -> int:
+        return int(np.prod(self.shape)) if self.shape else 1
+
+    @property
+    def nbytes(self) -> int:
+        return self.size * self.dtype.itemsize
+
+    # -- async transfer surface ----------------------------------------------
+
+    def enqueue_write(self, offset: int, data, count: "int | None" = None) -> Future:
+        """Asynchronously copy host ``data`` into the buffer at ``offset``
+        (elements, flat view). ``cudaMemcpyAsync(HostToDevice)`` analogue."""
+
+        def _write():
+            src = np.asarray(data).reshape(-1)
+            if count is not None:
+                src = src[:count]
+            if offset == 0 and src.size == self.size:
+                self._array = jax.device_put(
+                    src.reshape(self.shape).astype(self.dtype), self.device.jax_device
+                )
+            else:
+                staged = jax.device_put(src, self.device.jax_device)
+                self._array = _flat_update(self._array, staged, offset, self.shape)
+            return None
+
+        return self.device.ops_queue.submit(_write)
+
+    def enqueue_read(self, offset: int = 0, count: "int | None" = None) -> Future:
+        """Asynchronously copy device data to the host; future of np.ndarray.
+        ``cudaMemcpyAsync(DeviceToHost)`` analogue."""
+        n = self.size - offset if count is None else count
+
+        def _read():
+            if offset == 0 and n == self.size:
+                out = self._array
+            else:
+                out = _flat_slice(self._array, offset, n)
+            # start D2H without blocking the ops queue on completion
+            out.copy_to_host_async()
+            return out
+
+        # resolve to a numpy array; inline continuation (non-blocking fn)
+        return self.device.ops_queue.submit(_read).then(
+            lambda a: np.asarray(a), executor="inline", name=f"read:gid{self.gid}"
+        )
+
+    def enqueue_read_sync(self, offset: int = 0, count: "int | None" = None):
+        return self.enqueue_read(offset, count).get()
+
+    def copy_to(self, target_device) -> Future:
+        """Move contents to ``target_device``; future of the *new* Buffer.
+        Updates AGAS placement — the percolation primitive."""
+
+        def _stage():
+            return self._array  # capture current contents in submission order
+
+        def _land(arr):
+            nb = Buffer()
+            nb.device = target_device
+            nb.shape, nb.dtype = self.shape, self.dtype
+            nb._array = jax.device_put(arr, target_device.jax_device)
+            nb.gid = agas.registry.register(
+                nb,
+                agas.Placement(target_device.key, target_device.jax_device.process_index),
+                kind="buffer",
+            )
+            return nb
+
+        from repro.core.executor import get_runtime
+
+        staged = self.device.ops_queue.submit(_stage)
+        # The continuation submits to (possibly the same) ops queue and
+        # waits — run it on the host pool, never inline on a queue worker.
+        return staged.then(
+            lambda arr: target_device.ops_queue.submit(partial(_land, arr)).get(),
+            executor=get_runtime().pool,
+            name=f"copy:gid{self.gid}",
+        )
+
+    # -- kernel-facing view ---------------------------------------------------
+
+    def array(self) -> "jax.Array":
+        """Current device-resident value (async; usable as a kernel arg)."""
+        return self._array
+
+    def _set_array(self, arr: "jax.Array") -> None:
+        self._array = arr
+
+    def __repr__(self) -> str:
+        return f"Buffer(gid={self.gid}, {self.dtype}{list(self.shape)} @ {self.device.key})"

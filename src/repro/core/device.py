@@ -1,0 +1,147 @@
+"""Logical device abstraction (paper §4, Fig. 2 ``device``).
+
+A ``Device`` wraps one ``jax.Device`` (local *or* remote — in
+multi-controller JAX remote accelerators appear as non-addressable entries
+of ``jax.devices()``) and exposes HPXCL's surface:
+
+  * ``create_buffer``  — async allocation (``cudaMalloc`` analogue)
+  * ``create_program`` — async program creation (NVRTC source analogue)
+  * per-device work queues: ``ops`` (transfers/launch submission order) and
+    ``compile`` (runtime compilation), separate so that building a kernel
+    overlaps data transfers exactly as in Listing 2
+  * ``synchronize``    — drain queues and block on outstanding arrays
+
+``get_all_devices(major, minor)`` mirrors the paper's Listing 1: it returns
+a *future* of the device list, filtered by a minimum capability.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Optional
+
+import jax
+import numpy as np
+
+from repro.core import agas
+from repro.core.executor import WorkQueue, get_runtime
+from repro.core.futures import Future
+
+__all__ = ["Device", "get_all_devices", "capability_of"]
+
+# Pseudo "compute capability" per platform so the Listing-1 signature keeps
+# meaning on TPU/CPU: (major, minor).
+_PLATFORM_CAPABILITY = {
+    "cpu": (1, 0),
+    "gpu": (7, 0),
+    "cuda": (7, 0),
+    "rocm": (7, 0),
+    "tpu": (9, 0),
+}
+
+
+def capability_of(jax_device: "jax.Device") -> "tuple[int, int]":
+    return _PLATFORM_CAPABILITY.get(jax_device.platform, (1, 0))
+
+
+class Device:
+    """Location-transparent handle to one accelerator."""
+
+    def __init__(self, jax_device: "jax.Device"):
+        self.jax_device = jax_device
+        self.key = f"{jax_device.platform}:{jax_device.id}"
+        rt = get_runtime()
+        # Two queues per device: ops (stream analogue) + compile (NVRTC).
+        self.ops_queue: WorkQueue = rt.queue(f"ops:{self.key}")
+        self.compile_queue: WorkQueue = rt.queue(f"compile:{self.key}")
+        self.gid: agas.GID = agas.registry.register(
+            self, agas.Placement(self.key, jax_device.process_index), kind="device"
+        )
+
+    # -- identity ----------------------------------------------------------
+
+    @property
+    def platform(self) -> str:
+        return self.jax_device.platform
+
+    @property
+    def is_local(self) -> bool:
+        return self.jax_device.process_index == jax.process_index()
+
+    def capability(self) -> "tuple[int, int]":
+        return capability_of(self.jax_device)
+
+    # -- factory surface (all async, returning futures) ---------------------
+
+    def create_buffer(self, shape, dtype=np.float32, fill: Any = None) -> "Future":
+        """Allocate a device buffer (async; ``cudaMalloc`` analogue).
+
+        ``shape`` may be an int (1-D length in *elements*, not bytes — the
+        dtype-safe adaptation of HPXCL's byte counts) or a tuple.
+        """
+        from repro.core.buffer import Buffer
+
+        def _alloc():
+            return Buffer._allocate(self, shape, dtype, fill)
+
+        return self.ops_queue.submit(_alloc)
+
+    def create_buffer_from(self, data) -> "Future":
+        """Allocate + write in one async op."""
+        from repro.core.buffer import Buffer
+
+        def _alloc():
+            arr = np.asarray(data)
+            buf = Buffer._allocate(self, arr.shape, arr.dtype, None)
+            buf._array = jax.device_put(arr, self.jax_device)
+            return buf
+
+        return self.ops_queue.submit(_alloc)
+
+    def create_program(self, kernels, name: str = "program") -> "Future":
+        """Create a program from ``{kernel_name: callable}`` (async)."""
+        from repro.core.program import Program
+
+        return self.compile_queue.submit(lambda: Program(self, kernels, name=name))
+
+    def create_program_with_file(self, path: str) -> "Future":
+        """Load kernels from a python file defining ``KERNELS`` (percolation:
+        source code shipped to and compiled at the device — NVRTC analogue).
+        """
+        from repro.core.program import Program
+
+        return self.compile_queue.submit(lambda: Program.from_file(self, path))
+
+    # -- synchronization ----------------------------------------------------
+
+    def synchronize(self) -> None:
+        """Drain both queues (``cudaDeviceSynchronize`` analogue)."""
+        self.ops_queue.drain()
+        self.compile_queue.drain()
+
+    def __repr__(self) -> str:
+        where = "local" if self.is_local else "remote"
+        return f"Device({self.key}, {where}, gid={self.gid})"
+
+
+_device_cache: "dict[str, Device]" = {}
+
+
+def _wrap(jd: "jax.Device") -> Device:
+    key = f"{jd.platform}:{jd.id}"
+    dev = _device_cache.get(key)
+    if dev is None:
+        dev = _device_cache[key] = Device(jd)
+    return dev
+
+
+def get_all_devices(major: int = 0, minor: int = 0) -> "Future[list[Device]]":
+    """Discover every (local and remote) device with capability >= (major,
+    minor). Returns a *future* of the list — call ``.get()`` (Listing 1)."""
+
+    def _discover() -> "list[Device]":
+        out = []
+        for jd in jax.devices():
+            if capability_of(jd) >= (major, minor):
+                out.append(_wrap(jd))
+        return out
+
+    return get_runtime().async_(_discover)

@@ -1,0 +1,117 @@
+"""Host-side execution resources: thread pools and static per-device queues.
+
+HPXCL attaches every device operation to a lightweight user-level thread
+under the *static* scheduling policy (one queue pinned per device — paper
+§3/§4).  The JAX analogue: a ``WorkQueue`` is a single-thread FIFO executor;
+one is created per logical device for ordered submission (XLA then overlaps
+the *execution*), plus a shared host pool for continuations, I/O and
+``async_`` tasks.
+"""
+from __future__ import annotations
+
+import atexit
+import concurrent.futures as _cf
+import os
+import queue as _queue
+import threading
+from typing import Callable, Optional
+
+from repro.core.futures import Future
+
+__all__ = ["WorkQueue", "Runtime", "get_runtime", "reset_runtime"]
+
+
+class WorkQueue:
+    """Single-worker FIFO queue — the 'static scheduling policy' of HPXCL.
+
+    Submissions execute strictly in order; each returns a ``Future``.  This
+    is the submission-ordering analogue of a CUDA stream (DESIGN.md §2).
+    """
+
+    def __init__(self, name: str):
+        self.name = name
+        self._q: _queue.SimpleQueue = _queue.SimpleQueue()
+        self._shutdown = threading.Event()
+        self._thread = threading.Thread(target=self._loop, name=f"wq:{name}", daemon=True)
+        self._thread.start()
+
+    def _loop(self) -> None:
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            fut, fn, args, kwargs = item
+            if fut._cf.set_running_or_notify_cancel():
+                try:
+                    fut._cf.set_result(fn(*args, **kwargs))
+                except BaseException as e:  # noqa: BLE001
+                    fut._cf.set_exception(e)
+
+    def submit(self, fn: Callable, *args, **kwargs) -> Future:
+        if self._shutdown.is_set():
+            raise RuntimeError(f"WorkQueue {self.name} is shut down")
+        fut: Future = Future(name=f"{self.name}:{getattr(fn, '__name__', 'task')}")
+        self._q.put((fut, fn, args, kwargs))
+        return fut
+
+    def drain(self) -> None:
+        """Block until everything submitted so far has run."""
+        self.submit(lambda: None).get()
+
+    def shutdown(self) -> None:
+        if not self._shutdown.is_set():
+            self._shutdown.set()
+            self._q.put(None)
+            self._thread.join(timeout=5)
+
+
+class Runtime:
+    """Process-wide execution resources (HPX thread-manager analogue)."""
+
+    def __init__(self, host_workers: Optional[int] = None):
+        # generous: workers mostly *wait* (device readiness, queue results,
+        # file I/O), so oversubscription is the deadlock-safe choice
+        n = host_workers or max(32, 4 * (os.cpu_count() or 1))
+        self.pool = _cf.ThreadPoolExecutor(max_workers=n, thread_name_prefix="repro-host")
+        self._queues: dict[str, WorkQueue] = {}
+        self._lock = threading.Lock()
+
+    def queue(self, name: str) -> WorkQueue:
+        with self._lock:
+            q = self._queues.get(name)
+            if q is None:
+                q = self._queues[name] = WorkQueue(name)
+            return q
+
+    def async_(self, fn: Callable, *args, **kwargs) -> Future:
+        return Future.from_concurrent(self.pool.submit(fn, *args, **kwargs))
+
+    def shutdown(self) -> None:
+        with self._lock:
+            queues, self._queues = list(self._queues.values()), {}
+        for q in queues:
+            q.shutdown()
+        self.pool.shutdown(wait=False)
+
+
+_runtime: Optional[Runtime] = None
+_runtime_lock = threading.Lock()
+
+
+def get_runtime() -> Runtime:
+    global _runtime
+    if _runtime is None:
+        with _runtime_lock:
+            if _runtime is None:
+                _runtime = Runtime()
+                atexit.register(_runtime.shutdown)
+    return _runtime
+
+
+def reset_runtime() -> None:
+    """Tear down and replace the global runtime (tests)."""
+    global _runtime
+    with _runtime_lock:
+        if _runtime is not None:
+            _runtime.shutdown()
+        _runtime = None

@@ -1,0 +1,351 @@
+"""Futurization layer: HPX futures re-derived for JAX (paper §3.1).
+
+One future type spans
+  * host tasks (functions running on the runtime's thread pools),
+  * asynchronously dispatched device values (``jax.Array`` — XLA's async
+    dispatch plays the role of the CUDA stream),
+  * composites built with the combinators below.
+
+API mirrors HPX:
+  ``Future.get()``                <-> ``hpx::future<T>::get()``
+  ``Future.then(fn)``             <-> ``hpx::future<T>::then``
+  ``when_all(fs) / when_any(fs)`` <-> ``hpx::when_all / when_any``
+  ``dataflow(fn, *args)``         <-> ``hpx::dataflow``
+  ``async_(fn, *args)``           <-> ``hpx::async``
+  ``wait_all(fs)``                <-> ``hpx::wait_all`` (Listing 2, l. 38)
+
+Design notes
+------------
+A ``Future`` wraps a ``concurrent.futures.Future`` for its thread-safe
+result/callback machinery, plus an optional *resolver*: a one-shot blocking
+callable producing the value.  Resolvers make device-value futures lazy —
+wrapping a ``jax.Array`` costs one object allocation and **no** thread work
+unless/until a continuation is attached (then the wait is moved to the
+completion pool) or ``.get()`` is called (then the wait happens inline).
+This is what keeps the layer overhead negligible (paper §5: "no additional
+computational overhead").
+"""
+from __future__ import annotations
+
+import concurrent.futures as _cf
+import threading
+from enum import Enum
+from typing import Any, Callable, Generic, Iterable, Sequence, TypeVar
+
+T = TypeVar("T")
+U = TypeVar("U")
+
+__all__ = [
+    "Future",
+    "FutureState",
+    "Promise",
+    "async_",
+    "dataflow",
+    "make_ready_future",
+    "make_exceptional_future",
+    "wait_all",
+    "when_all",
+    "when_any",
+]
+
+
+class FutureState(Enum):
+    PENDING = "pending"
+    READY = "ready"
+    FAILED = "failed"
+
+
+def _default_pool():
+    # Local import: executor imports futures for its return types.
+    from repro.core.executor import get_runtime
+
+    return get_runtime().pool
+
+
+class Future(Generic[T]):
+    """Asynchronous value, composable into an execution DAG."""
+
+    __slots__ = ("_cf", "_resolver", "_lock", "name")
+
+    def __init__(
+        self,
+        inner: "_cf.Future | None" = None,
+        resolver: "Callable[[], T] | None" = None,
+        name: str = "",
+    ):
+        self._cf: _cf.Future = inner if inner is not None else _cf.Future()
+        self._resolver = resolver
+        self._lock = threading.Lock()
+        self.name = name
+
+    # -- constructors ------------------------------------------------------
+
+    @staticmethod
+    def ready(value: T, name: str = "") -> "Future[T]":
+        f: _cf.Future = _cf.Future()
+        f.set_result(value)
+        return Future(f, name=name)
+
+    @staticmethod
+    def failed(exc: BaseException, name: str = "") -> "Future[T]":
+        f: _cf.Future = _cf.Future()
+        f.set_exception(exc)
+        return Future(f, name=name)
+
+    @staticmethod
+    def from_concurrent(f: "_cf.Future", name: str = "") -> "Future[T]":
+        return Future(f, name=name)
+
+    @staticmethod
+    def from_array(x, name: str = "") -> "Future":
+        """Wrap an async-dispatched ``jax.Array`` (or pytree of them).
+
+        The future becomes READY when the device computation producing the
+        value has finished — the CUDA-event analogue, realized through
+        array readiness instead (DESIGN.md §2).
+        """
+        import jax
+
+        def _resolve():
+            return jax.block_until_ready(x)
+
+        return Future(resolver=_resolve, name=name)
+
+    # -- resolver plumbing -------------------------------------------------
+
+    def _take_resolver(self):
+        if self._resolver is None:
+            return None
+        with self._lock:
+            r, self._resolver = self._resolver, None
+        return r
+
+    def _run_resolver_inline(self, r) -> None:
+        try:
+            self._cf.set_result(r())
+        except BaseException as e:  # noqa: BLE001 - futures carry any error
+            self._cf.set_exception(e)
+
+    def _spawn_resolver(self) -> None:
+        """Move a pending resolver onto the completion pool (if any)."""
+        r = self._take_resolver()
+        if r is not None:
+            _default_pool().submit(self._run_resolver_inline, r)
+
+    # -- core API ----------------------------------------------------------
+
+    @property
+    def state(self) -> FutureState:
+        if self._resolver is not None:
+            return FutureState.PENDING
+        if not self._cf.done():
+            return FutureState.PENDING
+        return FutureState.FAILED if self._cf.exception() else FutureState.READY
+
+    def done(self) -> bool:
+        return self._resolver is None and self._cf.done()
+
+    def is_ready(self) -> bool:
+        return self.state is FutureState.READY
+
+    def get(self, timeout: "float | None" = None) -> T:
+        """Block until the value is available and return it (HPX ``get``)."""
+        r = self._take_resolver()
+        if r is not None:
+            self._run_resolver_inline(r)
+        return self._cf.result(timeout)
+
+    def exception(self, timeout: "float | None" = None) -> "BaseException | None":
+        r = self._take_resolver()
+        if r is not None:
+            self._run_resolver_inline(r)
+        return self._cf.exception(timeout)
+
+    def wait(self, timeout: "float | None" = None) -> "Future[T]":
+        try:
+            self.get(timeout)
+        except BaseException:  # noqa: BLE001 - wait() never raises
+            pass
+        return self
+
+    # -- composition --------------------------------------------------------
+
+    def then(
+        self,
+        fn: "Callable[[T], U]",
+        *,
+        executor=None,
+        name: str = "",
+    ) -> "Future[U]":
+        """Continuation: run ``fn(value)`` once this future is READY.
+
+        Failure propagates: if this future failed, ``fn`` is not called and
+        the returned future carries the same exception.
+
+        Launch policy: by default the continuation runs on the runtime host
+        pool — never inline on a device work-queue worker, because a
+        continuation that *blocks* on further queue submissions would then
+        deadlock the queue (HPX avoids this by suspending its user-level
+        threads; OS threads cannot suspend, so we hop).  If the parent is
+        already done, run inline on the caller (cheap fast path).  Pass
+        ``executor="inline"`` to force inline execution, or any object with
+        ``submit`` to choose a pool.
+        """
+        out: Future[U] = Future(name=name or f"{self.name}.then")
+        self._spawn_resolver()
+        already_done = self._cf.done()
+
+        def _fire(parent: _cf.Future) -> None:
+            exc = parent.exception()
+            if exc is not None:
+                out._cf.set_exception(exc)
+                return
+
+            def _run():
+                try:
+                    out._cf.set_result(fn(parent.result()))
+                except BaseException as e:  # noqa: BLE001
+                    out._cf.set_exception(e)
+
+            if executor == "inline" or already_done:
+                _run()
+            elif executor is None:
+                _default_pool().submit(_run)
+            else:
+                executor.submit(_run)
+
+        self._cf.add_done_callback(_fire)
+        return out
+
+    def __repr__(self) -> str:
+        return f"Future({self.name or hex(id(self))}, {self.state.value})"
+
+
+class Promise(Generic[T]):
+    """Manually-resolved future source (``hpx::promise``)."""
+
+    def __init__(self, name: str = ""):
+        self._future: Future[T] = Future(name=name)
+
+    def get_future(self) -> Future[T]:
+        return self._future
+
+    def set_value(self, value: T) -> None:
+        self._future._cf.set_result(value)
+
+    def set_exception(self, exc: BaseException) -> None:
+        self._future._cf.set_exception(exc)
+
+
+def make_ready_future(value: T) -> Future[T]:
+    return Future.ready(value)
+
+
+def make_exceptional_future(exc: BaseException) -> Future[Any]:
+    return Future.failed(exc)
+
+
+def when_all(futures: "Iterable[Future]", name: str = "when_all") -> Future[list]:
+    """Future of the list of values; fails with the first failure."""
+    futs = list(futures)
+    out: Future[list] = Future(name=name)
+    n = len(futs)
+    if n == 0:
+        out._cf.set_result([])
+        return out
+
+    results: list = [None] * n
+    remaining = [n]
+    lock = threading.Lock()
+
+    def _make_cb(i: int):
+        def _cb(parent: _cf.Future) -> None:
+            exc = parent.exception()
+            if exc is not None:
+                # set_exception on an already-done future raises; guard.
+                if not out._cf.done():
+                    try:
+                        out._cf.set_exception(exc)
+                    except _cf.InvalidStateError:
+                        pass
+                return
+            results[i] = parent.result()
+            with lock:
+                remaining[0] -= 1
+                last = remaining[0] == 0
+            if last and not out._cf.done():
+                try:
+                    out._cf.set_result(results)
+                except _cf.InvalidStateError:
+                    pass
+
+        return _cb
+
+    for i, f in enumerate(futs):
+        f._spawn_resolver()
+        f._cf.add_done_callback(_make_cb(i))
+    return out
+
+
+def when_any(futures: "Iterable[Future]", name: str = "when_any") -> Future[tuple]:
+    """Future of ``(index, value)`` of the first future to become READY."""
+    futs = list(futures)
+    if not futs:
+        raise ValueError("when_any of empty set")
+    out: Future[tuple] = Future(name=name)
+
+    def _make_cb(i: int):
+        def _cb(parent: _cf.Future) -> None:
+            if out._cf.done():
+                return
+            try:
+                exc = parent.exception()
+                if exc is not None:
+                    out._cf.set_exception(exc)
+                else:
+                    out._cf.set_result((i, parent.result()))
+            except _cf.InvalidStateError:
+                pass
+
+        return _cb
+
+    for i, f in enumerate(futs):
+        f._spawn_resolver()
+        f._cf.add_done_callback(_make_cb(i))
+    return out
+
+
+def wait_all(futures: "Iterable[Future]") -> None:
+    """Blocking barrier (``hpx::wait_all`` — Listing 2, line 38)."""
+    for f in list(futures):
+        f.wait()
+
+
+def async_(fn: Callable[..., T], *args, executor=None, name: str = "", **kwargs) -> Future[T]:
+    """Run ``fn`` on the runtime host pool (``hpx::async``)."""
+    pool = executor if executor is not None else _default_pool()
+    return Future.from_concurrent(pool.submit(fn, *args, **kwargs), name=name or getattr(fn, "__name__", "async"))
+
+
+def dataflow(fn: Callable[..., T], *args, executor=None, name: str = "", **kwargs) -> Future[T]:
+    """Run ``fn`` when every future among ``args``/``kwargs`` is READY.
+
+    Non-future arguments pass through unchanged (``hpx::dataflow``).  The
+    body runs on the host pool so long chains never recurse on a completing
+    thread.
+    """
+    dep_ixs = [i for i, a in enumerate(args) if isinstance(a, Future)]
+    dep_keys = [k for k, v in kwargs.items() if isinstance(v, Future)]
+    deps = [args[i] for i in dep_ixs] + [kwargs[k] for k in dep_keys]
+
+    def _body(values: list) -> T:
+        a = list(args)
+        kw = dict(kwargs)
+        for slot, v in zip(dep_ixs, values[: len(dep_ixs)]):
+            a[slot] = v
+        for key, v in zip(dep_keys, values[len(dep_ixs):]):
+            kw[key] = v
+        return fn(*a, **kw)
+
+    pool = executor if executor is not None else _default_pool()
+    return when_all(deps).then(_body, executor=pool, name=name or f"dataflow:{getattr(fn, '__name__', 'fn')}")

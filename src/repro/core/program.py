@@ -1,0 +1,218 @@
+"""Program: runtime-compiled device code (paper §4, Fig. 2 ``program``).
+
+The NVRTC analogue on TPU/JAX is the JIT itself: ``build`` runs
+``jax.jit(kernel).lower(specs).compile()`` asynchronously on the device's
+*compile* queue, so compilation overlaps data transfers exactly like
+Listing 2 (copies and ``prog.build`` futures run concurrently, joined by
+``wait_all``).  Compiled executables are cached per (kernel, shapes, grid,
+block).
+
+Launch semantics keep HPXCL's user-visible tuning knobs: ``grid`` and
+``block`` (``Dim3``) are forwarded to kernels that accept them (our Pallas
+kernels map them onto grid/BlockSpec tiling — the TPU equivalent of CUDA
+launch geometry, DESIGN.md §2).
+
+Percolation: ``run`` executes where the program's device is; argument
+buffers living on other devices are first moved there with async copies
+(futures), never blocking the caller.
+"""
+from __future__ import annotations
+
+import importlib.util
+import inspect
+from dataclasses import dataclass
+from typing import Any, Callable, Optional, Sequence
+
+import jax
+
+from repro.core.buffer import Buffer
+from repro.core.futures import Future, dataflow, when_all
+
+__all__ = ["Dim3", "Program"]
+
+
+@dataclass
+class Dim3:
+    """CUDA-style launch geometry, kept user-visible (paper's philosophy)."""
+
+    x: int = 1
+    y: int = 1
+    z: int = 1
+
+    def as_tuple(self) -> "tuple[int, int, int]":
+        return (self.x, self.y, self.z)
+
+
+def _normalize_dim(d) -> "tuple[int, ...] | None":
+    if d is None:
+        return None
+    if isinstance(d, Dim3):
+        return d.as_tuple()
+    if isinstance(d, int):
+        return (d, 1, 1)
+    return tuple(d)
+
+
+class Program:
+    """A named set of kernels compiled on demand for one device."""
+
+    def __init__(self, device, kernels, name: str = "program"):
+        from repro.core import agas
+
+        if callable(kernels) and not isinstance(kernels, dict):
+            kernels = {getattr(kernels, "__name__", "kernel"): kernels}
+        self.device = device
+        self.name = name
+        self._kernels: "dict[str, Callable]" = dict(kernels)
+        self._cache: "dict[tuple, Any]" = {}
+        self._build_futures: "dict[tuple, Future]" = {}
+        self.gid = agas.registry.register(
+            self, agas.Placement(device.key, device.jax_device.process_index), kind="program"
+        )
+
+    # -- construction ---------------------------------------------------------
+
+    @staticmethod
+    def from_file(device, path: str) -> "Program":
+        """Load kernels from a python source file defining ``KERNELS``.
+
+        This is the percolation path for *code*: source is loaded and
+        runtime-compiled at the device that will execute it
+        (``create_program_with_file("kernel.cu")`` analogue).
+        """
+        spec = importlib.util.spec_from_file_location(f"repro_kernel_{abs(hash(path))}", path)
+        mod = importlib.util.module_from_spec(spec)
+        spec.loader.exec_module(mod)  # type: ignore[union-attr]
+        kernels = getattr(mod, "KERNELS", None)
+        if kernels is None:
+            raise ValueError(f"{path} does not define KERNELS = {{name: callable}}")
+        return Program(device, kernels, name=path)
+
+    def kernel_names(self) -> "list[str]":
+        return sorted(self._kernels)
+
+    # -- build (async runtime compilation) -------------------------------------
+
+    def _bind(self, name: str, grid, block) -> Callable:
+        fn = self._kernels[name]
+        params = inspect.signature(fn).parameters
+        kwargs = {}
+        if "grid" in params:
+            kwargs["grid"] = _normalize_dim(grid)
+        if "block" in params:
+            kwargs["block"] = _normalize_dim(block)
+        if kwargs:
+            bound = lambda *args: fn(*args, **kwargs)  # noqa: E731
+            bound.__name__ = name
+            return bound
+        return fn
+
+    def _key(self, name: str, specs, grid, block) -> tuple:
+        sig = tuple((tuple(s.shape), str(s.dtype)) for s in specs)
+        return (name, sig, _normalize_dim(grid), _normalize_dim(block))
+
+    def build(self, name: str, *specs, grid=None, block=None) -> Future:
+        """Compile kernel ``name`` asynchronously (NVRTC analogue).
+
+        With ``specs`` (``jax.ShapeDtypeStruct``/arrays) the executable is
+        fully compiled and cached; without, the kernel is resolved/bound
+        only (shape specialization then happens at first ``run``, still on
+        the compile queue). Returns a future — a dependency for launches.
+        """
+        if name not in self._kernels:
+            return Future.failed(KeyError(f"no kernel '{name}' in {self.name}"))
+        if not specs:
+            return self.device.compile_queue.submit(self._bind, name, grid, block)
+
+        key = self._key(name, specs, grid, block)
+        fut = self._build_futures.get(key)
+        if fut is not None:
+            return fut
+
+        def _compile():
+            compiled = self._cache.get(key)
+            if compiled is None:
+                bound = self._bind(name, grid, block)
+                arg_specs = [
+                    jax.ShapeDtypeStruct(s.shape, s.dtype) if not isinstance(s, jax.ShapeDtypeStruct) else s
+                    for s in specs
+                ]
+                compiled = jax.jit(bound).lower(*arg_specs).compile()
+                self._cache[key] = compiled
+            return compiled
+
+        fut = self.device.compile_queue.submit(_compile)
+        self._build_futures[key] = fut
+        return fut
+
+    # -- launch -----------------------------------------------------------------
+
+    def run(
+        self,
+        args: "Sequence[Buffer | Any]",
+        name: str,
+        grid=None,
+        block=None,
+        out: "Sequence[Buffer] | None" = None,
+        sync: str = "ready",
+    ) -> Future:
+        """Launch kernel ``name`` with buffer/array ``args`` (async).
+
+        ``out``: buffers to receive the kernel's results (CUDA's mutate-
+        in-place adapted to functional JAX) — the future resolves to them.
+        Without ``out`` the future resolves to the raw result arrays.
+        ``sync="ready"`` resolves at device completion (CUDA-event
+        semantics); ``sync="dispatch"`` resolves at submission.
+        """
+        home = self.device
+
+        # Percolation: move foreign buffers to the program's device first.
+        moved: "dict[int, Future]" = {}
+        for i, a in enumerate(args):
+            if isinstance(a, Buffer) and a.device is not home:
+                moved[i] = a.copy_to(home)
+
+        specs = [a.array() if isinstance(a, Buffer) else a for a in args]
+        build_fut = self.build(name, *specs, grid=grid, block=block)
+
+        def _launch(compiled, *resolved_args):
+            arg_list = list(args)
+            for i, b in zip(moved.keys(), resolved_args):
+                arg_list[i] = b
+            vals = [a.array() if isinstance(a, Buffer) else a for a in arg_list]
+            res = compiled(*vals)
+            if out is None:
+                return res
+            res_list = list(res) if isinstance(res, (tuple, list)) else [res]
+            if len(res_list) != len(out):
+                raise ValueError(
+                    f"kernel '{name}' returned {len(res_list)} arrays for {len(out)} out buffers"
+                )
+            for b, v in zip(out, res_list):
+                b._set_array(v)
+            return list(out)
+
+        # Order: (copies, build) -> ops-queue launch. Fast path: when the
+        # executable is already cached and nothing percolates, submit the
+        # launch directly (one hop) — this keeps the layer overhead at the
+        # paper's "negligible" level. Slow path: dataflow joins the futures.
+        if not moved and build_fut.done():
+            launched = home.ops_queue.submit(_launch, build_fut.get())
+        else:
+
+            def _enqueue(compiled, *resolved):
+                return home.ops_queue.submit(_launch, compiled, *resolved).get()
+
+            launched = dataflow(_enqueue, build_fut, *moved.values(), name=f"run:{name}")
+
+        if sync == "dispatch":
+            return launched
+
+        def _ready(res):
+            vals = [b.array() for b in res] if out is not None else res
+            jax.block_until_ready(vals)
+            return res
+
+        from repro.core.executor import get_runtime
+
+        return launched.then(_ready, executor=get_runtime().pool, name=f"done:{name}")

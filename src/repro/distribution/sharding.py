@@ -1,0 +1,196 @@
+"""Logical-axis sharding: MaxText-style rules mapping logical tensor axes
+("batch", "seq", "embed", "heads", "mlp", "experts", ...) to mesh axes.
+
+Model code annotates activations with ``constrain(x, "batch", "seq",
+"embed")``; the distribution layer activates a rule set + mesh via
+``axis_rules``.  Outside any rule context the annotations are no-ops, so
+the same model runs unsharded on one CPU device.
+"""
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from typing import Any, Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "axis_rules",
+    "constrain",
+    "current_mesh",
+    "current_rules",
+    "spec_for",
+    "sharding_for",
+    "tree_sharding",
+    "RULE_SETS",
+]
+
+_state = threading.local()
+
+
+def _get() -> "tuple[Optional[dict], Optional[Mesh]]":
+    return getattr(_state, "rules", None), getattr(_state, "mesh", None)
+
+
+@contextmanager
+def axis_rules(rules: "dict[str, Any]", mesh: "Mesh | None" = None):
+    """Activate logical->mesh rules (and optionally a mesh) for this thread."""
+    old = _get()
+    _state.rules, _state.mesh = rules, mesh
+    try:
+        yield
+    finally:
+        _state.rules, _state.mesh = old
+
+
+def current_rules() -> "Optional[dict]":
+    return _get()[0]
+
+
+def current_mesh() -> "Optional[Mesh]":
+    return _get()[1]
+
+
+def _axis_sizes(mesh: "Mesh | None") -> dict:
+    if mesh is None:
+        return {}
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def spec_for(
+    names: "Sequence[Optional[str]]",
+    rules: "dict | None" = None,
+    shape: "Sequence[int] | None" = None,
+    mesh: "Mesh | None" = None,
+) -> P:
+    """Translate logical axis names to a PartitionSpec under ``rules``.
+
+    A rule value may be a mesh-axis name, a tuple of mesh axes, or None.
+    Unknown logical names map to None (replicated along that dim).
+
+    With ``shape``+``mesh``, rules that do not divide the dimension evenly
+    are dropped (jit boundary shardings must divide — probe finding), as
+    are rules reusing a mesh axis already consumed by an earlier dim.
+    """
+    if rules is None:
+        rules = current_rules() or {}
+    sizes = _axis_sizes(mesh)
+    parts = []
+    used: set = set()
+    for i, n in enumerate(names):
+        r = rules.get(n) if n is not None else None
+        if r is not None:
+            axes = (r,) if isinstance(r, str) else tuple(r)
+            if any(a in used for a in axes):
+                r = None
+            elif shape is not None and sizes:
+                total = 1
+                for a in axes:
+                    total *= sizes.get(a, 1)
+                if shape[i] % total != 0:
+                    r = None
+            if r is not None:
+                used.update(axes)
+        parts.append(r)
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def constrain(x, *names: "Optional[str]"):
+    """Annotate ``x`` with the sharding implied by logical ``names``."""
+    rules, mesh = _get()
+    if rules is None:
+        return x
+    spec = spec_for(names, rules, shape=x.shape, mesh=mesh)
+    if mesh is not None:
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def sharding_for(
+    mesh: Mesh, names: "Sequence[Optional[str]]", rules: dict, shape: "Sequence[int] | None" = None
+) -> NamedSharding:
+    return NamedSharding(mesh, spec_for(names, rules, shape=shape, mesh=mesh))
+
+
+def _is_names(x) -> bool:
+    return isinstance(x, tuple) and all(isinstance(n, (str, type(None))) for n in x)
+
+
+def tree_sharding(mesh: Mesh, logical_tree, rules: dict, shape_tree=None):
+    """Map a pytree of logical-name tuples to NamedShardings.
+
+    ``shape_tree``: matching pytree of ShapeDtypeStructs/arrays enabling
+    divisibility-aware rule resolution (required at jit boundaries).
+    """
+    if shape_tree is None:
+        return jax.tree.map(
+            lambda names: sharding_for(mesh, names, rules), logical_tree, is_leaf=_is_names
+        )
+    flat_names = jax.tree.leaves(logical_tree, is_leaf=_is_names)
+    flat_shapes, tdef = jax.tree.flatten(shape_tree)
+    assert len(flat_names) == len(flat_shapes), (len(flat_names), len(flat_shapes))
+    out = [
+        sharding_for(mesh, n, rules, shape=s.shape) for n, s in zip(flat_names, flat_shapes)
+    ]
+    return tdef.unflatten(out)
+
+
+# ---------------------------------------------------------------------------
+# Rule sets. Mesh axes: ("pod", "data", "model") or ("data", "model").
+# "pod" composes with "data" for batch/FSDP sharding; the cross-pod
+# all-reduce is the only DCI traffic (DESIGN.md §5).
+# ---------------------------------------------------------------------------
+
+def _dp(multi_pod: bool):
+    return ("pod", "data") if multi_pod else ("data",)
+
+
+def make_rules(kind: str, *, multi_pod: bool = False, fsdp: bool = True) -> "dict[str, Any]":
+    """Build the logical->mesh rule set for a shape kind.
+
+    kind="train":  batch over (pod,)data; TP over model for heads/mlp/experts;
+                   FSDP: the non-TP param dim shards over (pod,)data.
+    kind="prefill"/"decode": batch over (pod,)data, TP over model; params
+                   replicated over data (weight-stationary serving) unless
+                   fsdp=True is forced.
+    """
+    dp = _dp(multi_pod)
+    rules: "dict[str, Any]" = {
+        # activations
+        "batch": dp,
+        "seq": None,
+        "embed": None,
+        "heads": "model",
+        "kv_heads": "model",
+        "head_dim": None,
+        "mlp": "model",
+        "experts": "model",
+        "exp_groups": dp,  # grouped MoE dispatch: groups follow the data axis
+        "vocab": "model",
+        "ssm_inner": "model",
+        "ssm_heads": "model",
+        "ssm_state": None,
+        "frames": None,
+        # params (TP dim = model; FSDP dim = data)
+        "p_embed": dp if (fsdp and kind == "train") else None,
+        "p_vocab": "model",
+        "p_heads": "model",
+        "p_kv_heads": "model",
+        "p_mlp": "model",
+        "p_experts": "model",
+        "p_expert_mlp": None,
+        "p_ssm_inner": "model",
+        "p_ssm_heads": "model",
+        "p_none": None,
+        "layers": None,
+    }
+    if kind != "train":
+        # serving: keep params TP-sharded; no FSDP gather in the hot loop
+        rules["p_embed"] = None
+    return rules
+
+
+RULE_SETS = {"train": make_rules, "prefill": make_rules, "decode": make_rules}

@@ -1,0 +1,24 @@
+"""Public flash-attention op in model layout (B, S, H, D)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_bhsd
+from repro.kernels.flash_attention.ref import flash_attention_ref
+
+
+def flash_attention(q, k, v, *, causal: bool = True, bq: int = 128, bk: int = 128,
+                    impl: str = "auto"):
+    """q: (B, Sq, H, D); k/v: (B, Skv, K, D) -> (B, Sq, H, D)."""
+    Sq, Skv = q.shape[1], k.shape[1]
+    if impl == "ref" or (impl == "auto" and (Sq % bq or Skv % bk)):
+        return flash_attention_ref(q, k, v, causal=causal)
+    out = flash_attention_bhsd(
+        q.swapaxes(1, 2), k.swapaxes(1, 2), v.swapaxes(1, 2),
+        causal=causal, bq=bq, bk=bk, interpret=jax.default_backend() != "tpu",
+    )
+    return out.swapaxes(1, 2)
+
+
+KERNELS = {"flash_attention": flash_attention}

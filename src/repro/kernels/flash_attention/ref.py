@@ -1,0 +1,21 @@
+"""Oracle: exact (unfused) GQA attention, fp32 softmax."""
+import math
+
+import jax.numpy as jnp
+import jax
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True):
+    """q: (B, Sq, H, D); k/v: (B, Skv, K, D); H % K == 0 -> (B, Sq, H, D)."""
+    B, Sq, H, D = q.shape
+    Skv, K = k.shape[1], k.shape[2]
+    R = H // K
+    qr = q.reshape(B, Sq, K, R, D)
+    s = jnp.einsum("bqkrd,bskd->bkrqs", qr, k, preferred_element_type=jnp.float32)
+    s = s / math.sqrt(D)
+    if causal:
+        mask = jnp.arange(Skv)[None, :] <= jnp.arange(Sq)[:, None]
+        s = jnp.where(mask[None, None, None], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    o = jnp.einsum("bkrqs,bskd->bqkrd", w, v)
+    return o.reshape(B, Sq, H, D)

@@ -1,0 +1,26 @@
+"""Jit'd op + KERNELS registry (Program.from_file target)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.mandelbrot.kernel import mandelbrot as _pallas_mandel
+from repro.kernels.mandelbrot.ref import mandelbrot_ref
+
+
+def mandelbrot(size_arr, *, block=None, grid=None, impl: str = "auto", max_iter: int = 64):
+    """size_arr: int32[2] = (height, width) — array so it can live in a
+    Buffer; shapes must still be static, so we read concrete values."""
+    import numpy as np
+
+    h, w = (int(x) for x in np.asarray(size_arr))
+    blk = tuple(block[:2]) if isinstance(block, (tuple, list)) else (128, 128)
+    if impl == "ref" or (impl == "auto" and (h % blk[0] or w % blk[1])):
+        return mandelbrot_ref(h, w, max_iter)
+    return _pallas_mandel(
+        height=h, width=w, max_iter=max_iter, block=blk,
+        interpret=jax.default_backend() != "tpu",
+    )
+
+
+KERNELS = {"mandelbrot": mandelbrot, "mandelbrot_ref": lambda s, **k: mandelbrot_ref(int(s[0]), int(s[1]))}

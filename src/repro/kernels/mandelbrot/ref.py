@@ -1,0 +1,26 @@
+"""Oracle for the Mandelbrot escape-iteration kernel (paper Fig. 5)."""
+import jax
+import jax.numpy as jnp
+
+
+def mandelbrot_ref(height: int, width: int, max_iter: int = 64,
+                   x_range=(-2.0, 1.0), y_range=(-1.5, 1.5)):
+    xs = jnp.linspace(x_range[0], x_range[1], width)
+    ys = jnp.linspace(y_range[0], y_range[1], height)
+    cr, ci = jnp.meshgrid(xs, ys)
+
+    def body(_, st):
+        zr, zi, it = st
+        live = zr * zr + zi * zi <= 4.0
+        zr2 = zr * zr - zi * zi + cr
+        zi2 = 2 * zr * zi + ci
+        zr = jnp.where(live, zr2, zr)
+        zi = jnp.where(live, zi2, zi)
+        it = it + live.astype(jnp.int32)
+        return zr, zi, it
+
+    zr = jnp.zeros((height, width), jnp.float32)
+    zi = jnp.zeros((height, width), jnp.float32)
+    it = jnp.zeros((height, width), jnp.int32)
+    _, _, it = jax.lax.fori_loop(0, max_iter, body, (zr, zi, it))
+    return it

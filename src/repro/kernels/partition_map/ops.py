@@ -1,0 +1,17 @@
+"""Jit'd op + KERNELS registry (Program.from_file target)."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.partition_map.kernel import partition_map as _pallas_map
+from repro.kernels.partition_map.ref import partition_map_ref
+
+
+def partition_map(x, *, block=None, grid=None, impl: str = "auto"):
+    blk = (block[0] if isinstance(block, (tuple, list)) else block) or 8192
+    if impl == "ref" or (impl == "auto" and (x.shape[0] % blk or x.shape[0] < blk)):
+        return partition_map_ref(x)
+    return _pallas_map(x, block=blk, interpret=jax.default_backend() != "tpu")
+
+
+KERNELS = {"partition_map": partition_map, "partition_map_ref": partition_map_ref}

@@ -1,0 +1,9 @@
+"""Oracle for the partition benchmark kernel (paper Fig. 4/6):
+k(x) = sqrt(sin^2 x + cos^2 x)  (the paper applies it to the index; we
+apply it to the value — identical compute density, = 1 up to rounding)."""
+import jax.numpy as jnp
+
+
+def partition_map_ref(x):
+    s, c = jnp.sin(x), jnp.cos(x)
+    return jnp.sqrt(s * s + c * c)

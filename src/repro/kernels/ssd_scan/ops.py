@@ -1,0 +1,35 @@
+"""Public SSD op in model layout + KERNELS registry."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan.kernel import ssd_scan
+from repro.kernels.ssd_scan.ref import ssd_ref
+
+
+def ssd(x, dt, A, B, C, D=None, *, chunk: int = 64, impl: str = "auto"):
+    """Model layout: x (Bz, S, H, P); dt (Bz, S, H); A (H,);
+    B/C (Bz, S, H, N) (groups pre-expanded) -> (Bz, S, H, P)."""
+    Bz, S, H, P = x.shape
+    N = B.shape[-1]
+    G = Bz * H
+
+    xg = x.transpose(0, 2, 1, 3).reshape(G, S, P)
+    dtg = dt.transpose(0, 2, 1).reshape(G, S)
+    Ag = jnp.broadcast_to(A[None], (Bz, H)).reshape(G)
+    Bg = B.transpose(0, 2, 1, 3).reshape(G, S, N)
+    Cg = C.transpose(0, 2, 1, 3).reshape(G, S, N)
+
+    if impl == "ref" or (impl == "auto" and S % min(chunk, S)):
+        yg = ssd_ref(xg, dtg, Ag, Bg, Cg)
+    else:
+        yg = ssd_scan(xg, dtg, Ag, Bg, Cg, chunk=min(chunk, S),
+                      interpret=jax.default_backend() != "tpu")
+    y = yg.reshape(Bz, H, S, P).transpose(0, 2, 1, 3)
+    if D is not None:
+        y = y + x * D[None, None, :, None].astype(x.dtype)
+    return y
+
+
+KERNELS = {"ssd": ssd}

@@ -1,0 +1,36 @@
+"""Oracle for the SSD scan kernel: sequential (non-chunked) recurrence.
+
+y_t = C_t . S_t + D x_t,  S_t = exp(dt_t A) S_{t-1} + dt_t B_t x_t^T —
+the exact state-space recurrence the chunked/blocked forms must match.
+"""
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x, dt, A, B, C, D=None):
+    """x: (G, S, P); dt: (G, S); A: (G,); B/C: (G, S, N) -> (G, S, P).
+
+    G = batch*heads flattened; one scalar A per head-group row.
+    """
+    G, S, P = x.shape
+    N = B.shape[-1]
+
+    def row(xg, dtg, ag, bg, cg):
+        def step(state, inp):
+            xt, dtt, bt, ct = inp
+            a = jnp.exp(dtt * ag)
+            state = a * state + dtt * jnp.outer(bt, xt)  # (N, P)
+            y = ct @ state  # (P,)
+            return state, y
+
+        s0 = jnp.zeros((N, P), jnp.float32)
+        _, ys = jax.lax.scan(step, s0, (xg, dtg, bg, cg))
+        return ys
+
+    y = jax.vmap(row)(
+        x.astype(jnp.float32), dt.astype(jnp.float32), A.astype(jnp.float32),
+        B.astype(jnp.float32), C.astype(jnp.float32),
+    )
+    if D is not None:
+        y = y + x.astype(jnp.float32) * D[:, None, None]
+    return y.astype(x.dtype)

@@ -1,0 +1,45 @@
+"""Pallas TPU kernel: PRK 3-point stencil (paper Fig. 3 workload).
+
+Halo exchange via triple-BlockSpec: the same input array is bound three
+times with index maps (i-1, i, i+1); each grid step reads its own block
+plus one element of each neighbour block from VMEM.  Block size should be
+a multiple of 1024 (8x128 f32 tiles) on real TPU; interpret mode validates
+semantics on CPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _stencil_kernel(prev_ref, cur_ref, nxt_ref, o_ref):
+    i = pl.program_id(0)
+    n = pl.num_programs(0)
+    cur = cur_ref[...]
+    left_halo = jnp.where(i == 0, jnp.zeros_like(prev_ref[-1]), prev_ref[-1])
+    right_halo = jnp.where(i == n - 1, jnp.zeros_like(nxt_ref[0]), nxt_ref[0])
+    shifted_l = jnp.concatenate([left_halo[None], cur[:-1]])
+    shifted_r = jnp.concatenate([cur[1:], right_halo[None]])
+    o_ref[...] = 0.5 * shifted_l + cur + 0.5 * shifted_r
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def stencil(x, *, block: int = 1024, interpret: bool = True):
+    """x: (N,) with N % block == 0."""
+    n = x.shape[0]
+    assert n % block == 0, (n, block)
+    grid = (n // block,)
+    bs = lambda off: pl.BlockSpec(  # noqa: E731
+        (block,), lambda i: (jnp.clip(i + off, 0, grid[0] - 1),)
+    )
+    return pl.pallas_call(
+        _stencil_kernel,
+        grid=grid,
+        in_specs=[bs(-1), bs(0), bs(+1)],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=interpret,
+    )(x, x, x)

@@ -1,0 +1,9 @@
+"""Pure-jnp oracle for the PRK 3-point stencil (paper Fig. 3):
+s(x_i) = 0.5*x_{i-1} + x_i + 0.5*x_{i+1}, zero boundary."""
+import jax.numpy as jnp
+
+
+def stencil_ref(x):
+    left = jnp.concatenate([jnp.zeros_like(x[:1]), x[:-1]])
+    right = jnp.concatenate([x[1:], jnp.zeros_like(x[:1])])
+    return 0.5 * left + x + 0.5 * right

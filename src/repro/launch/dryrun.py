@@ -1,0 +1,283 @@
+"""Multi-pod dry-run driver (deliverable e).
+
+Lowers + compiles every (architecture x input-shape) cell against the
+production mesh — 16x16 single-pod and 2x16x16 multi-pod — using
+ShapeDtypeStruct stand-ins (no allocation), then records
+``memory_analysis()`` / ``cost_analysis()`` / loop-aware HLO roofline
+terms to ``results/dryrun/*.json``.
+
+Usage:
+    python -m repro.launch.dryrun --all                # single-pod, all cells
+    python -m repro.launch.dryrun --all --multi-pod
+    python -m repro.launch.dryrun --cell deepseek-67b:train_4k
+"""
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", "")
+)
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.analysis import hlo_analysis  # noqa: E402
+from repro.configs import cells, get_config, get_shape  # noqa: E402
+from repro.distribution.recipes import plan_for  # noqa: E402
+from repro.distribution.sharding import axis_rules, spec_for, tree_sharding  # noqa: E402
+from repro.models import batch_logical_specs, get_model, input_specs  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.serving.serve_step import make_prefill, make_serve_step  # noqa: E402
+from repro.training.optimizer import OptConfig  # noqa: E402
+from repro.training.train_step import make_init, make_train_step  # noqa: E402
+
+RESULTS_DIR = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+
+def _mem_record(compiled) -> dict:
+    try:
+        ma = compiled.memory_analysis()
+        return {
+            "argument_bytes": int(ma.argument_size_in_bytes),
+            "output_bytes": int(ma.output_size_in_bytes),
+            "temp_bytes": int(ma.temp_size_in_bytes),
+            "alias_bytes": int(ma.alias_size_in_bytes),
+            "code_bytes": int(ma.generated_code_size_in_bytes),
+        }
+    except Exception as e:  # noqa: BLE001
+        return {"error": repr(e)}
+
+
+def _cost_record(compiled) -> dict:
+    try:
+        ca = compiled.cost_analysis()
+        ca = ca if isinstance(ca, dict) else ca[0]
+        return {
+            "flops": float(ca.get("flops", -1)),
+            "bytes_accessed": float(ca.get("bytes accessed", -1)),
+        }
+    except Exception as e:  # noqa: BLE001
+        return {"error": repr(e)}
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False, mesh=None, plan=None):
+    """Lower + compile one cell; returns the result record."""
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    if mesh is None:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+    plan = plan if plan is not None else plan_for(cfg, shape, multi_pod=multi_pod)
+    if plan.moe_groups is not None and cfg.moe is not None:
+        import dataclasses
+
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, dispatch_groups=plan.moe_groups)
+        )
+    m = get_model(cfg)
+    rules = plan.rules
+    kind = shape.kind
+
+    t0 = time.time()
+    batch_specs = input_specs(cfg, shape)
+    blog = batch_logical_specs(cfg, shape)
+    batch_sh = {
+        k: NamedSharding(mesh, spec_for(blog[k], rules, shape=v.shape, mesh=mesh))
+        for k, v in batch_specs.items()
+    }
+    pspecs = m.param_specs(cfg)
+    repl = NamedSharding(mesh, P())
+
+    if kind == "train":
+        opt_cfg = OptConfig()
+        init = make_init(cfg, opt_cfg, dtype=jnp.float32)
+        params_s, opt_s = jax.eval_shape(init, jax.random.key(0))
+        param_sh = tree_sharding(mesh, pspecs, rules, params_s)
+        opt_sh = {
+            "m": tree_sharding(mesh, pspecs, rules, opt_s["m"]),
+            "v": tree_sharding(mesh, pspecs, rules, opt_s["v"]),
+            "step": repl,
+        }
+        step = make_train_step(cfg, shape, opt_cfg, plan)
+        with axis_rules(rules, mesh):
+            lowered = jax.jit(
+                step,
+                in_shardings=(param_sh, opt_sh, batch_sh),
+                out_shardings=(param_sh, opt_sh, None),
+                donate_argnums=(0, 1),
+            ).lower(params_s, opt_s, batch_specs)
+        fn_name = "train_step"
+    elif kind == "prefill":
+        params_s = jax.eval_shape(lambda k: m.init(cfg, k, jnp.bfloat16), jax.random.key(0))
+        param_sh = tree_sharding(mesh, pspecs, rules, params_s)
+        prefill = make_prefill(cfg, plan)
+        with axis_rules(rules, mesh):
+            lowered = jax.jit(
+                prefill, in_shardings=(param_sh, batch_sh), out_shardings=None
+            ).lower(params_s, batch_specs)
+        fn_name = "prefill"
+    else:  # decode
+        params_s = jax.eval_shape(lambda k: m.init(cfg, k, jnp.bfloat16), jax.random.key(0))
+        param_sh = tree_sharding(mesh, pspecs, rules, params_s)
+        cache_s = jax.eval_shape(
+            lambda: m.init_cache(cfg, shape.global_batch, shape.seq_len, jnp.bfloat16)
+        )
+        cache_sh = tree_sharding(mesh, m.cache_specs(cfg), rules, cache_s)
+        tok_s = batch_specs["tokens"]
+        pos_s = jax.ShapeDtypeStruct((), jnp.int32)
+        serve = make_serve_step(cfg, plan)
+        with axis_rules(rules, mesh):
+            lowered = jax.jit(
+                serve,
+                in_shardings=(param_sh, cache_sh, batch_sh["tokens"], repl),
+                out_shardings=(None, cache_sh),
+                donate_argnums=(1,),
+            ).lower(params_s, cache_s, tok_s, pos_s)
+        fn_name = "serve_step"
+
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    t0 = time.time()
+    hlo_text = compiled.as_text()
+    hlo = hlo_analysis.analyze(hlo_text)
+    t_analyze = time.time() - t0
+
+    # store compressed HLO so analyses can be re-run without recompiling
+    try:
+        import zstandard
+
+        hlo_dir = RESULTS_DIR.parent / "hlo"
+        hlo_dir.mkdir(parents=True, exist_ok=True)
+        tag = "multipod" if mesh.devices.size > 256 else "singlepod"
+        (hlo_dir / f"{arch}__{shape_name}__{tag}.hlo.zst").write_bytes(
+            zstandard.ZstdCompressor(level=3).compress(hlo_text.encode())
+        )
+    except Exception:  # noqa: BLE001 - storage is best-effort
+        pass
+
+    n_dev = mesh.devices.size
+    record = {
+        "arch": arch,
+        "shape": shape_name,
+        "kind": kind,
+        "fn": fn_name,
+        "mesh": dict(zip(mesh.axis_names, mesh.devices.shape)),
+        "devices": int(n_dev),
+        "plan": {
+            "remat": plan.remat,
+            "q_block": plan.q_block,
+            "num_microbatches": plan.num_microbatches,
+        },
+        "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+        "memory": _mem_record(compiled),
+        "cost_analysis": _cost_record(compiled),
+        "hlo": hlo,
+        "timing_s": {"lower": t_lower, "compile": t_compile, "analyze": t_analyze},
+    }
+    return record
+
+
+def cell_path(arch: str, shape_name: str, multi_pod: bool) -> Path:
+    tag = "multipod" if multi_pod else "singlepod"
+    return RESULTS_DIR / f"{arch}__{shape_name}__{tag}.json"
+
+
+def run_cell(arch, shape_name, multi_pod, mesh=None, force=False) -> dict:
+    path = cell_path(arch, shape_name, multi_pod)
+    if path.exists() and not force:
+        rec = json.loads(path.read_text())
+        if "error" not in rec:
+            print(f"[cached] {arch}:{shape_name} ({'multi' if multi_pod else 'single'})")
+            return rec
+    print(f"[lower ] {arch}:{shape_name} ({'multi' if multi_pod else 'single'}) ...", flush=True)
+    try:
+        rec = lower_cell(arch, shape_name, multi_pod=multi_pod, mesh=mesh)
+        mem = rec["memory"]
+        tot = (mem.get("argument_bytes", 0) + mem.get("temp_bytes", 0)) / 1e9
+        print(
+            f"[ok    ] {arch}:{shape_name} compile={rec['timing_s']['compile']:.1f}s "
+            f"mem/dev={tot:.2f}GB colls={sum(rec['hlo']['collective_counts'].values())}",
+            flush=True,
+        )
+    except Exception:  # noqa: BLE001
+        rec = {
+            "arch": arch,
+            "shape": shape_name,
+            "multi_pod": multi_pod,
+            "error": traceback.format_exc(limit=20),
+        }
+        print(f"[FAIL  ] {arch}:{shape_name}\n{rec['error']}", flush=True)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps(rec, indent=1))
+    return rec
+
+
+def reanalyze_all() -> int:
+    """Recompute rec['hlo'] from stored HLO texts (no recompilation)."""
+    import zstandard
+
+    hlo_dir = RESULTS_DIR.parent / "hlo"
+    n = 0
+    for z in sorted(hlo_dir.glob("*.hlo.zst")):
+        stem = z.name[: -len(".hlo.zst")]
+        rec_path = RESULTS_DIR / f"{stem}.json"
+        if not rec_path.exists():
+            continue
+        rec = json.loads(rec_path.read_text())
+        text = zstandard.ZstdDecompressor().decompress(z.read_bytes()).decode()
+        rec["hlo"] = hlo_analysis.analyze(text)
+        rec_path.write_text(json.dumps(rec, indent=1))
+        n += 1
+        print(f"[reanalyzed] {stem}")
+    return n
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--cell", action="append", default=[], help="arch:shape")
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--reanalyze", action="store_true", help="recompute hlo terms from stored texts")
+    args = ap.parse_args()
+
+    if args.reanalyze:
+        n = reanalyze_all()
+        print(f"reanalyzed {n} records")
+        return
+
+    todo = []
+    if args.all:
+        todo = cells()
+    elif args.arch:
+        todo = [(a, s) for a, s in cells() if a == args.arch]
+    for c in args.cell:
+        a, s = c.split(":")
+        todo.append((a, s))
+    if not todo:
+        ap.error("nothing to do; pass --all or --cell arch:shape")
+
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    failures = 0
+    for mp in meshes:
+        mesh = make_production_mesh(multi_pod=mp)
+        for arch, shape_name in todo:
+            rec = run_cell(arch, shape_name, mp, mesh=mesh, force=args.force)
+            failures += 1 if "error" in rec else 0
+    print(f"done: {len(todo) * len(meshes)} cells, {failures} failures")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

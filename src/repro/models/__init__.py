@@ -1,0 +1,3 @@
+from repro.models.model import batch_logical_specs, get_model, input_specs, make_batch
+
+__all__ = ["batch_logical_specs", "get_model", "input_specs", "make_batch"]

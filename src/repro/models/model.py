@@ -1,0 +1,87 @@
+"""Uniform model API over all architecture families.
+
+    m = get_model(cfg)           # module with a fixed surface
+    params = m.init(cfg, key)
+    logits, aux = m.forward(cfg, params, batch)
+    loss = m.loss_fn(cfg, params, batch)
+    cache = m.init_cache(cfg, B, S)
+    logits, cache = m.decode_step(cfg, params, cache, tok, pos)
+    m.param_specs(cfg) / m.cache_specs(cfg)   # logical sharding names
+
+``input_specs``/``make_batch`` build ShapeDtypeStruct stand-ins / random
+host batches for every (arch x shape) cell, including the modality STUBS
+(whisper frames, qwen2-vl patch embeddings + M-RoPE positions).
+"""
+from __future__ import annotations
+
+from types import ModuleType
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import encdec, hybrid, ssm_lm, transformer
+
+__all__ = ["get_model", "input_specs", "make_batch", "batch_logical_specs"]
+
+
+def get_model(cfg: ArchConfig) -> ModuleType:
+    if cfg.family in ("dense", "moe", "vlm"):
+        return transformer
+    if cfg.family == "ssm":
+        return ssm_lm
+    if cfg.family == "hybrid":
+        return hybrid
+    if cfg.family == "encdec":
+        return encdec
+    raise ValueError(cfg.family)
+
+
+def _batch_shapes(cfg: ArchConfig, shape: ShapeConfig, *, dtype=jnp.bfloat16):
+    """dict name -> (shape, dtype) for the *batch* inputs of a cell."""
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "decode":
+        d: dict = {"tokens": ((B, 1), jnp.int32)}
+    else:
+        d = {"tokens": ((B, S), jnp.int32)}
+        if shape.kind == "train":
+            d["labels"] = ((B, S), jnp.int32)
+    if cfg.family == "encdec":
+        d["frames"] = ((B, cfg.encdec.encoder_seq, cfg.d_model), dtype)
+    if cfg.family == "vlm" and shape.kind != "decode":
+        d["patch_embeds"] = ((B, cfg.num_patches, cfg.d_model), dtype)
+        d["positions"] = ((3, B, S), jnp.int32)
+    return d
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> "dict[str, jax.ShapeDtypeStruct]":
+    """ShapeDtypeStruct stand-ins for every model input (no allocation)."""
+    return {
+        k: jax.ShapeDtypeStruct(s, dt) for k, (s, dt) in _batch_shapes(cfg, shape).items()
+    }
+
+
+def batch_logical_specs(cfg: ArchConfig, shape: ShapeConfig) -> "dict[str, tuple]":
+    """Logical axis names for each batch input (for in_shardings)."""
+    names = {
+        "tokens": ("batch", "seq"),
+        "labels": ("batch", "seq"),
+        "frames": ("batch", None, "embed"),
+        "patch_embeds": ("batch", None, "embed"),
+        "positions": (None, "batch", "seq"),
+    }
+    return {k: names[k] for k in _batch_shapes(cfg, shape)}
+
+
+def make_batch(cfg: ArchConfig, shape: ShapeConfig, seed: int = 0) -> dict:
+    """Small random host batch (smoke tests / examples)."""
+    rng = np.random.default_rng(seed)
+    out = {}
+    for k, (s, dt) in _batch_shapes(cfg, shape).items():
+        if dt == jnp.int32:
+            hi = cfg.vocab_size if "token" in k or "label" in k else min(shape.seq_len, 4)
+            out[k] = jnp.asarray(rng.integers(0, hi, size=s), jnp.int32)
+        else:
+            out[k] = jnp.asarray(rng.normal(0, 0.02, size=s), dt)
+    return out

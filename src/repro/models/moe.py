@@ -1,0 +1,148 @@
+"""Mixture-of-Experts layer (phi3.5-moe: EP; qwen2-moe: TP-MoE + shared).
+
+One capacity-based dispatch implementation serves both parallelism
+strategies — they differ only in *sharding rules* (DESIGN.md §4):
+
+  EP  (phi3.5, 16 experts % 16 == 0): the expert dim of the dispatch buffer
+      and expert weights shards over ``model``; GSPMD turns the
+      scatter/gather into token exchange across expert shards (the
+      all-to-all analogue; §Perf iterates on the collective choice).
+  TP  (qwen2-moe, 60 experts): expert weights shard on the d_ff dim; the
+      dispatch buffer is expert-replicated and tokens never move.
+
+Dispatch: top-k routing -> position-in-expert via one-hot cumsum ->
+scatter into an (E, C, D) buffer (capacity C, GShard-style dropping) ->
+batched expert GEMMs -> gather + weighted combine.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distribution.sharding import constrain
+from repro.models.layers import F32, ninit
+
+CAPACITY_FACTOR = 1.25
+
+
+def init_moe(cfg, key, dtype):
+    e = cfg.moe
+    d, f = cfg.d_model, e.d_ff_expert
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": ninit(ks[0], (d, e.num_experts), scale=0.02, dtype=jnp.float32),
+        "wi_gate": ninit(ks[1], (e.num_experts, d, f), dtype=dtype),
+        "wi_up": ninit(ks[2], (e.num_experts, d, f), dtype=dtype),
+        "wo": ninit(ks[3], (e.num_experts, f, d), dtype=dtype),
+    }
+    if e.num_shared_experts:
+        fs = e.num_shared_experts * f
+        kss = jax.random.split(ks[4], 4)
+        p["shared"] = {
+            "wi_gate": ninit(kss[0], (d, fs), dtype=dtype),
+            "wi_up": ninit(kss[1], (d, fs), dtype=dtype),
+            "wo": ninit(kss[2], (fs, d), dtype=dtype),
+            "gate": ninit(kss[3], (d, 1), scale=0.02, dtype=dtype),
+        }
+    return p
+
+
+def moe_specs(cfg):
+    s = {
+        "router": ("p_embed", "p_experts"),
+        "wi_gate": ("p_experts", "p_embed", "p_expert_mlp"),
+        "wi_up": ("p_experts", "p_embed", "p_expert_mlp"),
+        "wo": ("p_experts", "p_expert_mlp", "p_embed"),
+    }
+    if cfg.moe.num_shared_experts:
+        s["shared"] = {
+            "wi_gate": ("p_embed", "p_mlp"),
+            "wi_up": ("p_embed", "p_mlp"),
+            "wo": ("p_mlp", "p_embed"),
+            "gate": ("p_embed", "p_none"),
+        }
+    return s
+
+
+def route(x2d, wr, top_k: int, renormalize: bool):
+    """x2d: (T, D) -> (weights (T,k) fp32, idx (T,k) int32, aux_loss)."""
+    logits = jnp.einsum("td,de->te", x2d.astype(F32), wr.astype(F32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    weights, idx = jax.lax.top_k(probs, top_k)
+    if renormalize:
+        weights = weights / (jnp.sum(weights, axis=-1, keepdims=True) + 1e-9)
+    # Switch-style load-balancing aux loss: E * sum_e(frac_tokens_e * mean_prob_e)
+    E = wr.shape[-1]
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(jax.nn.one_hot(idx[:, 0], E, dtype=F32), axis=0)
+    aux = E * jnp.sum(me * ce)
+    return weights, idx, aux
+
+
+def moe_block(cfg, p, x):
+    """x: (B, S, D) -> (y, aux_loss). Capacity-based top-k MoE.
+
+    Grouped dispatch (``cfg.moe.dispatch_groups`` = G): routing is global,
+    but the scatter/gather stays within token groups whose dim shards over
+    the data axis, so dispatch never moves tokens across data shards —
+    only the expert GEMM communicates (EP) or nothing does (TP).  G=1
+    recovers the single global dispatch buffer (baseline).
+    """
+    e = cfg.moe
+    B, S, D = x.shape
+    T = B * S
+    G = max(1, min(e.dispatch_groups, T))
+    while T % G:
+        G -= 1
+    Tg = T // G
+    x2d = x.reshape(T, D)
+
+    weights, idx, aux = route(x2d, p["router"], e.top_k, e.renormalize)
+
+    # ---- dispatch plan: position of each (token, choice) inside its
+    # (group, expert) capacity bucket
+    ef = idx.reshape(G, Tg * e.top_k)  # expert id per slot-request
+    onehot = jax.nn.one_hot(ef, e.num_experts, dtype=jnp.int32)  # (G, Tg*k, E)
+    pos_all = jnp.cumsum(onehot, axis=1) - onehot
+    pos = jnp.sum(pos_all * onehot, axis=-1)  # (G, Tg*k)
+    cap = max(int(CAPACITY_FACTOR * e.top_k * Tg / e.num_experts), e.top_k)
+    keep = pos < cap
+    slot = jnp.where(keep, ef * cap + pos, 0)  # dropped -> slot 0, masked below
+
+    # ---- scatter tokens into the (G, E*C, D) dispatch buffer (per group)
+    xg = constrain(x2d.reshape(G, Tg, D), "exp_groups", None, "embed")
+    xrep = jnp.repeat(xg, e.top_k, axis=1)  # (G, Tg*k, D)
+    contrib = jnp.where(keep[..., None], xrep, 0).astype(x.dtype)
+    buf = jnp.zeros((G, e.num_experts * cap, D), x.dtype)
+    buf = jax.vmap(lambda b, s, c: b.at[s].add(c))(buf, slot, contrib)
+    xe = buf.reshape(G, e.num_experts, cap, D)
+    xe = constrain(xe, "exp_groups", "experts", None, "embed")
+
+    # ---- expert GEMMs (batched over group x expert)
+    g = jnp.einsum("gecd,edf->gecf", xe, p["wi_gate"], preferred_element_type=x.dtype)
+    u = jnp.einsum("gecd,edf->gecf", xe, p["wi_up"], preferred_element_type=x.dtype)
+    g = constrain(g, "exp_groups", "experts", None, "expert_mlp")
+    u = constrain(u, "exp_groups", "experts", None, "expert_mlp")
+    h = jax.nn.silu(g) * u
+    # row-parallel under TP-MoE: bf16 partial sums -> half-width all-reduce
+    ye = jnp.einsum("gecf,efd->gecd", h, p["wo"], preferred_element_type=x.dtype)
+    ye = constrain(ye, "exp_groups", "experts", None, "embed")
+
+    # ---- gather back + weighted combine over the k choices
+    yflat = ye.reshape(G, e.num_experts * cap, D)
+    y_tk = jax.vmap(lambda yg, s: yg[s])(yflat, slot)  # (G, Tg*k, D)
+    y_tk = jnp.where(keep[..., None], y_tk, 0)
+    w_tk = weights.reshape(G, Tg * e.top_k, 1).astype(x.dtype)
+    y = jnp.sum((y_tk * w_tk).reshape(G, Tg, e.top_k, D), axis=2).reshape(T, D)
+
+    # ---- always-on shared expert (qwen2-moe), sigmoid-gated
+    if e.num_shared_experts:
+        sp = p["shared"]
+        sg = jnp.einsum("td,df->tf", x2d, sp["wi_gate"], preferred_element_type=x.dtype)
+        su = jnp.einsum("td,df->tf", x2d, sp["wi_up"], preferred_element_type=x.dtype)
+        sh = jax.nn.silu(sg) * su
+        sy = jnp.einsum("tf,fd->td", sh, sp["wo"], preferred_element_type=x.dtype)
+        gate = jax.nn.sigmoid(jnp.einsum("td,dg->tg", x2d.astype(F32), sp["gate"].astype(F32)))
+        y = y + sy * gate.astype(x.dtype)
+
+    return constrain(y.reshape(B, S, D), "batch", "seq", "embed"), aux

@@ -1,0 +1,227 @@
+"""Mamba-2 SSD (state-space duality) layer [arXiv:2405.21060].
+
+Chunked SSD forward (paper §6): within-chunk "attention-like" diagonal
+blocks + inter-chunk state recurrence via ``lax.scan``.  O(S·L) time,
+O(S) memory for chunk length L.  The Pallas kernel
+(``repro.kernels.ssd_scan``) is the TPU-target hot path; this module is
+the XLA-lowerable reference used by the dry-run and smoke tests.
+
+Param layout note: the reference fuses z/xBC/dt into one in_proj matrix;
+we keep separate projections (identical math) so each shards cleanly
+(DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.distribution.sharding import constrain
+from repro.models.layers import F32, ninit, rmsnorm
+
+
+def _dims(cfg):
+    s = cfg.ssm
+    di = s.d_inner(cfg.d_model)
+    H = s.n_heads(cfg.d_model)
+    return s, di, H, s.head_dim, s.n_groups, s.d_state
+
+
+def init_ssm(cfg, key, dtype):
+    s, di, H, P, G, N = _dims(cfg)
+    conv_dim = di + 2 * G * N
+    ks = jax.random.split(key, 6)
+    # dt bias init so softplus(dt_bias) spans [1e-3, 1e-1] (mamba2 default)
+    u = jax.random.uniform(ks[4], (H,), minval=math.log(1e-3), maxval=math.log(1e-1))
+    dt_init = jnp.log(jnp.expm1(jnp.exp(u)))  # inverse softplus
+    return {
+        "w_z": ninit(ks[0], (cfg.d_model, di), dtype=dtype),
+        "w_xbc": ninit(ks[1], (cfg.d_model, conv_dim), dtype=dtype),
+        "w_dt": ninit(ks[2], (cfg.d_model, H), dtype=dtype),
+        "conv_w": ninit(ks[3], (s.d_conv, conv_dim), scale=1.0 / math.sqrt(s.d_conv), dtype=dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.arange(1, H + 1, dtype=jnp.float32)),  # A in [-1, -H]
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": dt_init.astype(jnp.float32),
+        "norm_scale": jnp.ones((di,), dtype),
+        "w_out": ninit(ks[5], (di, cfg.d_model), dtype=dtype),
+    }
+
+
+def ssm_specs(cfg):
+    return {
+        "w_z": ("p_embed", "p_ssm_inner"),
+        "w_xbc": ("p_embed", "p_ssm_inner"),
+        "w_dt": ("p_embed", "p_ssm_heads"),
+        "conv_w": ("p_none", "p_ssm_inner"),
+        "conv_b": ("p_ssm_inner",),
+        "A_log": ("p_ssm_heads",),
+        "D": ("p_ssm_heads",),
+        "dt_bias": ("p_ssm_heads",),
+        "norm_scale": ("p_ssm_inner",),
+        "w_out": ("p_ssm_inner", "p_embed"),
+    }
+
+
+def _causal_depthwise_conv(x, w, b):
+    """x: (B, S, C); w: (W, C) depthwise causal conv; returns (B, S, C)."""
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        xp,
+        w[:, None, :],  # (W, 1, C) HIO for depthwise
+        window_strides=(1,),
+        padding="VALID",
+        dimension_numbers=("NHC", "HIO", "NHC"),
+        feature_group_count=x.shape[-1],
+    )
+    return out + b
+
+
+def _expand_groups(t, H):
+    """(B, L, G, N) -> (B, L, H, N) by repeating groups over heads."""
+    G = t.shape[2]
+    R = H // G
+    return jnp.repeat(t, R, axis=2) if R > 1 else t
+
+
+def ssd_chunked(xh, dt, A, Bg, Cg, chunk: int, initial_state=None):
+    """Chunked SSD scan.
+
+    xh: (B, S, H, P) inputs; dt: (B, S, H) (post-softplus);
+    A: (H,) negative; Bg/Cg: (B, S, G, N).
+    Returns (y (B, S, H, P), final_state (B, H, N, P)).
+    """
+    Bsz, S, H, P = xh.shape
+    N = Bg.shape[-1]
+    L = min(chunk, S)
+    pad = (-S) % L
+    if pad:  # zero-pad tail: dt=0 -> decay 1, B=C=0 -> state/output inert
+        z2 = ((0, 0), (0, pad), (0, 0), (0, 0))
+        xh = jnp.pad(xh, z2)
+        Bg = jnp.pad(Bg, z2)
+        Cg = jnp.pad(Cg, z2)
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+    Sp = S + pad
+    nc = Sp // L
+
+    Bh = _expand_groups(Bg, H).astype(F32)
+    Ch = _expand_groups(Cg, H).astype(F32)
+    xf = xh.astype(F32)
+    dtf = dt.astype(F32)
+
+    def resh(t):
+        return t.reshape((Bsz, nc, L) + t.shape[2:]).swapaxes(0, 1)  # (nc, B, L, ...)
+
+    xs = (resh(xf), resh(dtf), resh(Bh), resh(Ch))
+
+    if initial_state is None:
+        initial_state = jnp.zeros((Bsz, H, N, P), F32)
+
+    mask = jnp.tril(jnp.ones((L, L), bool))
+
+    def step(state, xs_c):
+        xc, dtc, Bc, Cc = xs_c  # (B, L, H, P), (B, L, H), (B, L, H, N) x2
+        a = dtc * A  # (B, L, H)
+        cum = jnp.cumsum(a, axis=1)
+        # intra-chunk: att[b,h,i,j] = (C_i . B_j) exp(cum_i - cum_j) dt_j, j<=i
+        scores = jnp.einsum("bihn,bjhn->bhij", Cc, Bc)
+        decay = jnp.exp(cum[:, :, None, :] - cum[:, None, :, :])  # (B, i, j, H)
+        att = scores * decay.transpose(0, 3, 1, 2) * dtc[:, None, :, :].transpose(0, 3, 1, 2)
+        att = jnp.where(mask[None, None], att, 0.0)
+        y_intra = jnp.einsum("bhij,bjhp->bihp", att, xc)
+        # inter-chunk: contribution of the incoming state
+        y_inter = jnp.einsum("bihn,bhnp->bihp", Cc * jnp.exp(cum)[..., None], state)
+        # chunk state: S_c = sum_j exp(cum_L - cum_j) dt_j B_j x_j^T
+        w = jnp.exp(cum[:, -1:, :] - cum) * dtc  # (B, L, H)
+        S_c = jnp.einsum("bjhn,bjhp->bhnp", Bc * w[..., None], xc)
+        new_state = jnp.exp(cum[:, -1])[:, :, None, None] * state + S_c
+        return new_state, y_intra + y_inter
+
+    final_state, ys = jax.lax.scan(step, initial_state, xs)
+    y = ys.swapaxes(0, 1).reshape(Bsz, Sp, H, P)[:, :S]
+    return y, final_state
+
+
+def ssm_block(cfg, p, x, *, return_state: bool = False):
+    """Full Mamba-2 block: proj -> conv -> SSD -> gated norm -> out proj.
+
+    x: (B, S, D) -> (B, S, D) [, final ssm state].
+    """
+    s, di, H, P, G, N = _dims(cfg)
+    B_, S, D = x.shape
+
+    z = jnp.einsum("bsd,de->bse", x, p["w_z"], preferred_element_type=x.dtype)
+    xbc = jnp.einsum("bsd,de->bse", x, p["w_xbc"], preferred_element_type=x.dtype)
+    dt_raw = jnp.einsum("bsd,dh->bsh", x, p["w_dt"], preferred_element_type=F32)
+    z = constrain(z, "batch", "seq", "ssm_inner")
+    xbc = constrain(xbc, "batch", "seq", "ssm_inner")
+
+    xbc = jax.nn.silu(_causal_depthwise_conv(xbc, p["conv_w"], p["conv_b"]))
+    xs = xbc[..., :di].reshape(B_, S, H, P)
+    Bg = xbc[..., di : di + G * N].reshape(B_, S, G, N)
+    Cg = xbc[..., di + G * N :].reshape(B_, S, G, N)
+
+    dt = jax.nn.softplus(dt_raw + p["dt_bias"])  # (B, S, H) fp32
+    A = -jnp.exp(p["A_log"])  # (H,)
+
+    y, state = ssd_chunked(xs, dt, A, Bg, Cg, cfg.ssm.chunk)
+    y = y + xs.astype(F32) * p["D"][:, None]
+    y = y.reshape(B_, S, di).astype(x.dtype)
+
+    # gated RMSNorm (mamba2): norm(y * silu(z)) * scale
+    y = rmsnorm(y * jax.nn.silu(z), p["norm_scale"], cfg.norm_eps)
+    # row-parallel: bf16 partial sums -> half-width TP all-reduce
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"], preferred_element_type=x.dtype)
+    out = constrain(out, "batch", "seq", "embed")
+    if return_state:
+        return out, state
+    return out
+
+
+# ---------------------------------------------------------------------------
+# decode path: O(1) state update per token
+# ---------------------------------------------------------------------------
+
+def init_ssm_cache(cfg, batch: int, dtype=jnp.float32):
+    s, di, H, P, G, N = _dims(cfg)
+    conv_dim = di + 2 * G * N
+    return {
+        "state": jnp.zeros((batch, H, N, P), F32),
+        "conv": jnp.zeros((batch, s.d_conv - 1, conv_dim), dtype),
+    }
+
+
+def ssm_decode_step(cfg, p, x, cache):
+    """x: (B, 1, D); cache: {'state', 'conv'} -> (y (B, 1, D), new cache)."""
+    s, di, H, P, G, N = _dims(cfg)
+    B_ = x.shape[0]
+
+    z = jnp.einsum("bsd,de->bse", x, p["w_z"], preferred_element_type=F32).astype(x.dtype)
+    xbc_t = jnp.einsum("bsd,de->bse", x, p["w_xbc"], preferred_element_type=F32).astype(x.dtype)
+    dt_raw = jnp.einsum("bsd,dh->bsh", x, p["w_dt"], preferred_element_type=F32)
+
+    # rolling causal conv window
+    win = jnp.concatenate([cache["conv"], xbc_t], axis=1)  # (B, W, C)
+    conv_out = jnp.einsum("bwc,wc->bc", win.astype(F32), p["conv_w"].astype(F32)) + p["conv_b"].astype(F32)
+    xbc = jax.nn.silu(conv_out)[:, None, :].astype(x.dtype)  # (B, 1, C)
+    new_conv = win[:, 1:]
+
+    xs = xbc[..., :di].reshape(B_, H, P).astype(F32)
+    Bg = _expand_groups(xbc[..., di : di + G * N].reshape(B_, 1, G, N), H)[:, 0].astype(F32)
+    Cg = _expand_groups(xbc[..., di + G * N :].reshape(B_, 1, G, N), H)[:, 0].astype(F32)
+
+    dt = jax.nn.softplus(dt_raw[:, 0] + p["dt_bias"])  # (B, H)
+    A = -jnp.exp(p["A_log"])
+    a = jnp.exp(dt * A)  # (B, H)
+
+    state = cache["state"] * a[:, :, None, None] + jnp.einsum(
+        "bhn,bhp->bhnp", Bg * dt[..., None], xs
+    )
+    y = jnp.einsum("bhn,bhnp->bhp", Cg, state) + xs * p["D"][:, None]
+    y = y.reshape(B_, 1, di).astype(x.dtype)
+
+    y = rmsnorm(y * jax.nn.silu(z), p["norm_scale"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"], preferred_element_type=F32).astype(x.dtype)
+    return out, {"state": state, "conv": new_conv}

@@ -1,0 +1,37 @@
+"""Serving steps: prefill (forward + KV cache) and greedy decode.
+
+``serve_step`` is the unit the decode_* dry-run cells lower: one new token
+against a KV cache of ``seq_len`` (donated, updated in place by XLA).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import get_model
+
+
+def make_serve_step(cfg, plan=None):
+    """Returns ``serve_step(params, cache, tokens, pos) -> (next_tokens,
+    logits, cache)`` — greedy decode of one token."""
+    m = get_model(cfg)
+
+    def serve_step(params, cache, tokens, pos):
+        logits, cache = m.decode_step(cfg, params, cache, tokens, pos)
+        nxt = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        return nxt, cache
+
+    return serve_step
+
+
+def make_prefill(cfg, plan=None):
+    """Returns ``prefill(params, batch) -> (logits_last, kv)``."""
+    m = get_model(cfg)
+    q_block = getattr(plan, "q_block", 512)
+
+    def prefill(params, batch):
+        out = m.forward(cfg, params, batch, q_block=q_block, return_kv=True, last_only=True)
+        logits, _aux, kv = out
+        return logits, kv
+
+    return prefill

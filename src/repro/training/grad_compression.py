@@ -1,0 +1,47 @@
+"""Gradient compression: per-tensor int8 quantization with stochastic
+rounding, for halving/quartering cross-pod gradient all-reduce bytes.
+
+At 512+ chips the gradient reduce-scatter over DCI (the ``pod`` axis)
+becomes the scaling wall; int8 with stochastic rounding keeps SGD
+unbiased (E[q] = g) at 4x fewer wire bytes than f32 / 2x fewer than bf16.
+Applied OUTSIDE the microbatch accumulation (which stays f32): compress
+-> (all-reduce in int8 arithmetic carried as int32 partial sums) ->
+decompress.  The dry-run path exposes it as a plan knob so the roofline
+delta is measurable; the math is exercised by unit/property tests.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def compress(g, key):
+    """g: float array -> (int8 q, f32 scale). Stochastic rounding: unbiased."""
+    gf = g.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-30) / 127.0
+    x = gf / scale
+    lo = jnp.floor(x)
+    p_up = x - lo  # probability of rounding up
+    up = jax.random.bernoulli(key, p_up)
+    q = jnp.clip(lo + up.astype(jnp.float32), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decompress(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def compress_tree(grads, key):
+    """Pytree version; returns (q_tree, scale_tree)."""
+    leaves, tdef = jax.tree.flatten(grads)
+    keys = jax.random.split(key, len(leaves))
+    qs, scales = [], []
+    for leaf, k in zip(leaves, keys):
+        q, s = compress(leaf, k)
+        qs.append(q)
+        scales.append(s)
+    return tdef.unflatten(qs), tdef.unflatten(scales)
+
+
+def decompress_tree(q_tree, scale_tree):
+    return jax.tree.map(decompress, q_tree, scale_tree)

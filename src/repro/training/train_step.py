@@ -1,0 +1,91 @@
+"""Train-step factory: microbatched gradient accumulation (lax.scan, fp32
+accumulators) + AdamW update, driven by a ``CellPlan``.
+
+The futurized runtime overlaps the *host* side of the loop (data feed,
+checkpoint writes) with this step (paper Figs. 4/5 patterns); inside the
+step, XLA's latency-hiding scheduler overlaps the collectives that GSPMD
+inserts for the rule-set sharding.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import batch_logical_specs, get_model
+from repro.training.optimizer import OptConfig, adamw_update, init_opt_state
+
+
+def _split_micro(batch: dict, logical: dict, n: int) -> dict:
+    """Reshape each batch leaf's *batch* axis (found via its logical spec)
+    from (B, ...) to (n, B/n, ...) moved to the front for lax.scan."""
+    out = {}
+    for k, v in batch.items():
+        names = logical[k]
+        bi = names.index("batch")
+        B = v.shape[bi]
+        assert B % n == 0, (k, B, n)
+        new_shape = v.shape[:bi] + (n, B // n) + v.shape[bi + 1 :]
+        r = v.reshape(new_shape)
+        out[k] = jnp.moveaxis(r, bi, 0)
+    return out
+
+
+def make_train_step(cfg, shape, opt_cfg: OptConfig, plan):
+    """Returns ``train_step(params, opt_state, batch) -> (params, opt_state,
+    metrics)`` ready for jit."""
+    m = get_model(cfg)
+    logical = batch_logical_specs(cfg, shape)
+    n = plan.num_microbatches
+    compute_dtype = jnp.bfloat16 if plan.compute_dtype == "bfloat16" else jnp.float32
+
+    def cast(p):
+        """Mixed precision: matmul weights compute in bf16; fp32 master
+        copies stay in the optimizer; 1-D params (norms/biases) stay fp32."""
+        if compute_dtype == jnp.float32:
+            return p
+        return jax.tree.map(
+            lambda x: x.astype(compute_dtype)
+            if (x.dtype == jnp.float32 and x.ndim >= 2)
+            else x,
+            p,
+        )
+
+    def loss_of(params, mb):
+        return m.loss_fn(cfg, cast(params), mb, remat=plan.remat, q_block=plan.q_block)
+
+    def train_step(params, opt_state, batch):
+        if n == 1:
+            loss, grads = jax.value_and_grad(loss_of)(params, batch)
+        else:
+            stacked = _split_micro(batch, logical, n)
+
+            def body(acc, mb):
+                l, g = jax.value_and_grad(loss_of)(params, mb)
+                acc_l, acc_g = acc
+                acc_g = jax.tree.map(lambda a, b: a + b.astype(jnp.float32), acc_g, g)
+                return (acc_l + l, acc_g), None
+
+            zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss_sum, grad_sum), _ = jax.lax.scan(body, (jnp.zeros((), jnp.float32), zero), stacked)
+            loss = loss_sum / n
+            grads = jax.tree.map(lambda g: g / n, grad_sum)
+
+        new_params, new_state, om = adamw_update(opt_cfg, params, grads, opt_state)
+        metrics = {"loss": loss, **om}
+        return new_params, new_state, metrics
+
+    return train_step
+
+
+def make_init(cfg, opt_cfg: OptConfig, dtype=jnp.float32):
+    """Returns ``init(key) -> (params, opt_state)`` (jit/eval_shape-able)."""
+    m = get_model(cfg)
+
+    def init(key):
+        params = m.init(cfg, key, dtype)
+        return params, init_opt_state(params)
+
+    return init

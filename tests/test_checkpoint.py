@@ -1,0 +1,79 @@
+"""Async checkpoint / restore / fail-stop resume tests (paper Fig. 5
+pattern + DESIGN.md §6)."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpoint import CheckpointManager
+
+
+def _state(seed=0):
+    k = jax.random.key(seed)
+    return {
+        "params": {"w": jax.random.normal(k, (8, 4)), "b": jnp.zeros(4)},
+        "opt": {"m": jnp.ones((8, 4)), "step": jnp.int32(7)},
+    }
+
+
+def test_save_restore_roundtrip(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    st = _state()
+    mgr.save_async(10, st, extra={"cursor": 42}).get()
+    like = jax.tree.map(jnp.zeros_like, st)
+    restored, extra = mgr.restore(like)
+    assert extra["cursor"] == 42
+    for a, b in zip(jax.tree.leaves(st), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_save_is_asynchronous(tmp_path):
+    """save_async returns before the write lands; the future resolves it."""
+    mgr = CheckpointManager(str(tmp_path))
+    big = {"x": jnp.ones((512, 512))}
+    t0 = time.perf_counter()
+    fut = mgr.save_async(1, big)
+    t_submit = time.perf_counter() - t0
+    info = fut.get()
+    assert info["step"] == 1
+    # submission must be much faster than the full write
+    assert t_submit < max(info["seconds"], 0.05) + 0.05
+
+
+def test_retention_gc(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    st = _state()
+    for s in (1, 2, 3, 4):
+        mgr.save_async(s, st).get()
+    assert mgr.steps() == [3, 4]
+
+
+def test_latest_and_missing(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    assert mgr.latest_step() is None
+    with pytest.raises(FileNotFoundError):
+        mgr.restore({"a": jnp.zeros(1)})
+
+
+def test_failstop_resume_is_deterministic(tmp_path):
+    """Kill-and-resume must reproduce the uninterrupted run exactly:
+    train 8 straight vs train 4 + restore + 4 -> identical final loss."""
+    from repro.launch.train import train
+
+    full = train(
+        "olmo-1b", use_smoke=True, steps=8, batch=2, seq=16, lr=1e-3,
+        ckpt_dir=str(tmp_path / "a"), ckpt_every=100, log_every=0, seed=5,
+    )
+    part1 = train(
+        "olmo-1b", use_smoke=True, steps=4, batch=2, seq=16, lr=1e-3,
+        ckpt_dir=str(tmp_path / "b"), ckpt_every=4, log_every=0, seed=5,
+        schedule_total=8,  # LR horizon must match the uninterrupted run
+    )
+    # "crash": start a fresh process state and resume from the checkpoint
+    resumed = train(
+        "olmo-1b", use_smoke=True, steps=8, batch=2, seq=16, lr=1e-3,
+        ckpt_dir=str(tmp_path / "b"), resume=True, ckpt_every=100, log_every=0, seed=5,
+    )
+    np.testing.assert_allclose(resumed["final_loss"], full["final_loss"], rtol=1e-5)

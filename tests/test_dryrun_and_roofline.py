@@ -1,0 +1,88 @@
+"""Dry-run record integrity + roofline-term tests.
+
+The dry-run itself (32 cells x 2 meshes, 512 fake devices) runs out of
+band (``python -m repro.launch.dryrun --all --both-meshes``); these tests
+validate its outputs and the roofline math. They SKIP (not fail) when the
+records have not been generated yet.
+"""
+import json
+from pathlib import Path
+
+import pytest
+
+from repro.analysis.roofline import load_records, model_flops, roofline_terms
+from repro.configs import cells, get_config, get_shape
+
+RESULTS = Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+
+def _records(tag):
+    recs = {}
+    for p in RESULTS.glob(f"*__{tag}.json"):
+        r = json.loads(p.read_text())
+        recs[(r["arch"], r["shape"])] = r
+    return recs
+
+
+@pytest.mark.parametrize("tag,n_dev", [("singlepod", 256), ("multipod", 512)])
+def test_all_cells_compiled_without_error(tag, n_dev):
+    recs = _records(tag)
+    if not recs:
+        pytest.skip(f"no {tag} dry-run records; run repro.launch.dryrun first")
+    expected = set(cells())
+    missing = expected - set(recs)
+    assert not missing, f"missing cells: {sorted(missing)}"
+    errors = {k for k, r in recs.items() if "error" in r}
+    assert not errors, f"cells with errors: {sorted(errors)}"
+    for r in recs.values():
+        assert r["devices"] == n_dev
+
+
+def test_cell_list_has_documented_skips():
+    cs = cells()
+    assert len(cs) == 32  # 10 archs x 4 shapes - 8 full-attention long_500k skips
+    assert ("mamba2-130m", "long_500k") in cs
+    assert ("hymba-1.5b", "long_500k") in cs
+    assert ("deepseek-67b", "long_500k") not in cs
+
+
+def test_model_flops_train_matches_6nd_leading_order():
+    cfg = get_config("deepseek-67b")
+    shape = get_shape("train_4k")
+    mf = model_flops(cfg, shape)
+    six_nd = 6.0 * cfg.param_count() * shape.global_batch * shape.seq_len
+    assert mf >= six_nd
+    assert mf < 1.5 * six_nd  # attention term is a correction, not dominant
+
+
+def test_moe_uses_active_params():
+    cfg = get_config("phi3.5-moe-42b-a6.6b")
+    shape = get_shape("train_4k")
+    mf = model_flops(cfg, shape)
+    six_active = 6.0 * cfg.active_param_count() * shape.global_batch * shape.seq_len
+    six_total = 6.0 * cfg.param_count() * shape.global_batch * shape.seq_len
+    assert mf < 0.6 * six_total  # nowhere near dense cost
+    assert mf >= six_active
+
+
+def test_roofline_terms_shape():
+    recs = _records("singlepod")
+    if not recs:
+        pytest.skip("no records")
+    r = next(iter(recs.values()))
+    t = roofline_terms(r)
+    assert t["bound"] in ("compute", "memory", "collective")
+    assert t["step_seconds"] == max(t["compute_s"], t["memory_s"], t["collective_s"])
+    assert 0 <= t["mfu"] <= 1.5
+
+
+def test_collectives_present_in_multipod():
+    """The pod axis must actually be exercised: multi-pod records should
+    show collective traffic for training cells."""
+    recs = _records("multipod")
+    if not recs:
+        pytest.skip("no multipod records")
+    r = recs.get(("deepseek-67b", "train_4k"))
+    if r is None or "error" in r:
+        pytest.skip("deepseek multipod record missing")
+    assert sum(r["hlo"]["collective_counts"].values()) > 0

@@ -1,0 +1,142 @@
+"""Unit tests for the futurization layer (paper §3.1 semantics)."""
+import threading
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    Future,
+    FutureState,
+    Promise,
+    async_,
+    dataflow,
+    get_runtime,
+    make_ready_future,
+    wait_all,
+    when_all,
+    when_any,
+)
+
+
+def test_ready_future():
+    f = make_ready_future(42)
+    assert f.done() and f.is_ready()
+    assert f.get() == 42
+    assert f.state is FutureState.READY
+
+
+def test_failed_future_raises_on_get():
+    f = Future.failed(ValueError("boom"))
+    assert f.state is FutureState.FAILED
+    with pytest.raises(ValueError, match="boom"):
+        f.get()
+    assert isinstance(f.exception(), ValueError)
+
+
+def test_async_runs_on_pool():
+    ident = async_(lambda: threading.current_thread().name).get()
+    assert "repro-host" in ident
+
+
+def test_then_chains_and_propagates_values():
+    f = async_(lambda: 3).then(lambda v: v + 1).then(lambda v: v * 2)
+    assert f.get() == 8
+
+
+def test_then_propagates_failure_without_calling_fn():
+    called = []
+    f = Future.failed(RuntimeError("x")).then(lambda v: called.append(v))
+    with pytest.raises(RuntimeError):
+        f.get()
+    assert called == []
+
+
+def test_promise():
+    p = Promise()
+    f = p.get_future()
+    assert not f.done()
+    p.set_value("v")
+    assert f.get() == "v"
+
+
+def test_when_all_collects_in_order():
+    fs = [async_(lambda i=i: (time.sleep(0.01 * (3 - i)), i)[1]) for i in range(3)]
+    assert when_all(fs).get() == [0, 1, 2]
+
+
+def test_when_all_empty():
+    assert when_all([]).get() == []
+
+
+def test_when_all_fails_fast():
+    fs = [make_ready_future(1), Future.failed(KeyError("k"))]
+    with pytest.raises(KeyError):
+        when_all(fs).get()
+
+
+def test_when_any_returns_first():
+    slow = async_(lambda: (time.sleep(0.2), "slow")[1])
+    fast = make_ready_future("fast")
+    idx, val = when_any([slow, fast]).get()
+    assert (idx, val) == (1, "fast")
+
+
+def test_wait_all_blocks_until_done():
+    done = []
+    fs = [async_(lambda i=i: done.append(i)) for i in range(4)]
+    wait_all(fs)
+    assert sorted(done) == [0, 1, 2, 3]
+
+
+def test_dataflow_mixes_futures_and_values():
+    a = async_(lambda: 10)
+    out = dataflow(lambda x, y, z=0: x + y + z, a, 5, z=async_(lambda: 1))
+    assert out.get() == 16
+
+
+def test_dataflow_chain_builds_graph():
+    a = async_(lambda: jnp.arange(4.0))
+    b = dataflow(jnp.sum, a)
+    c = dataflow(lambda x, y: x + y, b, 4.0)
+    assert float(c.get()) == 10.0
+
+
+def test_from_array_resolves_to_ready_value():
+    x = jnp.ones((8, 8)) @ jnp.ones((8, 8))
+    f = Future.from_array(x)
+    out = f.get()
+    np.testing.assert_allclose(np.asarray(out), 8.0)
+
+
+def test_from_array_then_continuation():
+    x = jnp.full((4,), 2.0)
+    got = Future.from_array(x).then(lambda a: float(jnp.sum(a))).get()
+    assert got == 8.0
+
+
+def test_future_exception_inside_dataflow():
+    def bad(_):
+        raise ZeroDivisionError
+
+    f = dataflow(bad, make_ready_future(1))
+    with pytest.raises(ZeroDivisionError):
+        f.get()
+
+
+def test_work_queue_preserves_fifo_order():
+    q = get_runtime().queue("test-fifo")
+    seen = []
+    futs = [q.submit(lambda i=i: seen.append(i)) for i in range(32)]
+    wait_all(futs)
+    assert seen == list(range(32))
+
+
+def test_work_queue_survives_task_exception():
+    q = get_runtime().queue("test-exc")
+    bad = q.submit(lambda: 1 / 0)
+    good = q.submit(lambda: "ok")
+    with pytest.raises(ZeroDivisionError):
+        bad.get()
+    assert good.get() == "ok"

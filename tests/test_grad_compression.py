@@ -1,0 +1,53 @@
+"""int8 stochastic-rounding gradient compression: unbiasedness + bounds."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.training.grad_compression import (
+    compress,
+    compress_tree,
+    decompress,
+    decompress_tree,
+)
+
+
+def test_roundtrip_error_bounded_by_scale():
+    g = jax.random.normal(jax.random.key(0), (1024,)) * 3.0
+    q, s = compress(g, jax.random.key(1))
+    err = np.abs(np.asarray(decompress(q, s) - g))
+    assert err.max() <= float(s) + 1e-6  # one quantization step
+
+
+def test_stochastic_rounding_is_unbiased():
+    g = jnp.full((2000,), 0.3337)  # deliberately between grid points
+    outs = []
+    for i in range(50):
+        q, s = compress(g, jax.random.key(i))
+        outs.append(np.asarray(decompress(q, s)))
+    mean = np.mean(outs)
+    assert abs(mean - 0.3337) < 2e-4, mean
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**16), scale=st.floats(1e-3, 1e3))
+def test_compression_property(seed, scale):
+    g = jax.random.normal(jax.random.key(seed), (256,)) * scale
+    q, s = compress(g, jax.random.key(seed + 1))
+    back = np.asarray(decompress(q, s))
+    assert np.all(np.abs(back - np.asarray(g)) <= float(s) * 1.0001)
+    assert np.asarray(q).dtype == np.int8
+
+
+def test_tree_roundtrip():
+    grads = {"a": jnp.ones((8, 8)), "b": {"c": jnp.linspace(-1, 1, 64)}}
+    qt, st_ = compress_tree(grads, jax.random.key(7))
+    back = decompress_tree(qt, st_)
+    for o, r in zip(jax.tree.leaves(grads), jax.tree.leaves(back)):
+        np.testing.assert_allclose(np.asarray(o), np.asarray(r), atol=0.02)
+
+
+def test_zero_gradient_safe():
+    g = jnp.zeros((16,))
+    q, s = compress(g, jax.random.key(0))
+    np.testing.assert_array_equal(np.asarray(decompress(q, s)), 0.0)

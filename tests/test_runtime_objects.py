@@ -1,0 +1,132 @@
+"""Device / Buffer / Program object model tests (paper §4 workflow)."""
+import os
+import textwrap
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import Dim3, get_all_devices, registry, wait_all
+
+
+@pytest.fixture(scope="module")
+def device():
+    devices = get_all_devices(1, 0).get()  # Listing 1
+    assert len(devices) >= 1
+    return devices[0]
+
+
+def test_get_all_devices_future_and_capability_filter(device):
+    none = get_all_devices(99, 0).get()
+    assert none == []
+    assert device.capability() >= (1, 0)
+    assert device.is_local
+
+
+def test_device_registered_in_agas(device):
+    assert registry.resolve(device.gid) is device
+    assert registry.placement(device.gid).device_key == device.key
+
+
+def test_buffer_roundtrip(device):
+    buf = device.create_buffer(16, np.float32).get()
+    data = np.arange(16, dtype=np.float32)
+    buf.enqueue_write(0, data).get()
+    out = buf.enqueue_read_sync()
+    np.testing.assert_array_equal(out, data)
+
+
+def test_buffer_offset_window_write_read(device):
+    buf = device.create_buffer(10, np.int32, fill=0).get()
+    buf.enqueue_write(3, np.array([7, 8, 9], dtype=np.int32)).get()
+    np.testing.assert_array_equal(
+        buf.enqueue_read_sync(), [0, 0, 0, 7, 8, 9, 0, 0, 0, 0]
+    )
+    window = buf.enqueue_read_sync(offset=3, count=3)
+    np.testing.assert_array_equal(window, [7, 8, 9])
+
+
+def test_buffer_async_writes_are_ordered(device):
+    buf = device.create_buffer(4, np.int32).get()
+    futs = [buf.enqueue_write(0, np.full(4, i, np.int32)) for i in range(8)]
+    wait_all(futs)
+    np.testing.assert_array_equal(buf.enqueue_read_sync(), np.full(4, 7))
+
+
+def test_program_listing2_workflow(device):
+    """The paper's Listing 2, end to end: sum of n elements."""
+    n = 1000
+    host = np.ones(n, dtype=np.uint32)
+
+    futures = []
+    inbuf = device.create_buffer(n, np.uint32).get()
+    futures.append(inbuf.enqueue_write(0, host))
+    resbuf = device.create_buffer(1, np.uint32).get()
+    futures.append(resbuf.enqueue_write(0, np.zeros(1, np.uint32)))
+
+    prog = device.create_program(
+        {"sum": lambda x, r: r + jnp.sum(x, dtype=jnp.uint32)}, name="sum-prog"
+    ).get()
+    futures.append(prog.build("sum"))
+
+    wait_all(futures)  # Listing 2 line 38
+    prog.run([inbuf, resbuf], "sum", grid=Dim3(1), block=Dim3(32), out=[resbuf]).get()
+    res = resbuf.enqueue_read_sync(0, 1)
+    assert int(res[0]) == n
+
+
+def test_program_from_file_percolation(device, tmp_path):
+    src = textwrap.dedent(
+        """
+        import jax.numpy as jnp
+
+        def scale(x, s):
+            return x * s
+
+        KERNELS = {"scale": scale}
+        """
+    )
+    path = tmp_path / "kernel.py"
+    path.write_text(src)
+    prog = device.create_program_with_file(str(path)).get()
+    assert prog.kernel_names() == ["scale"]
+
+    buf = device.create_buffer_from(np.arange(4.0, dtype=np.float32)).get()
+    out = prog.run([buf, np.float32(2.0)], "scale").get()
+    np.testing.assert_allclose(np.asarray(out), [0.0, 2.0, 4.0, 6.0])
+
+
+def test_program_build_is_cached(device):
+    prog = device.create_program({"inc": lambda x: x + 1}, name="cache").get()
+    spec = jnp.zeros((8,), jnp.float32)
+    f1 = prog.build("inc", spec)
+    f2 = prog.build("inc", spec)
+    assert f1.get() is f2.get()
+
+
+def test_program_missing_kernel_fails(device):
+    prog = device.create_program({"a": lambda x: x}, name="p").get()
+    with pytest.raises(KeyError):
+        prog.build("nope").get()
+
+
+def test_kernel_receives_grid_block(device):
+    seen = {}
+
+    def k(x, grid=None, block=None):
+        seen["grid"], seen["block"] = grid, block
+        return x
+
+    prog = device.create_program({"k": k}, name="gb").get()
+    buf = device.create_buffer_from(np.zeros(2, np.float32)).get()
+    prog.run([buf], "k", grid=Dim3(4, 2, 1), block=(128, 1, 1)).get()
+    assert seen["grid"] == (4, 2, 1)
+    assert seen["block"] == (128, 1, 1)
+
+
+def test_copy_to_same_process_device_updates_agas(device):
+    buf = device.create_buffer_from(np.arange(6.0, dtype=np.float32)).get()
+    moved = buf.copy_to(device).get()
+    assert moved.gid != buf.gid
+    np.testing.assert_allclose(moved.enqueue_read_sync(), np.arange(6.0))
+    assert registry.placement(moved.gid).device_key == device.key

@@ -1,0 +1,60 @@
+"""Logical-axis sharding resolver unit tests (divisibility, axis reuse)."""
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import cells, get_config, get_shape
+from repro.distribution.recipes import plan_for
+from repro.distribution.sharding import make_rules, spec_for
+
+
+class FakeMesh:
+    axis_names = ("data", "model")
+
+    class devices:  # noqa: D106 - just needs .shape
+        shape = (16, 16)
+
+
+MESH = FakeMesh()
+RULES = {"batch": ("data",), "heads": "model", "mlp": "model", "seq": None}
+
+
+def test_spec_basic():
+    assert spec_for(("batch", "seq", "heads"), RULES) == P(("data",), None, "model")
+
+
+def test_spec_trailing_none_trimmed():
+    assert spec_for(("batch", "seq"), RULES) == P(("data",))
+
+
+def test_divisibility_drops_rule():
+    # heads=36 does not divide model=16 -> replicated
+    s = spec_for(("batch", "heads"), RULES, shape=(32, 36), mesh=MESH)
+    assert s == P(("data",))
+    s2 = spec_for(("batch", "heads"), RULES, shape=(32, 32), mesh=MESH)
+    assert s2 == P(("data",), "model")
+
+
+def test_axis_used_once():
+    rules = {"a": "model", "b": "model"}
+    s = spec_for(("a", "b"), rules, shape=(16, 16), mesh=MESH)
+    assert s == P("model")  # second claim on "model" dropped
+
+
+def test_batch_not_shardable_when_too_small():
+    s = spec_for(("batch",), RULES, shape=(1,), mesh=MESH)
+    assert s == P()
+
+
+@pytest.mark.parametrize("arch,shape", cells())
+def test_plans_materialize_for_all_cells(arch, shape):
+    cfg = get_config(arch)
+    plan = plan_for(cfg, get_shape(shape))
+    assert plan.rules["batch"] is None or plan.rules["batch"] == ("data",)
+    if cfg.moe is not None:
+        if cfg.moe.strategy == "ep":
+            assert plan.rules["p_experts"] == "model"
+        else:
+            assert plan.rules["p_expert_mlp"] == "model"
+    if shape.startswith("long"):
+        assert plan.rules["batch"] is None  # batch=1 cannot shard

@@ -1,0 +1,110 @@
+"""Per-architecture smoke tests: reduced config, one forward + one train
+step + one decode step on CPU; asserts shapes and absence of NaNs.
+
+The FULL configs are exercised only by the dry-run (ShapeDtypeStruct).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ALL_ARCHS, get_config, smoke
+from repro.configs.base import ShapeConfig
+from repro.models import get_model, make_batch
+
+SMOKE_SHAPE = ShapeConfig("smoke", seq_len=32, global_batch=2, kind="train")
+
+
+def _smoke_cfg(arch):
+    return smoke(get_config(arch))
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_forward_shapes_and_finite(arch):
+    cfg = _smoke_cfg(arch)
+    m = get_model(cfg)
+    params = m.init(cfg, jax.random.key(0))
+    batch = make_batch(cfg, SMOKE_SHAPE)
+    logits, aux = m.forward(cfg, params, batch, q_block=16)
+    B, S = batch["tokens"].shape
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits))), f"{arch}: non-finite logits"
+    assert bool(jnp.isfinite(aux))
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_train_step_reduces_loss_shape(arch):
+    """One SGD step must produce a finite scalar loss and finite grads."""
+    cfg = _smoke_cfg(arch)
+    m = get_model(cfg)
+    params = m.init(cfg, jax.random.key(1))
+    batch = make_batch(cfg, SMOKE_SHAPE, seed=1)
+
+    loss, grads = jax.value_and_grad(lambda p: m.loss_fn(cfg, p, batch, q_block=16))(params)
+    assert np.isfinite(float(loss)), f"{arch}: loss={loss}"
+    flat, _ = jax.tree.flatten(grads)
+    assert all(bool(jnp.all(jnp.isfinite(g))) for g in flat), f"{arch}: non-finite grads"
+    # losses should be near log(vocab) for random init
+    assert 0.1 * np.log(cfg.vocab_size) < float(loss) < 10 * np.log(cfg.vocab_size)
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_decode_step(arch):
+    cfg = _smoke_cfg(arch)
+    m = get_model(cfg)
+    params = m.init(cfg, jax.random.key(2))
+    B, S = 2, 16
+    cache = m.init_cache(cfg, B, S, dtype=jnp.float32)
+    if cfg.family == "encdec":
+        frames = jnp.zeros((B, cfg.encdec.encoder_seq, cfg.d_model), jnp.float32)
+        from repro.models.encdec import _cross_kv, encode
+
+        enc = encode(cfg, params, frames)
+        for i, (k, v) in enumerate(_cross_kv(cfg, params, enc)):
+            cache["cross_k"] = cache["cross_k"].at[i].set(k.astype(cache["cross_k"].dtype))
+            cache["cross_v"] = cache["cross_v"].at[i].set(v.astype(cache["cross_v"].dtype))
+    tok = jnp.zeros((B, 1), jnp.int32)
+    logits, cache2 = m.decode_step(cfg, params, cache, tok, jnp.int32(0))
+    assert logits.shape == (B, 1, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits))), f"{arch}: non-finite decode logits"
+    # cache structure preserved
+    assert jax.tree.structure(cache) == jax.tree.structure(cache2)
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_param_specs_match_params(arch):
+    """Logical-axis spec tree must mirror the param tree leaf-for-leaf."""
+    cfg = _smoke_cfg(arch)
+    m = get_model(cfg)
+    params = m.init(cfg, jax.random.key(3))
+    specs = m.param_specs(cfg)
+
+    def is_names(x):
+        return isinstance(x, tuple) and all(isinstance(n, (str, type(None))) for n in x)
+
+    pleaves = jax.tree.leaves(params)
+    sleaves = jax.tree.leaves(specs, is_leaf=is_names)
+    assert len(pleaves) == len(sleaves), f"{arch}: {len(pleaves)} params vs {len(sleaves)} specs"
+    for p, s in zip(pleaves, sleaves):
+        assert p.ndim == len(s), f"{arch}: param rank {p.shape} vs spec {s}"
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_param_count_sane(arch):
+    """Analytic full-size param count is within 25% of the reduced-model
+    scaling sanity bound (catches config typos like swapped dims)."""
+    cfg = get_config(arch)
+    n = cfg.param_count()
+    expected = {
+        "qwen2-vl-72b": 72e9,
+        "olmo-1b": 1.2e9,
+        "starcoder2-7b": 7e9,
+        "deepseek-67b": 67e9,
+        "stablelm-1.6b": 1.6e9,
+        "phi3.5-moe-42b-a6.6b": 42e9,
+        "qwen2-moe-a2.7b": 14.3e9,
+        "mamba2-130m": 0.13e9,
+        "hymba-1.5b": 1.5e9,
+        "whisper-tiny": 0.039e9,
+    }[arch]
+    assert 0.5 * expected < n < 1.7 * expected, f"{arch}: {n/1e9:.2f}B vs {expected/1e9:.2f}B"
