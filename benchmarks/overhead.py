@@ -1,11 +1,19 @@
 """Runtime-layer overhead microbenchmark (paper §5 headline claim).
 
-Same kernel, same data, two drivers:
-  native   — raw JAX dispatch (the "native CUDA" analogue),
-  futurized— through Device/Buffer/Program + futures (the HPXCL analogue).
+Same kernel, same data, three drivers:
+  native       — raw JAX dispatch (the "native CUDA" analogue),
+  futurized    — through Device/Buffer/Program + futures (HPXCL analogue),
+  graph_replay — the chain captured once into a TaskGraph and replayed as
+                 one fused executable + one queue hop (CUDA Graphs
+                 analogue, DESIGN.md §8).
+
+Plus per-primitive rows so the layer cost decomposes in the perf
+trajectory: future creation, a bare ops-queue hop, and the compiled
+launch alone.
 
 The paper's claim under test: the additional layer imposes no additional
-computational overhead (Fig. 4: ~4% with async native baseline).
+computational overhead (Fig. 4: ~4% with async native baseline); the graph
+path must beat the eager futurized path by amortizing scheduling.
 """
 from __future__ import annotations
 
@@ -14,7 +22,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import timeit
-from repro.core import Dim3, get_all_devices, wait_all
+from repro.core import Dim3, TaskGraph, get_all_devices, make_ready_future, wait_all
 from repro.kernels.partition_map.ops import partition_map
 
 
@@ -37,12 +45,45 @@ def run(quick: bool = False):
     buf = dev.create_buffer_from(host).get()
     out = dev.create_buffer(n, np.float32).get()
     prog = dev.create_program({"k": lambda x: partition_map(x, impl="ref")}, "bench").get()
-    prog.run([buf], "k", out=[out]).get()  # warm compile cache
+    # Warm the compile cache with the *same* grid/block as the timed call —
+    # the executable cache is keyed on launch geometry, so a bare warm-up
+    # would leave the first timed iteration paying a fresh XLA compile.
+    prog.run([buf], "k", grid=Dim3(1), block=Dim3(256), out=[out]).get()
 
     def futurized():
         prog.run([buf], "k", grid=Dim3(1), block=Dim3(256), out=[out]).get()
 
     t_fut = timeit(futurized)
+
+    # --- chain of 3 launches: the task-DAG case graphs are built for.
+    # Eager pays 3 queue hops + 3 futures + 3 separate executables; the
+    # captured graph replays as ONE fused executable + one hop + one future.
+    tmp1 = dev.create_buffer(n, np.float32).get()
+    tmp2 = dev.create_buffer(n, np.float32).get()
+    cout = dev.create_buffer(n, np.float32).get()
+
+    def futurized_chain3():
+        prog.run([buf], "k", grid=Dim3(1), block=Dim3(256), out=[tmp1]).get()
+        prog.run([tmp1], "k", grid=Dim3(1), block=Dim3(256), out=[tmp2]).get()
+        prog.run([tmp2], "k", grid=Dim3(1), block=Dim3(256), out=[cout]).get()
+
+    futurized_chain3()  # warm (same geometry -> same executable cache entry)
+    t_chain = timeit(futurized_chain3)
+
+    gt1 = dev.create_buffer(n, np.float32).get()
+    gt2 = dev.create_buffer(n, np.float32).get()
+    gout = dev.create_buffer(n, np.float32).get()
+    g = TaskGraph("bench-replay")
+    g.run(prog, [buf], "k", grid=Dim3(1), block=Dim3(256), out=[gt1])
+    g.run(prog, [gt1], "k", grid=Dim3(1), block=Dim3(256), out=[gt2])
+    g.run(prog, [gt2], "k", grid=Dim3(1), block=Dim3(256), out=[gout])
+    exe = g.instantiate()
+    exe.replay().get()  # warm
+
+    def graph_replay():
+        exe.replay().get()
+
+    t_graph = timeit(graph_replay)
 
     # --- layer-only cost: submit a no-op through the whole future chain
     noop = dev.create_program({"id": lambda x: x}, "noop").get()
@@ -53,9 +94,44 @@ def run(quick: bool = False):
 
     t_layer = timeit(layer_only)
 
+    # --- per-primitive decomposition of the layer cost
+    def prim_future_ready():
+        # create+consume 100 ready futures (no-alloc fast path)
+        for _ in range(100):
+            make_ready_future(0).get()
+
+    t_fready = timeit(prim_future_ready) / 100
+
+    _nop = lambda: None  # noqa: E731
+
+    def prim_queue_hop():
+        dev.ops_queue.submit(_nop).get()
+
+    t_hop = timeit(prim_queue_hop)
+
+    def prim_queue_hop_batched():
+        # 16 submissions, one queue put (submit_many)
+        wait_all(dev.ops_queue.submit_many([_nop] * 16))
+
+    t_hop16 = timeit(prim_queue_hop_batched) / 16
+
+    compiled = prog._cache[prog._key("k", [xdev], Dim3(1), Dim3(256))]
+
+    def prim_launch_only():
+        compiled(xdev).block_until_ready()
+
+    t_launch = timeit(prim_launch_only)
+
     ovh = (t_fut - t_native) / t_native * 100
     return [
         {"name": "overhead/native_dispatch", "s": t_native, "derived": f"n={n}"},
         {"name": "overhead/futurized", "s": t_fut, "derived": f"overhead={ovh:+.1f}%"},
+        {"name": "overhead/futurized_chain3", "s": t_chain, "derived": "3 eager launches"},
+        {"name": "overhead/graph_replay", "s": t_graph,
+         "derived": f"same chain fused; vs_futurized_chain={(t_graph - t_chain) / t_chain * 100:+.1f}%"},
         {"name": "overhead/layer_noop", "s": t_layer, "derived": "future+queue+launch path"},
+        {"name": "overhead/prim_future_ready", "s": t_fready, "derived": "no-alloc ready future"},
+        {"name": "overhead/prim_queue_hop", "s": t_hop, "derived": "1 submit -> 1 put"},
+        {"name": "overhead/prim_queue_hop_batched", "s": t_hop16, "derived": "per-call; 16 via submit_many"},
+        {"name": "overhead/prim_launch_only", "s": t_launch, "derived": "cached executable call"},
     ]

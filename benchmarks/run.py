@@ -1,7 +1,9 @@
 """Benchmark driver — one module per paper figure/table.
 
 Prints ``name,us_per_call,derived`` CSV rows (paper §5 protocol: 11
-iterations, first discarded, mean of the remaining 10).
+iterations, first discarded, mean of the remaining 10).  The overhead
+module's rows are additionally written to ``BENCH_overhead.json`` so the
+native/futurized/graph gap is tracked in the perf trajectory.
 
     PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig3,...]
 """
@@ -9,6 +11,7 @@ from __future__ import annotations
 
 import argparse
 import importlib
+import json
 import sys
 import traceback
 
@@ -36,9 +39,20 @@ def main() -> None:
             continue
         try:
             mod = importlib.import_module(modname)
-            for r in mod.run(quick=args.quick):
+            rows = mod.run(quick=args.quick)
+            for r in rows:
                 derived = str(r.get("derived", "")).replace(",", ";")
                 print(f"{r['name']},{r['s'] * 1e6:.1f},{derived}", flush=True)
+            if tag == "overhead":
+                payload = {
+                    "quick": args.quick,
+                    "rows": [
+                        {"name": r["name"], "us": r["s"] * 1e6, "derived": str(r.get("derived", ""))}
+                        for r in rows
+                    ],
+                }
+                with open("BENCH_overhead.json", "w") as fh:
+                    json.dump(payload, fh, indent=2)
         except Exception:  # noqa: BLE001
             failed += 1
             print(f"{tag}/CRASHED,-1,{traceback.format_exc(limit=3).splitlines()[-1]}", flush=True)

@@ -30,6 +30,7 @@ from repro.core.futures import (
     when_all,
     when_any,
 )
+from repro.core.graph import GraphExec, GraphResult, TaskGraph, capture, current_graph
 from repro.core.program import Dim3, Program
 
 __all__ = [
@@ -56,4 +57,9 @@ __all__ = [
     "when_any",
     "Dim3",
     "Program",
+    "TaskGraph",
+    "GraphExec",
+    "GraphResult",
+    "capture",
+    "current_graph",
 ]

@@ -8,6 +8,14 @@ updates the AGAS placement (percolation).
 
 Offsets are in *elements* (dtype-safe), applied on a flat view of the
 buffer, matching HPXCL's (offset, size) windows.
+
+Hot-path notes (DESIGN.md §8): a full-buffer write whose source already
+matches the buffer's shape/dtype skips the flatten/reshape/astype copies —
+a ready ``jax.Array`` on the right device is adopted outright (zero-copy);
+partial writes donate the old device array to ``_flat_update`` so XLA
+updates in place.  Replaying a captured graph may *donate* a buffer's
+storage to the fused executable; the buffer is then invalidated and reads
+raise until it is written again (CUDA Graphs' ownership rule).
 """
 from __future__ import annotations
 
@@ -44,6 +52,10 @@ class Buffer:
         self.shape: tuple = ()
         self.dtype = None
         self._array: "jax.Array | None" = None
+        self._donated: bool = False
+        # True when _array is a caller-owned jax.Array adopted by reference
+        # (zero-copy write): its storage must never be donated in place.
+        self._aliased: bool = False
         self.gid: agas.GID = 0
 
     # -- allocation (runs on the device ops queue) ---------------------------
@@ -76,10 +88,42 @@ class Buffer:
 
     def enqueue_write(self, offset: int, data, count: "int | None" = None) -> Future:
         """Asynchronously copy host ``data`` into the buffer at ``offset``
-        (elements, flat view). ``cudaMemcpyAsync(HostToDevice)`` analogue."""
+        (elements, flat view). ``cudaMemcpyAsync(HostToDevice)`` analogue.
+
+        Full-buffer writes (offset 0, covering size) take a zero-copy fast
+        path when ``data`` already matches shape and dtype.  Inside a
+        ``graph.capture()`` region the write is recorded (full-buffer only)
+        and a graph node is returned instead of a future.
+        """
+        from repro.core.graph import current_graph
+
+        g = current_graph()
+        if g is not None:
+            return g.write(self, data, offset=offset, count=count)
 
         def _write():
-            src = np.asarray(data).reshape(-1)
+            if offset == 0 and count is None:
+                # Fast path: adopt a matching jax.Array outright, or
+                # device_put a matching ndarray without flatten/astype.
+                if isinstance(data, jax.Array) and data.shape == self.shape and data.dtype == self.dtype:
+                    arr = data
+                    adopted = True
+                    if arr.devices() != {self.device.jax_device}:
+                        arr = jax.device_put(arr, self.device.jax_device)
+                        adopted = False
+                    self._array = arr
+                    self._aliased = adopted  # caller still owns this storage
+                    self._donated = False
+                    return None
+                src = np.asarray(data)
+                if src.shape == self.shape and src.dtype == self.dtype:
+                    self._array = jax.device_put(src, self.device.jax_device)
+                    self._aliased = False
+                    self._donated = False
+                    return None
+            else:
+                src = np.asarray(data)
+            src = src.reshape(-1)
             if count is not None:
                 src = src[:count]
             if offset == 0 and src.size == self.size:
@@ -88,21 +132,38 @@ class Buffer:
                 )
             else:
                 staged = jax.device_put(src, self.device.jax_device)
-                self._array = _flat_update(self._array, staged, offset, self.shape)
+                cur = self.array()
+                if self._aliased:
+                    # _flat_update donates its destination; never donate
+                    # storage a caller still owns — un-alias with a copy.
+                    cur = jnp.array(cur)
+                self._array = _flat_update(cur, staged, offset, self.shape)
+            self._aliased = False
+            self._donated = False
             return None
 
         return self.device.ops_queue.submit(_write)
 
     def enqueue_read(self, offset: int = 0, count: "int | None" = None) -> Future:
         """Asynchronously copy device data to the host; future of np.ndarray.
-        ``cudaMemcpyAsync(DeviceToHost)`` analogue."""
+        ``cudaMemcpyAsync(DeviceToHost)`` analogue.
+
+        Inside a ``graph.capture()`` region the read is recorded as a fetch
+        node (full-buffer only) and the node handle is returned."""
+        from repro.core.graph import current_graph
+
+        g = current_graph()
+        if g is not None:
+            return g.read(self, offset=offset, count=count)
+
         n = self.size - offset if count is None else count
 
         def _read():
+            src = self.array()
             if offset == 0 and n == self.size:
-                out = self._array
+                out = src
             else:
-                out = _flat_slice(self._array, offset, n)
+                out = _flat_slice(src, offset, n)
             # start D2H without blocking the ops queue on completion
             out.copy_to_host_async()
             return out
@@ -113,14 +174,26 @@ class Buffer:
         )
 
     def enqueue_read_sync(self, offset: int = 0, count: "int | None" = None):
+        from repro.core.graph import current_graph
+
+        if current_graph() is not None:
+            raise RuntimeError(
+                "enqueue_read_sync inside a graph-capture region: the value "
+                "does not exist until replay. Use enqueue_read() to record a "
+                "fetch node and index the replay's GraphResult with it."
+            )
         return self.enqueue_read(offset, count).get()
 
     def copy_to(self, target_device) -> Future:
         """Move contents to ``target_device``; future of the *new* Buffer.
-        Updates AGAS placement — the percolation primitive."""
+        Updates AGAS placement — the percolation primitive.
+
+        Not captured by graph regions: inside ``capture()`` this executes
+        eagerly (stage cross-device moves before the capture; captured
+        launches read whatever device the buffer is on at replay)."""
 
         def _stage():
-            return self._array  # capture current contents in submission order
+            return self.array()  # capture current contents in submission order
 
         def _land(arr):
             nb = Buffer()
@@ -148,11 +221,28 @@ class Buffer:
     # -- kernel-facing view ---------------------------------------------------
 
     def array(self) -> "jax.Array":
-        """Current device-resident value (async; usable as a kernel arg)."""
+        """Current device-resident value (async; usable as a kernel arg).
+
+        Raises if the buffer's storage was donated to a fused graph
+        executable (graph.replay with donation) and not rewritten since.
+        """
+        if self._array is None and self._donated:
+            raise RuntimeError(
+                f"Buffer gid={self.gid} was donated to a fused graph replay; "
+                "its contents are gone (XLA reused the memory). Write to it "
+                "before reading again."
+            )
         return self._array
 
-    def _set_array(self, arr: "jax.Array") -> None:
+    def _set_array(self, arr: "jax.Array", aliased: bool = False) -> None:
         self._array = arr
+        self._aliased = aliased
+        self._donated = False
+
+    def _invalidate(self) -> None:
+        """Mark storage as consumed by a donating executable (graph replay)."""
+        self._array = None
+        self._donated = True
 
     def __repr__(self) -> str:
         return f"Buffer(gid={self.gid}, {self.dtype}{list(self.shape)} @ {self.device.key})"

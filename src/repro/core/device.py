@@ -110,6 +110,25 @@ class Device:
 
         return self.compile_queue.submit(lambda: Program.from_file(self, path))
 
+    # -- graph capture (CUDA Graphs analogue) --------------------------------
+
+    def capture(self, name: str = "captured"):
+        """Begin a graph-capture region on this thread (DESIGN.md §8).
+
+        Transfers and launches recorded inside are fused and replayed with
+        a single hop on this device's ops queue:
+
+            with dev.capture("step") as g:
+                buf.enqueue_write(0, host)
+                prog.run([buf], "k", out=[out])
+                r = out.enqueue_read()
+            exe = g.instantiate()
+            result = exe.replay().get()   # result[r] is the np.ndarray
+        """
+        from repro.core.graph import capture as _capture
+
+        return _capture(name)
+
     # -- synchronization ----------------------------------------------------
 
     def synchronize(self) -> None:

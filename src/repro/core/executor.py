@@ -40,12 +40,20 @@ class WorkQueue:
             item = self._q.get()
             if item is None:
                 return
-            fut, fn, args, kwargs = item
-            if fut._cf.set_running_or_notify_cancel():
-                try:
-                    fut._cf.set_result(fn(*args, **kwargs))
-                except BaseException as e:  # noqa: BLE001
-                    fut._cf.set_exception(e)
+            if type(item) is list:  # batched enqueue (submit_many)
+                for sub in item:
+                    self._run_one(sub)
+            else:
+                self._run_one(item)
+
+    @staticmethod
+    def _run_one(item) -> None:
+        fut, fn, args, kwargs = item
+        if fut._cf.set_running_or_notify_cancel():
+            try:
+                fut._cf.set_result(fn(*args, **kwargs))
+            except BaseException as e:  # noqa: BLE001
+                fut._cf.set_exception(e)
 
     def submit(self, fn: Callable, *args, **kwargs) -> Future:
         if self._shutdown.is_set():
@@ -53,6 +61,33 @@ class WorkQueue:
         fut: Future = Future(name=f"{self.name}:{getattr(fn, '__name__', 'task')}")
         self._q.put((fut, fn, args, kwargs))
         return fut
+
+    def submit_many(self, calls) -> "list[Future]":
+        """Batched enqueue: one queue hop for N calls (DESIGN.md §8).
+
+        ``calls`` is an iterable of callables or ``(fn, args)`` /
+        ``(fn, args, kwargs)`` tuples.  The batch occupies a single queue
+        slot, so the per-submission put/wakeup cost is paid once; the
+        calls still run strictly in the given order, uninterleaved with
+        other submissions.  Returns one ``Future`` per call.
+        """
+        if self._shutdown.is_set():
+            raise RuntimeError(f"WorkQueue {self.name} is shut down")
+        batch = []
+        futs: "list[Future]" = []
+        for c in calls:
+            if callable(c):
+                fn, args, kwargs = c, (), {}
+            else:
+                fn = c[0]
+                args = c[1] if len(c) > 1 else ()
+                kwargs = c[2] if len(c) > 2 else {}
+            fut: Future = Future(name=f"{self.name}:{getattr(fn, '__name__', 'task')}")
+            futs.append(fut)
+            batch.append((fut, fn, args, kwargs))
+        if batch:
+            self._q.put(batch)
+        return futs
 
     def drain(self) -> None:
         """Block until everything submitted so far has run."""

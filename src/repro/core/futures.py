@@ -16,19 +16,33 @@ API mirrors HPX:
 
 Design notes
 ------------
-A ``Future`` wraps a ``concurrent.futures.Future`` for its thread-safe
-result/callback machinery, plus an optional *resolver*: a one-shot blocking
-callable producing the value.  Resolvers make device-value futures lazy —
-wrapping a ``jax.Array`` costs one object allocation and **no** thread work
-unless/until a continuation is attached (then the wait is moved to the
-completion pool) or ``.get()`` is called (then the wait happens inline).
-This is what keeps the layer overhead negligible (paper §5: "no additional
-computational overhead").
+A pending ``Future`` wraps a ``concurrent.futures.Future`` for its
+thread-safe result/callback machinery, plus an optional *resolver*: a
+one-shot blocking callable producing the value.  Resolvers make
+device-value futures lazy — wrapping a ``jax.Array`` costs one object
+allocation and **no** thread work unless/until a continuation is attached
+(then the wait is moved to the completion pool) or ``.get()`` is called
+(then the wait happens inline).
+
+Two hot-path properties keep the layer at the paper's §5 "no additional
+computational overhead" level (DESIGN.md §2, §8):
+
+* **No-alloc ready futures.**  An already-completed ``Future`` stores its
+  value (or exception) directly and never allocates the inner
+  ``concurrent.futures.Future`` — which carries a ``threading.Condition``
+  (a lock + waiter list) that is pure waste for a value that already
+  exists.  ``then``/``when_all``/``when_any`` short-circuit completed
+  inputs inline: no callback registration, no pool submission.
+
+* **Lock-free resolver handoff.**  The one-shot resolver is claimed via
+  ``list.pop()`` on a single-element cell — atomic under the GIL — so the
+  race between ``.get()``, ``.then`` and combinators needs no per-future
+  ``threading.Lock`` (one fewer allocation per future, no acquire/release
+  on every state check).
 """
 from __future__ import annotations
 
 import concurrent.futures as _cf
-import threading
 from enum import Enum
 from typing import Any, Callable, Generic, Iterable, Sequence, TypeVar
 
@@ -48,6 +62,8 @@ __all__ = [
     "when_any",
 ]
 
+_UNSET = object()
+
 
 class FutureState(Enum):
     PENDING = "pending"
@@ -63,9 +79,18 @@ def _default_pool():
 
 
 class Future(Generic[T]):
-    """Asynchronous value, composable into an execution DAG."""
+    """Asynchronous value, composable into an execution DAG.
 
-    __slots__ = ("_cf", "_resolver", "_lock", "name")
+    Internal representation (one of three modes):
+      * value mode:    ``_cf is None`` — completed; ``_value``/``_exc``
+                       hold the outcome (the no-alloc ready fast path),
+      * pending mode:  ``_cf`` is a live ``concurrent.futures.Future``,
+      * resolver mode: pending mode plus ``_rcell = [resolver]``; the
+                       resolver is claimed exactly once via the
+                       GIL-atomic ``list.pop()``.
+    """
+
+    __slots__ = ("_cf", "_rcell", "_value", "_exc", "name")
 
     def __init__(
         self,
@@ -73,24 +98,35 @@ class Future(Generic[T]):
         resolver: "Callable[[], T] | None" = None,
         name: str = "",
     ):
-        self._cf: _cf.Future = inner if inner is not None else _cf.Future()
-        self._resolver = resolver
-        self._lock = threading.Lock()
+        self._cf: "_cf.Future | None" = inner if inner is not None else _cf.Future()
+        self._rcell: "list | None" = [resolver] if resolver is not None else None
+        self._value = _UNSET
+        self._exc: "BaseException | None" = None
         self.name = name
 
     # -- constructors ------------------------------------------------------
 
     @staticmethod
     def ready(value: T, name: str = "") -> "Future[T]":
-        f: _cf.Future = _cf.Future()
-        f.set_result(value)
-        return Future(f, name=name)
+        """Completed future holding ``value`` — allocates no inner future,
+        no lock, no condition variable (hot-path constructor)."""
+        f: "Future[T]" = Future.__new__(Future)
+        f._cf = None
+        f._rcell = None
+        f._value = value
+        f._exc = None
+        f.name = name
+        return f
 
     @staticmethod
     def failed(exc: BaseException, name: str = "") -> "Future[T]":
-        f: _cf.Future = _cf.Future()
-        f.set_exception(exc)
-        return Future(f, name=name)
+        f: "Future[T]" = Future.__new__(Future)
+        f._cf = None
+        f._rcell = None
+        f._value = _UNSET
+        f._exc = exc
+        f.name = name
+        return f
 
     @staticmethod
     def from_concurrent(f: "_cf.Future", name: str = "") -> "Future[T]":
@@ -114,11 +150,18 @@ class Future(Generic[T]):
     # -- resolver plumbing -------------------------------------------------
 
     def _take_resolver(self):
-        if self._resolver is None:
+        """Claim the one-shot resolver; GIL-atomic, at most one caller wins."""
+        cell = self._rcell
+        if cell is None:
             return None
-        with self._lock:
-            r, self._resolver = self._resolver, None
-        return r
+        try:
+            return cell.pop()
+        except IndexError:  # another thread won the handoff
+            return None
+
+    def _has_resolver(self) -> bool:
+        cell = self._rcell
+        return bool(cell)
 
     def _run_resolver_inline(self, r) -> None:
         try:
@@ -136,26 +179,34 @@ class Future(Generic[T]):
 
     @property
     def state(self) -> FutureState:
-        if self._resolver is not None:
-            return FutureState.PENDING
-        if not self._cf.done():
+        if self._cf is None:
+            return FutureState.FAILED if self._exc is not None else FutureState.READY
+        if self._has_resolver() or not self._cf.done():
             return FutureState.PENDING
         return FutureState.FAILED if self._cf.exception() else FutureState.READY
 
     def done(self) -> bool:
-        return self._resolver is None and self._cf.done()
+        if self._cf is None:
+            return True
+        return not self._has_resolver() and self._cf.done()
 
     def is_ready(self) -> bool:
         return self.state is FutureState.READY
 
     def get(self, timeout: "float | None" = None) -> T:
         """Block until the value is available and return it (HPX ``get``)."""
+        if self._cf is None:
+            if self._exc is not None:
+                raise self._exc
+            return self._value
         r = self._take_resolver()
         if r is not None:
             self._run_resolver_inline(r)
         return self._cf.result(timeout)
 
     def exception(self, timeout: "float | None" = None) -> "BaseException | None":
+        if self._cf is None:
+            return self._exc
         r = self._take_resolver()
         if r is not None:
             self._run_resolver_inline(r)
@@ -167,6 +218,14 @@ class Future(Generic[T]):
         except BaseException:  # noqa: BLE001 - wait() never raises
             pass
         return self
+
+    # -- completion (used by Promise / WorkQueue) --------------------------
+
+    def _set_result(self, value) -> None:
+        self._cf.set_result(value)
+
+    def _set_exception(self, exc: BaseException) -> None:
+        self._cf.set_exception(exc)
 
     # -- composition --------------------------------------------------------
 
@@ -187,13 +246,24 @@ class Future(Generic[T]):
         continuation that *blocks* on further queue submissions would then
         deadlock the queue (HPX avoids this by suspending its user-level
         threads; OS threads cannot suspend, so we hop).  If the parent is
-        already done, run inline on the caller (cheap fast path).  Pass
-        ``executor="inline"`` to force inline execution, or any object with
-        ``submit`` to choose a pool.
+        already done, run inline on the caller (cheap fast path: no
+        callback registration, no pool hop, and the returned future is a
+        no-alloc completed one).  Pass ``executor="inline"`` to force
+        inline execution, or any object with ``submit`` to choose a pool.
         """
+        # Fast path: parent complete -> run inline, return completed future.
+        if self._cf is None or (not self._has_resolver() and self._cf.done()):
+            exc = self._exc if self._cf is None else self._cf.exception()
+            if exc is not None:
+                return Future.failed(exc, name=name or f"{self.name}.then")
+            try:
+                value = self._value if self._cf is None else self._cf.result()
+                return Future.ready(fn(value), name=name or f"{self.name}.then")
+            except BaseException as e:  # noqa: BLE001
+                return Future.failed(e, name=name or f"{self.name}.then")
+
         out: Future[U] = Future(name=name or f"{self.name}.then")
         self._spawn_resolver()
-        already_done = self._cf.done()
 
         def _fire(parent: _cf.Future) -> None:
             exc = parent.exception()
@@ -207,7 +277,7 @@ class Future(Generic[T]):
                 except BaseException as e:  # noqa: BLE001
                     out._cf.set_exception(e)
 
-            if executor == "inline" or already_done:
+            if executor == "inline":
                 _run()
             elif executor is None:
                 _default_pool().submit(_run)
@@ -231,10 +301,10 @@ class Promise(Generic[T]):
         return self._future
 
     def set_value(self, value: T) -> None:
-        self._future._cf.set_result(value)
+        self._future._set_result(value)
 
     def set_exception(self, exc: BaseException) -> None:
-        self._future._cf.set_exception(exc)
+        self._future._set_exception(exc)
 
 
 def make_ready_future(value: T) -> Future[T]:
@@ -246,17 +316,36 @@ def make_exceptional_future(exc: BaseException) -> Future[Any]:
 
 
 def when_all(futures: "Iterable[Future]", name: str = "when_all") -> Future[list]:
-    """Future of the list of values; fails with the first failure."""
-    futs = list(futures)
-    out: Future[list] = Future(name=name)
-    n = len(futs)
-    if n == 0:
-        out._cf.set_result([])
-        return out
+    """Future of the list of values; fails with the first failure.
 
+    Fast path: inputs that are already complete are collected inline —
+    ``when_all`` over N ready futures performs zero pool submissions,
+    zero callback registrations and zero lock operations, returning a
+    no-alloc completed future (DESIGN.md §8).
+    """
+    futs = list(futures)
+    n = len(futs)
     results: list = [None] * n
-    remaining = [n]
-    lock = threading.Lock()
+
+    # Inline sweep over already-complete inputs; collect the pending rest.
+    pending: "list[tuple[int, Future]]" = []
+    for i, f in enumerate(futs):
+        if f.done():
+            exc = f.exception()
+            if exc is not None:
+                return Future.failed(exc, name=name)
+            results[i] = f.get()
+        else:
+            pending.append((i, f))
+
+    if not pending:
+        return Future.ready(results, name=name)
+
+    out: Future[list] = Future(name=name)
+    # Countdown via GIL-atomic list.pop(): each completing dependency takes
+    # one token; whoever observes the empty list publishes the result (a
+    # late double-publish is absorbed by the InvalidStateError guard).
+    tokens = [None] * len(pending)
 
     def _make_cb(i: int):
         def _cb(parent: _cf.Future) -> None:
@@ -270,10 +359,8 @@ def when_all(futures: "Iterable[Future]", name: str = "when_all") -> Future[list
                         pass
                 return
             results[i] = parent.result()
-            with lock:
-                remaining[0] -= 1
-                last = remaining[0] == 0
-            if last and not out._cf.done():
+            tokens.pop()
+            if not tokens and not out._cf.done():
                 try:
                     out._cf.set_result(results)
                 except _cf.InvalidStateError:
@@ -281,7 +368,7 @@ def when_all(futures: "Iterable[Future]", name: str = "when_all") -> Future[list
 
         return _cb
 
-    for i, f in enumerate(futs):
+    for i, f in pending:
         f._spawn_resolver()
         f._cf.add_done_callback(_make_cb(i))
     return out
@@ -292,6 +379,15 @@ def when_any(futures: "Iterable[Future]", name: str = "when_any") -> Future[tupl
     futs = list(futures)
     if not futs:
         raise ValueError("when_any of empty set")
+
+    # Fast path: any input already complete wins without pool work.
+    for i, f in enumerate(futs):
+        if f.done():
+            exc = f.exception()
+            if exc is not None:
+                return Future.failed(exc, name=name)
+            return Future.ready((i, f.get()), name=name)
+
     out: Future[tuple] = Future(name=name)
 
     def _make_cb(i: int):
@@ -332,7 +428,8 @@ def dataflow(fn: Callable[..., T], *args, executor=None, name: str = "", **kwarg
 
     Non-future arguments pass through unchanged (``hpx::dataflow``).  The
     body runs on the host pool so long chains never recurse on a completing
-    thread.
+    thread (unless every dependency is already READY, in which case the
+    ``when_all``/``then`` fast paths run the body inline).
     """
     dep_ixs = [i for i, a in enumerate(args) if isinstance(a, Future)]
     dep_keys = [k for k, v in kwargs.items() if isinstance(v, Future)]

@@ -1,0 +1,527 @@
+"""Task-graph capture & fused replay — the CUDA Graphs analogue (DESIGN.md §8).
+
+The futurization layer (paper §3.1) pays a small constant cost per
+operation: a ``Future``, a queue hop, and (for chains) a ``when_all``
+fan-in.  The paper's §5 claim is that this cost is negligible *per launch*;
+this module drives the *per-graph* cost toward zero the same way CUDA
+Graphs, StarPU bundles and Specx task collectives do — record the DAG once,
+then replay it with amortized scheduling:
+
+  * ``capture()`` (stream-capture style) or an explicit ``TaskGraph``
+    builder records ``Buffer`` transfers and ``Program.run`` launches as a
+    symbolic SSA DAG — nothing executes during capture.
+  * ``instantiate()`` fuses every maximal run of same-device kernel
+    launches into **one** ``jax.jit``-compiled executable.  Intermediate
+    values that never escape a fused segment are elided entirely; segment
+    inputs that die inside the segment are *donated* so XLA reuses their
+    memory.  The replay route (which ops queue) is resolved once, here.
+  * ``replay()`` then executes the whole graph with a **single** ops-queue
+    hop and a **single** ``Future`` — N launches for the price of one.
+
+Correspondence: capture <-> ``cudaStreamBeginCapture``; ``GraphExec`` <->
+``cudaGraphExec_t``; ``replay`` <-> ``cudaGraphLaunch``; feed overrides at
+replay <-> ``cudaGraphExecKernelNodeSetParams``.  It is equally the
+paper's Listing 2 execution graph, frozen and re-launched (PAPER §4).
+
+Ownership rule (CUDA Graphs'): a buffer overwritten inside the graph whose
+final value is consumed by a later in-graph launch is *graph-internal* —
+after ``replay()`` it is invalidated (its storage may have been donated)
+and reads raise until it is written again.  Buffers read from outside the
+graph (extern inputs) are never donated, so a ``GraphExec`` can be
+replayed any number of times.
+"""
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from typing import Any, Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.buffer import Buffer
+from repro.core.futures import Future
+
+__all__ = ["TaskGraph", "GraphExec", "GraphResult", "capture", "current_graph"]
+
+_tls = threading.local()
+
+
+def current_graph() -> "TaskGraph | None":
+    """The graph currently recording on this thread (or None)."""
+    return getattr(_tls, "graph", None)
+
+
+@contextmanager
+def capture(name: str = "captured"):
+    """Record all ``Program.run`` / ``Buffer.enqueue_write`` /
+    ``Buffer.enqueue_read`` calls on this thread into a ``TaskGraph``
+    (``cudaStreamBeginCapture`` analogue).  Nothing executes until
+    ``instantiate().replay()``."""
+    g = TaskGraph(name)
+    prev = current_graph()
+    _tls.graph = g
+    try:
+        yield g
+    finally:
+        _tls.graph = prev
+
+
+# ---------------------------------------------------------------------------
+# symbolic nodes (returned as handles from capture-mode calls)
+# ---------------------------------------------------------------------------
+
+
+class _SymRef:
+    """Reference to an SSA value inside the graph."""
+
+    __slots__ = ("sym",)
+
+    def __init__(self, sym: int):
+        self.sym = sym
+
+
+class WriteNode:
+    """Recorded full-buffer H2D write; handle usable as a replay-feed key."""
+
+    __slots__ = ("buf", "data", "sym")
+
+    def __init__(self, buf: Buffer, data, sym: int):
+        self.buf, self.data, self.sym = buf, data, sym
+
+
+class LaunchNode:
+    """Recorded kernel launch."""
+
+    __slots__ = ("program", "kernel", "arg_refs", "out_bufs", "res_syms", "bound", "device")
+
+    def __init__(self, program, kernel, arg_refs, out_bufs, res_syms, bound, device):
+        self.program = program
+        self.kernel = kernel
+        self.arg_refs = arg_refs  # list of _SymRef | constant
+        self.out_bufs = out_bufs  # list[Buffer] | None
+        self.res_syms = res_syms  # list[int], one per kernel result
+        self.bound = bound  # geometry-bound callable
+        self.device = device
+
+
+class ReadNode:
+    """Recorded full-buffer D2H read; handle indexes the GraphResult."""
+
+    __slots__ = ("buf", "sym")
+
+    def __init__(self, buf: Buffer, sym: int):
+        self.buf, self.sym = buf, sym
+
+
+class GraphResult:
+    """Value of a completed replay: fetched reads (np.ndarray) and
+    out-less launch results (raw arrays), indexed by their capture handle."""
+
+    def __init__(self, fetches: dict, reads: list):
+        self._fetches = fetches
+        self.reads = reads  # read values in capture order
+
+    def __getitem__(self, node):
+        return self._fetches[node]
+
+    def __repr__(self) -> str:
+        return f"GraphResult({len(self._fetches)} fetches)"
+
+
+# ---------------------------------------------------------------------------
+# the graph builder
+# ---------------------------------------------------------------------------
+
+
+class TaskGraph:
+    """Symbolic DAG of transfers and launches (build explicitly or via
+    ``capture()``); compile with ``instantiate()``."""
+
+    def __init__(self, name: str = "graph"):
+        self.name = name
+        self._nodes: list = []
+        self._next_sym = 0
+        self._cur: "dict[int, int]" = {}  # id(buffer) -> current sym
+        self._buffers: "dict[int, Buffer]" = {}  # id(buffer) -> buffer (keepalive)
+        self._sym_spec: "dict[int, jax.ShapeDtypeStruct]" = {}
+        self._extern: "dict[int, Buffer]" = {}  # sym -> source buffer
+        self._frozen = False
+
+    # -- recording surface -------------------------------------------------
+
+    def _new_sym(self, shape, dtype) -> int:
+        s = self._next_sym
+        self._next_sym += 1
+        self._sym_spec[s] = jax.ShapeDtypeStruct(tuple(shape), dtype)
+        return s
+
+    def _check_mutable(self) -> None:
+        if self._frozen:
+            raise RuntimeError(f"TaskGraph '{self.name}' is frozen (already instantiated)")
+
+    def _sym_of(self, buf: Buffer) -> _SymRef:
+        """Current SSA value of a buffer; first touch binds an extern input
+        (read live from the buffer at every replay)."""
+        s = self._cur.get(id(buf))
+        if s is None:
+            s = self._new_sym(buf.shape, buf.dtype)
+            self._cur[id(buf)] = s
+            self._buffers[id(buf)] = buf
+            self._extern[s] = buf
+        return _SymRef(s)
+
+    def write(self, buf: Buffer, data=None, offset: int = 0, count: "int | None" = None) -> WriteNode:
+        """Record a full-buffer H2D write.  ``data`` is the default payload;
+        override per replay with ``replay(feeds={node_or_buffer: new_data})``."""
+        self._check_mutable()
+        if offset != 0 or (count is not None and count != buf.size):
+            raise NotImplementedError(
+                "graph capture supports full-buffer writes only (offset=0); "
+                "stage partial updates outside the capture region"
+            )
+        sym = self._new_sym(buf.shape, buf.dtype)
+        self._cur[id(buf)] = sym
+        self._buffers[id(buf)] = buf
+        node = WriteNode(buf, data, sym)
+        self._nodes.append(node)
+        return node
+
+    def run(
+        self,
+        program,
+        args: "Sequence[Buffer | Any]",
+        name: str,
+        grid=None,
+        block=None,
+        out: "Sequence[Buffer] | None" = None,
+    ) -> LaunchNode:
+        """Record a kernel launch (``Program.run`` analogue).  Non-buffer
+        arguments are captured as constants and baked into the fused
+        executable."""
+        self._check_mutable()
+        if name not in program._kernels:
+            raise KeyError(f"no kernel '{name}' in {program.name}")
+        bound = program._bind(name, grid, block)
+        arg_refs: list = []
+        shape_args: list = []
+        for a in args:
+            if isinstance(a, Buffer):
+                ref = self._sym_of(a)
+                arg_refs.append(ref)
+                shape_args.append(self._sym_spec[ref.sym])
+            else:
+                arg_refs.append(a)
+                shape_args.append(a)
+        res_shapes = jax.eval_shape(bound, *shape_args)
+        res_list = list(res_shapes) if isinstance(res_shapes, (tuple, list)) else [res_shapes]
+        if out is not None and len(res_list) != len(out):
+            raise ValueError(
+                f"kernel '{name}' returns {len(res_list)} arrays for {len(out)} out buffers"
+            )
+        res_syms = [self._new_sym(r.shape, r.dtype) for r in res_list]
+        if out is not None:
+            for b, s in zip(out, res_syms):
+                self._cur[id(b)] = s
+                self._buffers[id(b)] = b
+        node = LaunchNode(program, name, arg_refs, list(out) if out is not None else None,
+                          res_syms, bound, program.device)
+        self._nodes.append(node)
+        return node
+
+    def read(self, buf: Buffer, offset: int = 0, count: "int | None" = None) -> ReadNode:
+        """Record a full-buffer D2H fetch; the handle indexes the replay's
+        ``GraphResult`` (value is an ``np.ndarray``, as in eager reads)."""
+        self._check_mutable()
+        if offset != 0 or (count is not None and count != buf.size):
+            raise NotImplementedError(
+                "graph capture supports full-buffer reads only (offset=0)"
+            )
+        node = ReadNode(buf, self._sym_of(buf).sym)
+        self._nodes.append(node)
+        return node
+
+    # -- instantiate: fuse + compile + pre-resolve the route ----------------
+
+    def instantiate(self, donate: bool = True) -> "GraphExec":
+        """Fuse, compile and freeze the graph into a replayable executable
+        (``cudaGraphInstantiate`` analogue).  ``donate=False`` disables
+        buffer donation (debugging aid: write-fed buffers then keep their
+        payload after replay; values fused away inside a segment still
+        invalidate their buffers)."""
+        self._check_mutable()
+        self._frozen = True
+        return GraphExec(self, donate=donate)
+
+
+# ---------------------------------------------------------------------------
+# instantiated executable
+# ---------------------------------------------------------------------------
+
+
+class _Segment:
+    __slots__ = ("device", "nodes", "in_syms", "out_syms", "compiled", "donated_ixs")
+
+    def __init__(self, device, nodes):
+        self.device = device
+        self.nodes = nodes
+        self.in_syms: "list[int]" = []
+        self.out_syms: "list[int]" = []
+        self.compiled = None
+        self.donated_ixs: "tuple[int, ...]" = ()
+
+
+class GraphExec:
+    """A frozen, fused, route-resolved task graph (``cudaGraphExec_t``)."""
+
+    def __init__(self, graph: TaskGraph, donate: bool = True):
+        self.graph = graph
+        self._donate = donate
+        self._writes: "list[WriteNode]" = [n for n in graph._nodes if isinstance(n, WriteNode)]
+        self._reads: "list[ReadNode]" = [n for n in graph._nodes if isinstance(n, ReadNode)]
+        self._build_plan()
+        self._compile_segments()
+        # Pre-resolved route: one ops-queue hop for the whole replay.
+        route_dev = self._segments[0].device if self._segments else None
+        if route_dev is None:
+            for b in graph._buffers.values():
+                route_dev = b.device
+                break
+        if route_dev is None:
+            raise ValueError(f"TaskGraph '{graph.name}' is empty")
+        self._queue = route_dev.ops_queue
+        # Placement spans segments AND extern inputs: a graph whose input
+        # buffer lives on another device needs the replay-time device_put
+        # guard even when all launches share one device.
+        placements = {s.device.jax_device for s in self._segments}
+        placements.update(b.device.jax_device for b in graph._extern.values())
+        placements.update(n.buf.device.jax_device for n in self._writes)
+        self._multi_device = len(placements) > 1
+        # Extern buffers owned by other devices may have pending ops on
+        # their own queues; replay must drain those before reading, or it
+        # could observe stale contents (the eager path got this ordering
+        # for free by staging on the source queue).
+        foreign = {}
+        for b in graph._extern.values():
+            q = b.device.ops_queue
+            if q is not self._queue:
+                foreign[id(q)] = q
+        self._foreign_queues = list(foreign.values())
+
+    # -- planning ----------------------------------------------------------
+
+    def _build_plan(self) -> None:
+        g = self.graph
+        nodes = g._nodes
+
+        # Segment = maximal run of launches on one device (writes/reads are
+        # replay-time host ops and do not break fusion; SSA ordering keeps
+        # them correct regardless of where they sit between launches).
+        self._segments: "list[_Segment]" = []
+        for n in nodes:
+            if not isinstance(n, LaunchNode):
+                continue
+            if self._segments and self._segments[-1].device is n.device:
+                self._segments[-1].nodes.append(n)
+            else:
+                self._segments.append(_Segment(n.device, [n]))
+
+        # Liveness: which segment consumes each sym, and what must survive.
+        launch_use_segs: "dict[int, list[int]]" = {}
+        produced_in_seg: "dict[int, int]" = {}
+        for si, seg in enumerate(self._segments):
+            for n in seg.nodes:
+                for a in n.arg_refs:
+                    if isinstance(a, _SymRef):
+                        launch_use_segs.setdefault(a.sym, []).append(si)
+                for s in n.res_syms:
+                    produced_in_seg[s] = si
+
+        fetched: "set[int]" = {r.sym for r in self._reads}
+        for n in nodes:
+            if isinstance(n, LaunchNode) and n.out_bufs is None:
+                fetched.update(n.res_syms)  # out-less launch: results fetched
+
+        final_sym: "dict[int, int]" = {}  # id(buffer) -> final sym
+        for bid, s in g._cur.items():
+            final_sym[bid] = s
+        # Keep set: fetched values + terminal buffer values (final value
+        # with no in-graph launch consumer).  A buffer whose final value IS
+        # consumed in-graph is graph-internal: fused away / donated.
+        keep: "set[int]" = set(fetched)
+        for bid, s in final_sym.items():
+            if not launch_use_segs.get(s):
+                keep.add(s)
+        self._keep = keep
+        self._final_sym = final_sym
+
+        # Per-segment interface: inputs (consumed, produced earlier) and
+        # outputs (produced here, needed later or kept).
+        for si, seg in enumerate(self._segments):
+            in_syms: "list[int]" = []
+            seen = set()
+            local_produced = set()
+            for n in seg.nodes:
+                for a in n.arg_refs:
+                    if isinstance(a, _SymRef) and a.sym not in local_produced and a.sym not in seen:
+                        seen.add(a.sym)
+                        in_syms.append(a.sym)
+                local_produced.update(n.res_syms)
+            out_syms = [
+                s for n in seg.nodes for s in n.res_syms
+                if s in keep or any(u > si for u in launch_use_segs.get(s, ()))
+            ]
+            seg.in_syms = in_syms
+            seg.out_syms = out_syms
+            if self._donate:
+                donated = []
+                for pos, s in enumerate(in_syms):
+                    if s in g._extern:
+                        continue  # replay re-reads extern buffers: never donate
+                    if s in keep:
+                        continue
+                    if any(u > si for u in launch_use_segs.get(s, ())):
+                        continue
+                    donated.append(pos)
+                seg.donated_ixs = tuple(donated)
+
+        self._donated_syms = {
+            seg.in_syms[pos] for seg in self._segments for pos in seg.donated_ixs
+        }
+
+    def _compile_segments(self) -> None:
+        g = self.graph
+        for seg in self._segments:
+            nodes, in_syms, out_syms = seg.nodes, tuple(seg.in_syms), tuple(seg.out_syms)
+
+            def make_fused(nodes=nodes, in_syms=in_syms, out_syms=out_syms):
+                def fused(*xs):
+                    env = dict(zip(in_syms, xs))
+                    for n in nodes:
+                        vals = [env[a.sym] if isinstance(a, _SymRef) else a for a in n.arg_refs]
+                        res = n.bound(*vals)
+                        rl = list(res) if isinstance(res, (tuple, list)) else [res]
+                        for s, v in zip(n.res_syms, rl):
+                            env[s] = v
+                    return tuple(env[s] for s in out_syms)
+
+                return fused
+
+            specs = [g._sym_spec[s] for s in in_syms]
+            try:
+                # Pin input shardings to the segment's device so replay on a
+                # non-default device doesn't trip compiled-sharding checks.
+                sharding = jax.sharding.SingleDeviceSharding(seg.device.jax_device)
+                specs = [
+                    jax.ShapeDtypeStruct(sp.shape, sp.dtype, sharding=sharding)
+                    for sp in specs
+                ]
+            except (AttributeError, TypeError):  # older jax: default placement
+                pass
+            jitted = jax.jit(make_fused(), donate_argnums=seg.donated_ixs)
+            seg.compiled = jitted.lower(*specs).compile()
+
+    # -- replay ------------------------------------------------------------
+
+    def replay(self, feeds: "dict | None" = None, sync: str = "ready") -> "Future[GraphResult]":
+        """Execute the whole graph: one ops-queue hop, one ``Future``
+        (``cudaGraphLaunch`` analogue).
+
+        ``feeds`` overrides recorded write payloads, keyed by the
+        ``WriteNode`` handle or by the target ``Buffer``.  ``sync="ready"``
+        resolves at device completion of all kept values (CUDA-event
+        semantics); ``sync="dispatch"`` resolves once results are
+        submitted (the queue is released immediately)."""
+        g = self.graph
+        block = sync == "ready"
+
+        def _execute() -> GraphResult:
+            for q in self._foreign_queues:
+                q.drain()  # order extern reads after their devices' pending ops
+            env: "dict[int, Any]" = {}
+            adopted: "set[int]" = set()
+            for s, buf in g._extern.items():
+                env[s] = buf.array()
+            for n in self._writes:
+                data = n.data
+                if feeds is not None:
+                    data = feeds.get(n, feeds.get(n.buf, data))
+                if data is None:
+                    raise ValueError(
+                        f"write node for buffer gid={n.buf.gid} has no payload: "
+                        "record one at capture or pass feeds={node: data}"
+                    )
+                arr = _prepare(n.buf, data)
+                if arr is data:
+                    if n.sym in self._donated_syms:
+                        # The payload was adopted by reference and this
+                        # replay will donate its storage into a fused
+                        # executable — copy so the caller's array (and the
+                        # recorded default) survives for the next replay.
+                        arr = jnp.array(arr)
+                    else:
+                        adopted.add(n.sym)  # caller-owned storage, by ref
+                env[n.sym] = arr
+            for seg in self._segments:
+                xs = [env[s] for s in seg.in_syms]
+                if self._multi_device:
+                    jd = seg.device.jax_device
+                    xs = [x if x.devices() == {jd} else jax.device_put(x, jd) for x in xs]
+                outs = seg.compiled(*xs)
+                for s, v in zip(seg.out_syms, outs):
+                    env[s] = v
+
+            # Commit buffer states (CUDA Graphs ownership rule): a buffer
+            # keeps its final value when that value survived replay (it was
+            # materialized and not donated into a fused executable);
+            # otherwise its storage is gone and reads must fail.
+            live_vals = []
+            for bid, s in self._final_sym.items():
+                buf = g._buffers[bid]
+                if s in g._extern:
+                    if s in self._keep:
+                        live_vals.append(env[s])
+                    continue
+                if s in env and s not in self._donated_syms:
+                    buf._set_array(env[s], aliased=s in adopted)
+                    live_vals.append(env[s])
+                else:
+                    buf._invalidate()
+
+            fetches: dict = {}
+            reads: list = []
+            for n in g._nodes:
+                if isinstance(n, ReadNode):
+                    val = np.asarray(env[n.sym])
+                    fetches[n] = val
+                    reads.append(val)
+                elif isinstance(n, LaunchNode) and n.out_bufs is None:
+                    vals = [env[s] for s in n.res_syms]
+                    fetches[n] = vals[0] if len(vals) == 1 else vals
+                    live_vals.extend(vals)
+            if block and live_vals:
+                jax.block_until_ready(live_vals)
+            return GraphResult(fetches, reads)
+
+        return self._queue.submit(_execute)
+
+    __call__ = replay
+
+    def __repr__(self) -> str:
+        nseg = len(self._segments)
+        nk = sum(len(s.nodes) for s in self._segments)
+        return f"GraphExec({self.graph.name}: {nk} launches -> {nseg} fused segment(s))"
+
+
+def _prepare(buf: Buffer, data):
+    """Feed payload -> device array matching the buffer (zero-copy when the
+    payload already conforms)."""
+    if isinstance(data, jax.Array) and data.shape == buf.shape and data.dtype == buf.dtype:
+        if data.devices() == {buf.device.jax_device}:
+            return data
+        return jax.device_put(data, buf.device.jax_device)
+    src = np.asarray(data)
+    if src.shape != buf.shape or src.dtype != buf.dtype:
+        src = src.reshape(buf.shape).astype(buf.dtype)
+    return jax.device_put(src, buf.device.jax_device)

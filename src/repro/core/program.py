@@ -15,6 +15,13 @@ launch geometry, DESIGN.md §2).
 Percolation: ``run`` executes where the program's device is; argument
 buffers living on other devices are first moved there with async copies
 (futures), never blocking the caller.
+
+Hot-path notes (DESIGN.md §8): signature inspection is done once per
+kernel (``inspect.signature`` costs ~10 µs — far more than a queue hop),
+bound callables are cached per (kernel, grid, block), and the executable
+cache key hashes interned dtype objects instead of ``str(dtype)``.
+Inside a ``graph.capture()`` region ``run`` records a symbolic node
+instead of executing (CUDA-Graphs stream capture analogue).
 """
 from __future__ import annotations
 
@@ -66,6 +73,10 @@ class Program:
         self._kernels: "dict[str, Callable]" = dict(kernels)
         self._cache: "dict[tuple, Any]" = {}
         self._build_futures: "dict[tuple, Future]" = {}
+        # Hot-path caches: geometry-kwarg names per kernel (inspect.signature
+        # once, not per launch) and bound callables per (name, grid, block).
+        self._geo_params: "dict[str, tuple[bool, bool]]" = {}
+        self._bound_cache: "dict[tuple, Callable]" = {}
         self.gid = agas.registry.register(
             self, agas.Placement(device.key, device.jax_device.process_index), kind="program"
         )
@@ -93,22 +104,40 @@ class Program:
 
     # -- build (async runtime compilation) -------------------------------------
 
+    def _geometry_of(self, name: str) -> "tuple[bool, bool]":
+        """(accepts_grid, accepts_block) — computed once per kernel."""
+        geo = self._geo_params.get(name)
+        if geo is None:
+            params = inspect.signature(self._kernels[name]).parameters
+            geo = self._geo_params[name] = ("grid" in params, "block" in params)
+        return geo
+
     def _bind(self, name: str, grid, block) -> Callable:
+        """Bound callable for (kernel, normalized grid/block), cached."""
+        grid_n, block_n = _normalize_dim(grid), _normalize_dim(block)
+        bkey = (name, grid_n, block_n)
+        bound = self._bound_cache.get(bkey)
+        if bound is not None:
+            return bound
         fn = self._kernels[name]
-        params = inspect.signature(fn).parameters
+        has_grid, has_block = self._geometry_of(name)
         kwargs = {}
-        if "grid" in params:
-            kwargs["grid"] = _normalize_dim(grid)
-        if "block" in params:
-            kwargs["block"] = _normalize_dim(block)
+        if has_grid:
+            kwargs["grid"] = grid_n
+        if has_block:
+            kwargs["block"] = block_n
         if kwargs:
             bound = lambda *args: fn(*args, **kwargs)  # noqa: E731
             bound.__name__ = name
-            return bound
-        return fn
+        else:
+            bound = fn
+        self._bound_cache[bkey] = bound
+        return bound
 
     def _key(self, name: str, specs, grid, block) -> tuple:
-        sig = tuple((tuple(s.shape), str(s.dtype)) for s in specs)
+        # np.dtype objects are interned and hashable — hashing them directly
+        # beats building str(dtype) per spec on every launch.
+        sig = tuple((s.shape, s.dtype) for s in specs)
         return (name, sig, _normalize_dim(grid), _normalize_dim(block))
 
     def build(self, name: str, *specs, grid=None, block=None) -> Future:
@@ -155,7 +184,7 @@ class Program:
         block=None,
         out: "Sequence[Buffer] | None" = None,
         sync: str = "ready",
-    ) -> Future:
+    ):
         """Launch kernel ``name`` with buffer/array ``args`` (async).
 
         ``out``: buffers to receive the kernel's results (CUDA's mutate-
@@ -163,13 +192,25 @@ class Program:
         Without ``out`` the future resolves to the raw result arrays.
         ``sync="ready"`` resolves at device completion (CUDA-event
         semantics); ``sync="dispatch"`` resolves at submission.
+
+        Inside a ``repro.core.graph.capture()`` region the launch is
+        *recorded*, not executed: the return value is then the graph node
+        (symbolic handle), and execution happens at ``replay()``.
         """
+        from repro.core.graph import current_graph
+
+        g = current_graph()
+        if g is not None:
+            return g.run(self, args, name, grid=grid, block=block, out=out)
+
         home = self.device
 
         # Percolation: move foreign buffers to the program's device first.
-        moved: "dict[int, Future]" = {}
+        moved: "dict[int, Future] | None" = None
         for i, a in enumerate(args):
             if isinstance(a, Buffer) and a.device is not home:
+                if moved is None:
+                    moved = {}
                 moved[i] = a.copy_to(home)
 
         specs = [a.array() if isinstance(a, Buffer) else a for a in args]
@@ -177,8 +218,9 @@ class Program:
 
         def _launch(compiled, *resolved_args):
             arg_list = list(args)
-            for i, b in zip(moved.keys(), resolved_args):
-                arg_list[i] = b
+            if moved:
+                for i, b in zip(moved.keys(), resolved_args):
+                    arg_list[i] = b
             vals = [a.array() if isinstance(a, Buffer) else a for a in arg_list]
             res = compiled(*vals)
             if out is None:
@@ -196,14 +238,15 @@ class Program:
         # executable is already cached and nothing percolates, submit the
         # launch directly (one hop) — this keeps the layer overhead at the
         # paper's "negligible" level. Slow path: dataflow joins the futures.
-        if not moved and build_fut.done():
+        if moved is None and build_fut.done():
             launched = home.ops_queue.submit(_launch, build_fut.get())
         else:
 
             def _enqueue(compiled, *resolved):
                 return home.ops_queue.submit(_launch, compiled, *resolved).get()
 
-            launched = dataflow(_enqueue, build_fut, *moved.values(), name=f"run:{name}")
+            deps = moved.values() if moved else ()
+            launched = dataflow(_enqueue, build_fut, *deps, name=f"run:{name}")
 
         if sync == "dispatch":
             return launched

@@ -1,3 +1,27 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+"""Kernel packages, each with a Pallas kernel, a jit'd op and a pure-jnp
+oracle.  ``all_kernels()`` aggregates every package's ``KERNELS`` registry
+(the ``Program.from_file`` / graph-capture launch surface) lazily, so
+importing ``repro.kernels`` stays cheap."""
+from __future__ import annotations
+
+import importlib
+
+_PACKAGES = ("flash_attention", "mandelbrot", "partition_map", "ssd_scan", "stencil")
+
+
+def all_kernels() -> "dict[str, callable]":
+    """name -> callable over every kernel package's KERNELS registry
+    (qualified as ``<package>.<kernel>`` on collision, bare otherwise)."""
+    out: "dict[str, callable]" = {}
+    for pkg in _PACKAGES:
+        mod = importlib.import_module(f"repro.kernels.{pkg}.ops")
+        for name, fn in getattr(mod, "KERNELS", {}).items():
+            key = name if name not in out else f"{pkg}.{name}"
+            out[key] = fn
+    return out
+
+
+__all__ = ["all_kernels"]

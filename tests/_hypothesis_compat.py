@@ -1,0 +1,72 @@
+"""Deterministic fallback for ``hypothesis`` when it isn't installed.
+
+The property tests in this suite use a small subset of the hypothesis API
+(``@settings``, ``@given``, ``st.integers/sampled_from/floats``).  When the
+real library is available it is used (see requirements-dev.txt); when it is
+missing — e.g. the minimal CPU-JAX container — this shim runs each property
+test over a fixed, seeded sample of the strategy space instead of skipping
+it, so tier-1 collection and coverage survive without the dependency.
+"""
+from __future__ import annotations
+
+import random
+from types import SimpleNamespace
+
+# Property sweeps are slower than example tests (Pallas interpret mode);
+# keep the fallback sample count small and deterministic.
+_FALLBACK_EXAMPLES = 3
+_SEED = 0xC0FFEE
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example_for(self, rng: random.Random):
+        return self._draw(rng)
+
+
+def _integers(min_value, max_value):
+    return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def _sampled_from(elements):
+    elems = list(elements)
+    return _Strategy(lambda rng: elems[rng.randrange(len(elems))])
+
+
+def _floats(min_value, max_value):
+    return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+
+strategies = SimpleNamespace(integers=_integers, sampled_from=_sampled_from, floats=_floats)
+
+
+def settings(max_examples=None, deadline=None, **_ignored):
+    def deco(fn):
+        if max_examples is not None:
+            # applied above @given: fn is the given-wrapper
+            fn._fallback_max_examples = min(max_examples, _FALLBACK_EXAMPLES)
+        return fn
+
+    return deco
+
+
+def given(**strats):
+    def deco(fn):
+        # NOTE: no functools.wraps — pytest must see the (*args, **kwargs)
+        # signature, not the wrapped one, or it would demand fixtures named
+        # after the strategy keys.
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_fallback_max_examples", _FALLBACK_EXAMPLES)
+            rng = random.Random(_SEED)
+            for _ in range(n):
+                drawn = {k: s.example_for(rng) for k, s in strats.items()}
+                fn(*args, **drawn, **kwargs)
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper._fallback_max_examples = _FALLBACK_EXAMPLES
+        return wrapper
+
+    return deco

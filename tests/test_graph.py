@@ -1,0 +1,287 @@
+"""Task-graph capture & fused replay (DESIGN.md §8) + per-op fast paths."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    Dim3,
+    Future,
+    TaskGraph,
+    get_all_devices,
+    get_runtime,
+    make_ready_future,
+    wait_all,
+    when_all,
+    when_any,
+)
+
+
+@pytest.fixture(scope="module")
+def device():
+    devices = get_all_devices(1, 0).get()
+    assert len(devices) >= 1
+    return devices[0]
+
+
+@pytest.fixture()
+def prog(device):
+    return device.create_program(
+        {"double": lambda x: x * 2.0, "inc": lambda x: x + 1.0, "axpy": lambda x, y: x + y},
+        name="graph-test",
+    ).get()
+
+
+def _bufs(device, n, k):
+    return [device.create_buffer(n, np.float32).get() for _ in range(k)]
+
+
+# ---------------------------------------------------------------------------
+# capture -> instantiate -> replay equivalence vs eager Program.run
+# ---------------------------------------------------------------------------
+
+
+def test_builder_replay_matches_eager(device, prog):
+    n = 256
+    host = np.linspace(-1.0, 1.0, n).astype(np.float32)
+
+    # eager chain
+    ebuf = device.create_buffer_from(host).get()
+    etmp, eout = _bufs(device, n, 2)
+    prog.run([ebuf], "double", out=[etmp]).get()
+    prog.run([etmp], "inc", out=[eout]).get()
+    want = eout.enqueue_read_sync()
+
+    # graph chain over the same kernels
+    gbuf, gtmp, gout = _bufs(device, n, 3)
+    g = TaskGraph("chain")
+    g.write(gbuf, host)
+    g.run(prog, [gbuf], "double", out=[gtmp])
+    g.run(prog, [gtmp], "inc", out=[gout])
+    r = g.read(gout)
+    exe = g.instantiate()
+    res = exe.replay().get()
+
+    np.testing.assert_allclose(res[r], want)
+    np.testing.assert_allclose(gout.enqueue_read_sync(), want)
+
+
+def test_capture_context_matches_eager(device, prog):
+    n = 128
+    host = np.arange(n, dtype=np.float32)
+    buf = device.create_buffer_from(host).get()
+    out = _bufs(device, n, 1)[0]
+
+    with device.capture("cap") as g:
+        node = prog.run([buf], "double", out=[out])
+        r = out.enqueue_read()
+    # capture returns graph nodes, not futures
+    assert not isinstance(node, Future) and not isinstance(r, Future)
+
+    exe = g.instantiate()
+    res = exe.replay().get()
+    np.testing.assert_allclose(res[r], host * 2.0)
+
+    # replay is repeatable: extern inputs are never donated
+    res2 = exe.replay().get()
+    np.testing.assert_allclose(res2[r], host * 2.0)
+
+
+def test_graph_fuses_same_device_chain(device, prog):
+    n = 64
+    bufs = _bufs(device, n, 4)
+    g = TaskGraph("fuse4")
+    g.write(bufs[0], np.ones(n, np.float32))
+    g.run(prog, [bufs[0]], "inc", out=[bufs[1]])
+    g.run(prog, [bufs[1]], "inc", out=[bufs[2]])
+    g.run(prog, [bufs[2]], "inc", out=[bufs[3]])
+    g.read(bufs[3])
+    exe = g.instantiate()
+    assert len(exe._segments) == 1  # 3 launches -> 1 fused executable
+    res = exe.replay().get()
+    np.testing.assert_allclose(res.reads[0], np.full(n, 4.0))
+
+
+def test_replay_with_feeds_overrides_write(device, prog):
+    n = 32
+    buf, out = _bufs(device, n, 2)
+    g = TaskGraph("feeds")
+    w = g.write(buf, np.zeros(n, np.float32))
+    g.run(prog, [buf], "inc", out=[out])
+    r = g.read(out)
+    exe = g.instantiate()
+
+    np.testing.assert_allclose(exe.replay().get()[r], 1.0)
+    new = np.full(n, 5.0, np.float32)
+    np.testing.assert_allclose(exe.replay(feeds={w: new}).get()[r], 6.0)
+    # feed by buffer key works too
+    np.testing.assert_allclose(exe.replay(feeds={buf: new * 2}).get()[r], 11.0)
+
+
+def test_graph_respects_grid_block_binding(device):
+    seen = {}
+
+    def k(x, grid=None, block=None):
+        seen["grid"], seen["block"] = grid, block
+        return x * 1.0
+
+    prog = device.create_program({"k": k}, name="gb").get()
+    buf = device.create_buffer_from(np.zeros(4, np.float32)).get()
+    out = device.create_buffer(4, np.float32).get()
+    g = TaskGraph("geo")
+    g.run(prog, [buf], "k", grid=Dim3(2, 1, 1), block=(64, 1, 1), out=[out])
+    g.instantiate().replay().get()
+    assert seen["grid"] == (2, 1, 1)
+    assert seen["block"] == (64, 1, 1)
+
+
+def test_outless_launch_is_fetchable(device, prog):
+    host = np.arange(8, dtype=np.float32)
+    buf = device.create_buffer_from(host).get()
+    g = TaskGraph("outless")
+    node = g.run(prog, [buf], "double")
+    res = g.instantiate().replay().get()
+    np.testing.assert_allclose(np.asarray(res[node]), host * 2.0)
+
+
+# ---------------------------------------------------------------------------
+# buffer-donation safety
+# ---------------------------------------------------------------------------
+
+
+def test_donated_intermediate_not_readable_after_replay(device, prog):
+    n = 64
+    src, tmp, out = _bufs(device, n, 3)
+    src.enqueue_write(0, np.ones(n, np.float32)).get()
+
+    g = TaskGraph("donate")
+    g.run(prog, [src], "double", out=[tmp])   # tmp: graph-internal
+    g.run(prog, [tmp], "inc", out=[out])      # consumed by a later launch
+    g.read(out)
+    exe = g.instantiate()
+    exe.replay().get()
+
+    # tmp's storage went into the fused executable — reads must fail ...
+    with pytest.raises(RuntimeError, match="donated"):
+        tmp.array()
+    with pytest.raises(RuntimeError, match="donated"):
+        tmp.enqueue_read().get()
+
+    # ... until it is written again.
+    tmp.enqueue_write(0, np.zeros(n, np.float32)).get()
+    np.testing.assert_allclose(tmp.enqueue_read_sync(), 0.0)
+
+    # terminal + extern buffers stay live.
+    np.testing.assert_allclose(out.enqueue_read_sync(), 3.0)
+    np.testing.assert_allclose(src.enqueue_read_sync(), 1.0)
+
+
+def test_jax_array_payload_survives_donating_replays(device, prog):
+    import jax.numpy as jnp
+
+    n = 16
+    buf, out = _bufs(device, n, 2)
+    payload = jnp.full((n,), 2.0, jnp.float32)  # adopted by reference
+    g = TaskGraph("payload")
+    g.write(buf, payload)
+    g.run(prog, [buf], "inc", out=[out])
+    r = g.read(out)
+    exe = g.instantiate()
+    for _ in range(3):  # donation must not consume the recorded payload
+        np.testing.assert_allclose(exe.replay().get()[r], 3.0)
+    np.testing.assert_allclose(np.asarray(payload), 2.0)
+
+
+def test_read_sync_rejected_under_capture(device):
+    buf = device.create_buffer_from(np.zeros(4, np.float32)).get()
+    with device.capture("sync-read") as g:
+        with pytest.raises(RuntimeError, match="capture"):
+            buf.enqueue_read_sync()
+    assert g._nodes == []  # the failed sync read recorded nothing
+
+
+def test_frozen_graph_rejects_new_nodes(device, prog):
+    buf = device.create_buffer_from(np.zeros(4, np.float32)).get()
+    g = TaskGraph("frozen")
+    g.run(prog, [buf], "double")
+    g.instantiate()
+    with pytest.raises(RuntimeError, match="frozen"):
+        g.run(prog, [buf], "double")
+
+
+def test_partial_write_rejected_under_capture(device):
+    buf = device.create_buffer(8, np.float32).get()
+    g = TaskGraph("partial")
+    with pytest.raises(NotImplementedError):
+        g.write(buf, np.zeros(3, np.float32), offset=2, count=3)
+
+
+# ---------------------------------------------------------------------------
+# per-op fast paths
+# ---------------------------------------------------------------------------
+
+
+def test_when_all_over_ready_futures_allocates_no_pool_work():
+    rt = get_runtime()
+    submits = []
+    orig = rt.pool.submit
+
+    def counting_submit(*a, **kw):
+        submits.append(a)
+        return orig(*a, **kw)
+
+    rt.pool.submit = counting_submit
+    try:
+        fs = [make_ready_future(i) for i in range(64)]
+        out = when_all(fs)
+        assert out.done()
+        assert out.get() == list(range(64))
+    finally:
+        rt.pool.submit = orig
+    assert submits == []  # zero pool submissions, zero thread hops
+
+
+def test_ready_future_then_runs_inline_and_stays_no_alloc():
+    f = make_ready_future(3)
+    assert f._cf is None  # value mode: no inner concurrent future
+    g = f.then(lambda v: v + 1)
+    assert g.done() and g._cf is None
+    assert g.get() == 4
+
+
+def test_when_any_over_ready_future_is_inline():
+    idx, val = when_any([make_ready_future("a"), make_ready_future("b")]).get()
+    assert (idx, val) == (0, "a")
+
+
+def test_failed_fast_paths_propagate():
+    boom = Future.failed(ValueError("boom"))
+    with pytest.raises(ValueError):
+        when_all([make_ready_future(1), boom]).get()
+    with pytest.raises(ValueError):
+        boom.then(lambda v: v).get()
+
+
+def test_submit_many_preserves_fifo_order():
+    q = get_runtime().queue("test-submit-many")
+    seen = []
+    futs = q.submit_many([(lambda i=i: seen.append(i)) for i in range(64)])
+    wait_all(futs)
+    assert seen == list(range(64))
+    # interleaving with plain submits keeps overall FIFO per enqueue
+    seen.clear()
+    f1 = q.submit_many([lambda: seen.append("a"), lambda: seen.append("b")])
+    f2 = q.submit(lambda: seen.append("c"))
+    wait_all(f1 + [f2])
+    assert seen == ["a", "b", "c"]
+
+
+def test_submit_many_carries_args_and_errors():
+    q = get_runtime().queue("test-submit-many-args")
+    add = lambda a, b: a + b  # noqa: E731
+    boom = lambda: 1 / 0  # noqa: E731
+    f_add, f_boom, f_kw = q.submit_many(
+        [(add, (2, 3)), boom, (add, (1,), {"b": 10})]
+    )
+    assert f_add.get() == 5
+    with pytest.raises(ZeroDivisionError):
+        f_boom.get()
+    assert f_kw.get() == 11

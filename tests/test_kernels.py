@@ -1,10 +1,15 @@
 """Per-kernel validation: Pallas (interpret=True on CPU) vs pure-jnp
-oracle, swept over shapes/dtypes — plus hypothesis property sweeps."""
+oracle, swept over shapes/dtypes — plus hypothesis property sweeps
+(deterministic fallback sweeps when hypothesis isn't installed)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # minimal container: seeded fallback sweeps
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.kernels.flash_attention.kernel import flash_attention_bhsd
 from repro.kernels.flash_attention.ops import flash_attention
@@ -17,6 +22,22 @@ from repro.kernels.ssd_scan.kernel import ssd_scan
 from repro.kernels.ssd_scan.ref import ssd_ref
 from repro.kernels.stencil.kernel import stencil
 from repro.kernels.stencil.ref import stencil_ref
+
+# ---------------------------------------------------------------------------
+# registry surface
+# ---------------------------------------------------------------------------
+
+
+def test_all_kernels_aggregates_every_package():
+    from repro.kernels import all_kernels
+
+    ks = all_kernels()
+    # one representative op per package, all callable
+    for name in ("stencil", "partition_map", "mandelbrot", "flash_attention", "ssd"):
+        assert name in ks and callable(ks[name]), name
+    # aggregation is deterministic (fixed package order)
+    assert list(ks) == list(all_kernels())
+
 
 # ---------------------------------------------------------------------------
 # stencil
