@@ -4,6 +4,11 @@ Each partition of the vector is handled by one device through the SAME
 location-transparent API (``get_all_devices`` + per-device queues) — the
 paper's 2x dual-GPU K80 topology mapped to 4 host devices.
 
+The second section drives the same partition workload through the
+placement scheduler (``Program.run_on_any``, DESIGN.md §9), one row per
+policy, so the 1→4-device scaling curve compares hand placement against
+``static`` / ``round_robin`` / ``least_loaded`` / ``affinity``.
+
 jax fixes the device count at first init, so this benchmark re-execs
 itself in a subprocess with ``--xla_force_host_platform_device_count=4``
 and parses the CSV it prints.
@@ -47,6 +52,32 @@ for m in ms:
         pipeline()
         t = timeit(pipeline, iters=4 if quick else 11)
         print(f"CSVROW,fig6/partition_n{n}_dev{ndev},{t*1e6:.1f},devices={ndev}")
+
+# --- scheduler policies over the same workload (run_on_any) -----------------
+# Inputs are DEVICE-RESIDENT buffers spread round-robin: affinity reads the
+# AGAS placement records and keeps each chunk where its bytes live (zero
+# percolation); the other policies pay the copy whenever they place a chunk
+# away from its home device.
+from repro.core import Scheduler
+n = (2**ms[-1]) * 1024 * 256 // (4 if quick else 1)
+chunks = 8 if quick else 16
+parts = [np.ascontiguousarray(p) for p in
+         np.array_split(np.random.default_rng(0).normal(size=(n,)).astype(np.float32), chunks)]
+bufs = [devices[i % len(devices)].create_buffer_from(p).get() for i, p in enumerate(parts)]
+prog0 = progs[devices[0].key]
+
+for policy in ("static", "round_robin", "least_loaded", "affinity"):
+    sched = Scheduler(devices, policy=policy)
+
+    def pipeline():
+        futs = [prog0.run_on_any([b], "k", scheduler=sched) for b in bufs]
+        wait_all(futs)
+        return [f.get() for f in futs]
+
+    pipeline()  # warm-up: compiles the per-device siblings the policy reaches
+    t = timeit(pipeline, iters=4 if quick else 11)
+    spread = len(sched.stats())  # distinct devices the policy placed on
+    print(f"CSVROW,fig6/policy_{policy}_n{n},{t*1e6:.1f},devices=4;policy={policy};spread={spread}")
 """
 
 
@@ -67,7 +98,9 @@ def run(quick: bool = False):
         if line.startswith("CSVROW,"):
             _, name, us, derived = line.split(",", 3)
             rows.append({"name": name, "s": float(us) / 1e6, "derived": derived})
-    if not rows:
+    if not rows or proc.returncode != 0:
+        # A nonzero exit must surface even when earlier sections already
+        # printed rows (a crash mid-script would otherwise pass silently).
         rows.append(
             {"name": "fig6/FAILED", "s": -1.0, "derived": proc.stderr.strip()[-200:].replace(",", ";")}
         )

@@ -2,8 +2,10 @@
 
 Prints ``name,us_per_call,derived`` CSV rows (paper §5 protocol: 11
 iterations, first discarded, mean of the remaining 10).  The overhead
-module's rows are additionally written to ``BENCH_overhead.json`` so the
-native/futurized/graph gap is tracked in the perf trajectory.
+module's rows are additionally written to ``BENCH_overhead.json`` and the
+fig6 multi-device rows (incl. per-policy scheduler rows) to
+``BENCH_multidevice.json`` so both the native/futurized/graph gap and the
+1→4-device scaling trajectory are tracked per-PR.
 
     PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig3,...]
 """
@@ -40,10 +42,15 @@ def main() -> None:
         try:
             mod = importlib.import_module(modname)
             rows = mod.run(quick=args.quick)
+            # Subprocess-based modules report breakage as a */FAILED data
+            # row; that must fail the driver (and CI), not pass silently.
+            if any(str(r.get("name", "")).endswith("/FAILED") for r in rows):
+                failed += 1
             for r in rows:
                 derived = str(r.get("derived", "")).replace(",", ";")
                 print(f"{r['name']},{r['s'] * 1e6:.1f},{derived}", flush=True)
-            if tag == "overhead":
+            json_out = {"overhead": "BENCH_overhead.json", "fig6": "BENCH_multidevice.json"}.get(tag)
+            if json_out:
                 payload = {
                     "quick": args.quick,
                     "rows": [
@@ -51,7 +58,7 @@ def main() -> None:
                         for r in rows
                     ],
                 }
-                with open("BENCH_overhead.json", "w") as fh:
+                with open(json_out, "w") as fh:
                     json.dump(payload, fh, indent=2)
         except Exception:  # noqa: BLE001
             failed += 1

@@ -13,11 +13,16 @@ Public surface mirrors HPXCL:
     wait_all(futs)                                  # Listing 2, line 38
     prog.run([buf, res, n], "sum", grid=Dim3(1), block=Dim3(32), out=[res]).get()
     result = res.enqueue_read_sync()
+
+Scheduler-routed launches (DESIGN.md §9) drop the explicit device:
+
+    sched = Scheduler(policy="least_loaded")          # or affinity/round_robin
+    prog.run_on_any([buf], "sum", out=[res], scheduler=sched).get()
 """
 from repro.core.agas import GID, Placement, Registry, registry
 from repro.core.buffer import Buffer
-from repro.core.device import Device, get_all_devices
-from repro.core.executor import Runtime, WorkQueue, get_runtime, reset_runtime
+from repro.core.device import Device, Locality, get_all_devices, get_all_localities
+from repro.core.executor import QueueLoad, Runtime, WorkQueue, get_runtime, reset_runtime
 from repro.core.futures import (
     Future,
     FutureState,
@@ -32,6 +37,17 @@ from repro.core.futures import (
 )
 from repro.core.graph import GraphExec, GraphResult, TaskGraph, capture, current_graph
 from repro.core.program import Dim3, Program
+from repro.core.scheduler import (
+    AffinityPolicy,
+    LeastLoadedPolicy,
+    PlacementPolicy,
+    RoundRobinPolicy,
+    Scheduler,
+    StaticPolicy,
+    get_scheduler,
+    make_policy,
+    set_scheduler,
+)
 
 __all__ = [
     "GID",
@@ -40,11 +56,23 @@ __all__ = [
     "registry",
     "Buffer",
     "Device",
+    "Locality",
     "get_all_devices",
+    "get_all_localities",
     "Runtime",
     "WorkQueue",
+    "QueueLoad",
     "get_runtime",
     "reset_runtime",
+    "PlacementPolicy",
+    "StaticPolicy",
+    "RoundRobinPolicy",
+    "LeastLoadedPolicy",
+    "AffinityPolicy",
+    "Scheduler",
+    "get_scheduler",
+    "set_scheduler",
+    "make_policy",
     "Future",
     "FutureState",
     "Promise",

@@ -6,11 +6,19 @@ them location-transparent: moving the backing data to another device only
 updates the placement record, never the handle.  In multi-controller JAX
 the "remote" case is a non-addressable device in ``jax.devices()``; the
 registry does not care which it is.
+
+Scheduler support (DESIGN.md §9): alongside the forward GID map the
+registry maintains a *reverse* index ``device_key -> {GID}`` and a
+per-device resident-bytes counter (fed by ``nbytes`` registration
+metadata).  The ``affinity`` placement policy scores candidate devices
+from these records in O(args) instead of scanning every registration —
+the AGAS placement data is the percolation-avoidance signal.
 """
 from __future__ import annotations
 
 import itertools
 import threading
+import weakref
 from dataclasses import dataclass, field
 from typing import Any, Optional
 
@@ -35,24 +43,70 @@ class Placement:
 
 @dataclass
 class _Record:
-    obj: Any
+    obj: Any  # the object itself, or a weakref.ref to it (weak=True)
     placement: Placement
     kind: str = "object"
     meta: dict = field(default_factory=dict)
+    weak: bool = False
+
+    def target(self) -> Any:
+        return self.obj() if self.weak else self.obj
 
 
 class Registry:
-    """GID -> (object, placement). Thread-safe; one per process."""
+    """GID -> (object, placement). Thread-safe; one per process.
+
+    Registrations may carry ``nbytes=<int>`` metadata; the registry then
+    keeps per-device resident-byte totals in sync across
+    ``register`` / ``update_placement`` / ``unregister``.
+    """
 
     def __init__(self):
         self._counter = itertools.count(1)
         self._records: dict[GID, _Record] = {}
+        self._by_device: dict[str, set[GID]] = {}
+        self._bytes: dict[str, int] = {}
         self._lock = threading.Lock()
 
+    # -- index maintenance (call with lock held) ----------------------------
+
+    def _index_add(self, gid: GID, rec: _Record) -> None:
+        key = rec.placement.device_key
+        self._by_device.setdefault(key, set()).add(gid)
+        nb = rec.meta.get("nbytes", 0)
+        if nb:
+            self._bytes[key] = self._bytes.get(key, 0) + nb
+
+    def _index_remove(self, gid: GID, rec: _Record) -> None:
+        key = rec.placement.device_key
+        gids = self._by_device.get(key)
+        if gids is not None:
+            gids.discard(gid)
+            if not gids:
+                del self._by_device[key]
+        nb = rec.meta.get("nbytes", 0)
+        if nb:
+            left = self._bytes.get(key, 0) - nb
+            if left > 0:
+                self._bytes[key] = left
+            else:
+                self._bytes.pop(key, None)
+
+    # -- core surface -------------------------------------------------------
+
     def register(self, obj: Any, placement: Placement, kind: str = "object", **meta) -> GID:
+        # The registry is an address book, not an owner: objects are held
+        # weakly when possible so a dropped Buffer/Program can be GC'd and
+        # its finalizer can retire this record (HPX AGAS ref-counts; here
+        # the CPython GC plays that role).
+        try:
+            store, weak = weakref.ref(obj), True
+        except TypeError:
+            store, weak = obj, False
         gid = next(self._counter)
         with self._lock:
-            self._records[gid] = _Record(obj, placement, kind, dict(meta))
+            rec = self._records[gid] = _Record(store, placement, kind, dict(meta), weak)
+            self._index_add(gid, rec)
         return gid
 
     def resolve(self, gid: GID) -> Any:
@@ -60,7 +114,10 @@ class Registry:
             rec = self._records.get(gid)
         if rec is None:
             raise KeyError(f"GID {gid} is not registered")
-        return rec.obj
+        obj = rec.target()
+        if obj is None:
+            raise KeyError(f"GID {gid} refers to a collected object")
+        return obj
 
     def placement(self, gid: GID) -> Placement:
         with self._lock:
@@ -74,15 +131,47 @@ class Registry:
             rec = self._records.get(gid)
             if rec is None:
                 raise KeyError(f"GID {gid} is not registered")
+            self._index_remove(gid, rec)
             rec.placement = placement
+            self._index_add(gid, rec)
 
     def unregister(self, gid: GID) -> None:
         with self._lock:
-            self._records.pop(gid, None)
+            rec = self._records.pop(gid, None)
+            if rec is not None:
+                self._index_remove(gid, rec)
 
     def by_kind(self, kind: str) -> "list[tuple[GID, Any]]":
         with self._lock:
-            return [(g, r.obj) for g, r in self._records.items() if r.kind == kind]
+            out = []
+            for g, r in self._records.items():
+                if r.kind != kind:
+                    continue
+                obj = r.target()
+                if obj is not None:
+                    out.append((g, obj))
+            return out
+
+    # -- scheduler queries (reverse index) ----------------------------------
+
+    def gids_on(self, device_key: str, kind: "str | None" = None) -> "list[GID]":
+        """GIDs whose placement is ``device_key`` (optionally one kind)."""
+        with self._lock:
+            gids = self._by_device.get(device_key)
+            if not gids:
+                return []
+            if kind is None:
+                return list(gids)
+            return [g for g in gids if self._records[g].kind == kind]
+
+    def resident_bytes(self, device_key: str) -> int:
+        """Total registered bytes currently placed on ``device_key``."""
+        with self._lock:
+            return self._bytes.get(device_key, 0)
+
+    def resident_bytes_by_device(self) -> "dict[str, int]":
+        with self._lock:
+            return dict(self._bytes)
 
     def __len__(self) -> int:
         with self._lock:

@@ -19,6 +19,8 @@ raise until it is written again (CUDA Graphs' ownership rule).
 """
 from __future__ import annotations
 
+import threading
+import weakref
 from functools import partial
 from typing import Any, Optional
 
@@ -44,6 +46,11 @@ def _flat_slice(src, offset, count):
     return jax.lax.dynamic_slice(src.reshape(-1), (offset,), (count,))
 
 
+# Guards the submit-once of Buffer.free across racing threads; free is
+# rare enough that one process-wide lock beats a lock per buffer.
+_free_lock = threading.Lock()
+
+
 class Buffer:
     """Memory allocated on a specific device; handle is location-transparent."""
 
@@ -56,14 +63,31 @@ class Buffer:
         # True when _array is a caller-owned jax.Array adopted by reference
         # (zero-copy write): its storage must never be donated in place.
         self._aliased: bool = False
+        self._freed: bool = False
+        self._free_future: "Future | None" = None
         self.gid: agas.GID = 0
+        self._finalizer: "weakref.finalize | None" = None
+
+    def _register(self, device) -> None:
+        """AGAS registration with resident-bytes accounting and a GC-safe
+        finalizer: a buffer collected without an explicit ``free()`` still
+        retires its registry record (and its byte count) — registrations
+        must not outlive the data they describe."""
+        self.device = device
+        self.gid = agas.registry.register(
+            self,
+            agas.Placement(device.key, device.jax_device.process_index),
+            kind="buffer",
+            nbytes=self.nbytes,
+        )
+        # Bound args only (gid) — the finalizer must not keep self alive.
+        self._finalizer = weakref.finalize(self, agas.registry.unregister, self.gid)
 
     # -- allocation (runs on the device ops queue) ---------------------------
 
     @staticmethod
     def _allocate(device, shape, dtype, fill) -> "Buffer":
         b = Buffer()
-        b.device = device
         b.shape = (shape,) if isinstance(shape, int) else tuple(shape)
         b.dtype = np.dtype(dtype)
         if fill is None:
@@ -71,9 +95,7 @@ class Buffer:
         else:
             arr = jnp.full(b.shape, fill, dtype=b.dtype)
         b._array = jax.device_put(arr, device.jax_device)
-        b.gid = agas.registry.register(
-            b, agas.Placement(device.key, device.jax_device.process_index), kind="buffer"
-        )
+        b._register(device)
         return b
 
     @property
@@ -197,14 +219,9 @@ class Buffer:
 
         def _land(arr):
             nb = Buffer()
-            nb.device = target_device
             nb.shape, nb.dtype = self.shape, self.dtype
             nb._array = jax.device_put(arr, target_device.jax_device)
-            nb.gid = agas.registry.register(
-                nb,
-                agas.Placement(target_device.key, target_device.jax_device.process_index),
-                kind="buffer",
-            )
+            nb._register(target_device)
             return nb
 
         from repro.core.executor import get_runtime
@@ -218,14 +235,63 @@ class Buffer:
             name=f"copy:gid{self.gid}",
         )
 
+    # -- lifetime --------------------------------------------------------------
+
+    def free(self) -> Future:
+        """Release device storage and retire the AGAS record (async;
+        ``cudaFreeAsync`` analogue — future of None, idempotent).
+
+        The release is submitted to the owning device's ops queue, so
+        operations already enqueued (e.g. a launch reading this buffer)
+        complete against live storage first — freeing after submitting a
+        launch is safe, exactly as ``cudaFree`` after kernel submission.
+        Explicit counterpart of the GC finalizer: the registration and
+        its resident-byte contribution go away at release time instead of
+        collection time, and subsequently enqueued reads raise.
+
+        Every call returns the SAME future (one release is submitted no
+        matter how many threads race), so ``free().get()`` always means
+        "the storage is actually released", never just "someone else
+        asked first".
+        """
+
+        def _release():
+            self._freed = True
+            if self._finalizer is not None:
+                self._finalizer.detach()
+                self._finalizer = None
+            agas.registry.unregister(self.gid)
+            self._array = None
+            self._aliased = False
+
+        with _free_lock:
+            if self._free_future is None:
+                self._free_future = self.device.ops_queue.submit(_release)
+        return self._free_future
+
+    def _rehome(self, device) -> None:
+        """Point the handle at a new owning device (location transparency:
+        the GID is unchanged, only the AGAS placement record moves — the
+        resident-bytes accounting follows the record's nbytes metadata)."""
+        if device is self.device:
+            return
+        self.device = device
+        if not self._freed:
+            agas.registry.update_placement(
+                self.gid, agas.Placement(device.key, device.jax_device.process_index)
+            )
+
     # -- kernel-facing view ---------------------------------------------------
 
     def array(self) -> "jax.Array":
         """Current device-resident value (async; usable as a kernel arg).
 
-        Raises if the buffer's storage was donated to a fused graph
-        executable (graph.replay with donation) and not rewritten since.
+        Raises if the buffer was freed, or if its storage was donated to a
+        fused graph executable (graph.replay with donation) and not
+        rewritten since.
         """
+        if self._freed:
+            raise RuntimeError(f"Buffer gid={self.gid} was freed; its storage is released.")
         if self._array is None and self._donated:
             raise RuntimeError(
                 f"Buffer gid={self.gid} was donated to a fused graph replay; "

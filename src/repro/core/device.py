@@ -13,6 +13,12 @@ of ``jax.devices()``) and exposes HPXCL's surface:
 
 ``get_all_devices(major, minor)`` mirrors the paper's Listing 1: it returns
 a *future* of the device list, filtered by a minimum capability.
+
+Scheduler surface (DESIGN.md §9): ``Device.load()`` exposes the ops-queue
+backlog and ``Device.resident_bytes()`` the AGAS byte total placed here —
+the two signals the ``least_loaded`` and ``affinity`` placement policies
+read.  ``Locality`` groups devices by owning process (HPX locality
+analogue); ``get_all_localities()`` mirrors ``hpx::find_all_localities``.
 """
 from __future__ import annotations
 
@@ -22,10 +28,10 @@ import jax
 import numpy as np
 
 from repro.core import agas
-from repro.core.executor import WorkQueue, get_runtime
+from repro.core.executor import QueueLoad, WorkQueue, get_runtime
 from repro.core.futures import Future
 
-__all__ = ["Device", "get_all_devices", "capability_of"]
+__all__ = ["Device", "Locality", "get_all_devices", "get_all_localities", "capability_of"]
 
 # Pseudo "compute capability" per platform so the Listing-1 signature keeps
 # meaning on TPU/CPU: (major, minor).
@@ -63,11 +69,25 @@ class Device:
         return self.jax_device.platform
 
     @property
+    def process_index(self) -> int:
+        return self.jax_device.process_index
+
+    @property
     def is_local(self) -> bool:
         return self.jax_device.process_index == jax.process_index()
 
     def capability(self) -> "tuple[int, int]":
         return capability_of(self.jax_device)
+
+    # -- scheduler signals --------------------------------------------------
+
+    def load(self) -> QueueLoad:
+        """Ops-queue backlog snapshot (``least_loaded`` input)."""
+        return self.ops_queue.load()
+
+    def resident_bytes(self) -> int:
+        """AGAS-registered bytes currently placed here (``affinity`` input)."""
+        return agas.registry.resident_bytes(self.key)
 
     # -- factory surface (all async, returning futures) ---------------------
 
@@ -141,6 +161,33 @@ class Device:
         return f"Device({self.key}, {where}, gid={self.gid})"
 
 
+class Locality:
+    """One process's worth of devices (the HPX *locality* analogue).
+
+    In multi-controller JAX each participating process owns the devices
+    whose ``process_index`` matches; scheduling across localities is what
+    makes a placement "remote".
+    """
+
+    def __init__(self, process_index: int, devices: "list[Device]"):
+        self.process_index = process_index
+        self.devices = list(devices)
+
+    @property
+    def is_local(self) -> bool:
+        return self.process_index == jax.process_index()
+
+    def __len__(self) -> int:
+        return len(self.devices)
+
+    def __iter__(self):
+        return iter(self.devices)
+
+    def __repr__(self) -> str:
+        where = "local" if self.is_local else "remote"
+        return f"Locality(process={self.process_index}, {where}, {len(self.devices)} device(s))"
+
+
 _device_cache: "dict[str, Device]" = {}
 
 
@@ -150,6 +197,21 @@ def _wrap(jd: "jax.Device") -> Device:
     if dev is None:
         dev = _device_cache[key] = Device(jd)
     return dev
+
+
+def _on_runtime_reset() -> None:
+    """Drop cached devices whose queues died with the old runtime.
+
+    Called by ``executor.reset_runtime``: the cached ``Device``s hold
+    ``WorkQueue``s from the runtime being torn down, so keeping them would
+    make the next ``submit`` raise "WorkQueue ... is shut down".  Their
+    AGAS records are retired too; the next ``get_all_devices`` re-wraps
+    and re-registers every device against the fresh runtime.
+    """
+    devices = list(_device_cache.values())
+    _device_cache.clear()
+    for dev in devices:
+        agas.registry.unregister(dev.gid)
 
 
 def get_all_devices(major: int = 0, minor: int = 0) -> "Future[list[Device]]":
@@ -164,3 +226,17 @@ def get_all_devices(major: int = 0, minor: int = 0) -> "Future[list[Device]]":
         return out
 
     return get_runtime().async_(_discover)
+
+
+def get_all_localities(major: int = 0, minor: int = 0) -> "Future[list[Locality]]":
+    """Group capability-filtered devices by owning process
+    (``hpx::find_all_localities`` analogue); future of the list, ordered
+    by process index with the local locality's devices first within it."""
+
+    def _group() -> "list[Locality]":
+        by_proc: "dict[int, list[Device]]" = {}
+        for dev in get_all_devices(major, minor).get():
+            by_proc.setdefault(dev.process_index, []).append(dev)
+        return [Locality(pi, devs) for pi, devs in sorted(by_proc.items())]
+
+    return get_runtime().async_(_group)

@@ -6,6 +6,13 @@ under the *static* scheduling policy (one queue pinned per device — paper
 one is created per logical device for ordered submission (XLA then overlaps
 the *execution*), plus a shared host pool for continuations, I/O and
 ``async_`` tasks.
+
+Load accounting (DESIGN.md §9): every queue counts submissions and
+completions and tracks how long its worker has been busy, so a placement
+policy (``least_loaded``) can read a real backlog signal off
+``WorkQueue.load()`` instead of guessing.  Counters are monotonically
+increasing; the snapshot is advisory (reads are unsynchronized with the
+worker by design — scheduling decisions tolerate a stale-by-one view).
 """
 from __future__ import annotations
 
@@ -14,11 +21,31 @@ import concurrent.futures as _cf
 import os
 import queue as _queue
 import threading
+import time
+from dataclasses import dataclass
 from typing import Callable, Optional
 
 from repro.core.futures import Future
 
-__all__ = ["WorkQueue", "Runtime", "get_runtime", "reset_runtime"]
+__all__ = ["QueueLoad", "WorkQueue", "Runtime", "get_runtime", "reset_runtime"]
+
+
+@dataclass(frozen=True)
+class QueueLoad:
+    """Snapshot of one queue's backlog (the ``least_loaded`` signal).
+
+    ``depth`` counts submissions not yet completed (queued + running);
+    ``inflight`` is 1 while the worker is inside a task; ``busy_for`` is
+    how long the current task has been running (0.0 when idle) and
+    ``busy_time`` the lifetime total of task execution seconds.
+    """
+
+    depth: int
+    inflight: int
+    busy_for: float
+    busy_time: float
+    submitted: int
+    completed: int
 
 
 class WorkQueue:
@@ -32,6 +59,14 @@ class WorkQueue:
         self.name = name
         self._q: _queue.SimpleQueue = _queue.SimpleQueue()
         self._shutdown = threading.Event()
+        # Load accounting: _submitted is bumped under _count_lock (many
+        # submitter threads); _completed/_busy_* have a single writer (the
+        # worker) and need no lock.
+        self._count_lock = threading.Lock()
+        self._submitted = 0
+        self._completed = 0
+        self._busy_time = 0.0
+        self._busy_since: "float | None" = None
         self._thread = threading.Thread(target=self._loop, name=f"wq:{name}", daemon=True)
         self._thread.start()
 
@@ -45,20 +80,31 @@ class WorkQueue:
                     self._run_one(sub)
             else:
                 self._run_one(item)
+            # Drop the reference while blocked in get(): a worker idling on
+            # an empty queue must not pin its last result (the futures keep
+            # results alive for their owners; the queue should not).
+            del item
 
-    @staticmethod
-    def _run_one(item) -> None:
+    def _run_one(self, item) -> None:
         fut, fn, args, kwargs = item
-        if fut._cf.set_running_or_notify_cancel():
-            try:
-                fut._cf.set_result(fn(*args, **kwargs))
-            except BaseException as e:  # noqa: BLE001
-                fut._cf.set_exception(e)
+        self._busy_since = time.monotonic()
+        try:
+            if fut._cf.set_running_or_notify_cancel():
+                try:
+                    fut._cf.set_result(fn(*args, **kwargs))
+                except BaseException as e:  # noqa: BLE001
+                    fut._cf.set_exception(e)
+        finally:
+            t0, self._busy_since = self._busy_since, None
+            self._busy_time += time.monotonic() - t0
+            self._completed += 1
 
     def submit(self, fn: Callable, *args, **kwargs) -> Future:
         if self._shutdown.is_set():
             raise RuntimeError(f"WorkQueue {self.name} is shut down")
         fut: Future = Future(name=f"{self.name}:{getattr(fn, '__name__', 'task')}")
+        with self._count_lock:
+            self._submitted += 1
         self._q.put((fut, fn, args, kwargs))
         return fut
 
@@ -86,8 +132,25 @@ class WorkQueue:
             futs.append(fut)
             batch.append((fut, fn, args, kwargs))
         if batch:
+            with self._count_lock:
+                self._submitted += len(batch)
             self._q.put(batch)
         return futs
+
+    def load(self) -> QueueLoad:
+        """Advisory backlog snapshot (see module docstring)."""
+        submitted, completed = self._submitted, self._completed
+        since = self._busy_since
+        now = time.monotonic()
+        busy_for = (now - since) if since is not None else 0.0
+        return QueueLoad(
+            depth=max(0, submitted - completed),
+            inflight=1 if since is not None else 0,
+            busy_for=busy_for,
+            busy_time=self._busy_time,
+            submitted=submitted,
+            completed=completed,
+        )
 
     def drain(self) -> None:
         """Block until everything submitted so far has run."""
@@ -144,9 +207,23 @@ def get_runtime() -> Runtime:
 
 
 def reset_runtime() -> None:
-    """Tear down and replace the global runtime (tests)."""
+    """Tear down and replace the global runtime (tests).
+
+    Cached ``Device`` objects hold ``WorkQueue``s owned by the runtime
+    being torn down; leaving them cached means the next ``submit`` hits a
+    dead queue ("WorkQueue ... is shut down").  The device cache and the
+    default scheduler (which holds ``Device`` handles) are therefore
+    dropped with the runtime — the next discovery re-registers devices
+    against the fresh runtime's queues.
+    """
     global _runtime
     with _runtime_lock:
         if _runtime is not None:
             _runtime.shutdown()
         _runtime = None
+    # Local imports: device/scheduler import this module at top level.
+    from repro.core import device as _device
+    from repro.core import scheduler as _scheduler
+
+    _device._on_runtime_reset()
+    _scheduler._on_runtime_reset()

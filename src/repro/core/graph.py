@@ -18,6 +18,15 @@ then replay it with amortized scheduling:
   * ``replay()`` then executes the whole graph with a **single** ops-queue
     hop and a **single** ``Future`` — N launches for the price of one.
 
+Multi-device graphs (DESIGN.md §9): a capture whose launches span devices
+(e.g. recorded through ``Program.run_on_any``) is planned as one fused
+segment per maximal same-device run, with every cross-device SSA edge
+resolved at instantiate into an explicit *transfer step* (the percolation
+analogue, frozen into the plan).  At replay the segments are dispatched to
+their **own** ops queues as soon as their producer segments finish —
+independent segments overlap — and the whole graph still joins through
+**one** future.  Single-device graphs keep the one-hop fast path.
+
 Correspondence: capture <-> ``cudaStreamBeginCapture``; ``GraphExec`` <->
 ``cudaGraphExec_t``; ``replay`` <-> ``cudaGraphLaunch``; feed overrides at
 replay <-> ``cudaGraphExecKernelNodeSetParams``.  It is equally the
@@ -261,7 +270,7 @@ class TaskGraph:
 
 
 class _Segment:
-    __slots__ = ("device", "nodes", "in_syms", "out_syms", "compiled", "donated_ixs")
+    __slots__ = ("device", "nodes", "in_syms", "out_syms", "compiled", "donated_ixs", "transfer_ixs")
 
     def __init__(self, device, nodes):
         self.device = device
@@ -270,6 +279,7 @@ class _Segment:
         self.out_syms: "list[int]" = []
         self.compiled = None
         self.donated_ixs: "tuple[int, ...]" = ()
+        self.transfer_ixs: "tuple[int, ...]" = ()  # input slots fed cross-device
 
 
 class GraphExec:
@@ -291,6 +301,15 @@ class GraphExec:
         if route_dev is None:
             raise ValueError(f"TaskGraph '{graph.name}' is empty")
         self._queue = route_dev.ops_queue
+        # The single-hop path serializes replays through its queue; the
+        # fan-out join/commit runs off-queue, so back-to-back replays of
+        # the same exec must serialize explicitly (buffer commits would
+        # otherwise race between iterations).  A plain Lock: acquired by
+        # the replaying thread, released by whichever thread commits.
+        # The single-hop path holds it only while submitting, and chains
+        # its foreign-extern pre-reads behind _last_replay instead.
+        self._replay_lock = threading.Lock()
+        self._last_replay: "Future | None" = None
         # Placement spans segments AND extern inputs: a graph whose input
         # buffer lives on another device needs the replay-time device_put
         # guard even when all launches share one device.
@@ -298,16 +317,15 @@ class GraphExec:
         placements.update(b.device.jax_device for b in graph._extern.values())
         placements.update(n.buf.device.jax_device for n in self._writes)
         self._multi_device = len(placements) > 1
-        # Extern buffers owned by other devices may have pending ops on
-        # their own queues; replay must drain those before reading, or it
-        # could observe stale contents (the eager path got this ordering
-        # for free by staging on the source queue).
-        foreign = {}
-        for b in graph._extern.values():
-            q = b.device.ops_queue
-            if q is not self._queue:
-                foreign[id(q)] = q
-        self._foreign_queues = list(foreign.values())
+        # NOTE: extern buffers may have pending eager ops on their own
+        # queues, and those queues can CHANGE between replays (percolation
+        # re-homes handles) — so both replay paths read each extern ON its
+        # owning queue, with the read submitted at replay() call time,
+        # BEFORE anything that waits on it.  Queue tasks only ever park on
+        # earlier-submitted work (or pool/compile work that never waits on
+        # queues), which rules out cross-replay deadlock by induction on
+        # submission order: the earliest uncompleted queue task is always
+        # at its queue's head with all its dependencies already complete.
 
     # -- planning ----------------------------------------------------------
 
@@ -356,6 +374,14 @@ class GraphExec:
         self._keep = keep
         self._final_sym = final_sym
 
+        # Fan-out replay when launches span devices: each segment runs on
+        # its own ops queue, joined through one future (DESIGN.md §9).
+        # Fan-out plans execute data-dependency ordered, not capture-
+        # ordered: two segments that both consume a sym may run
+        # CONCURRENTLY, so "last consumer donates" is only safe when a
+        # sym's consumers all sit in one segment.
+        self._fanout = len({seg.device.key for seg in self._segments}) > 1
+
         # Per-segment interface: inputs (consumed, produced earlier) and
         # outputs (produced here, needed later or kept).
         for si, seg in enumerate(self._segments):
@@ -383,12 +409,42 @@ class GraphExec:
                         continue
                     if any(u > si for u in launch_use_segs.get(s, ())):
                         continue
+                    if self._fanout and set(launch_use_segs.get(s, ())) != {si}:
+                        continue  # a concurrent sibling segment also reads it
                     donated.append(pos)
                 seg.donated_ixs = tuple(donated)
 
         self._donated_syms = {
             seg.in_syms[pos] for seg in self._segments for pos in seg.donated_ixs
         }
+
+        # Cross-device edges -> explicit transfer steps (frozen percolation).
+        # prod_dev maps each sym to the device its value materializes on:
+        # externs/writes on their buffer's device, launch results on their
+        # segment's device.  A segment input produced elsewhere gets a
+        # transfer slot, executed on the consuming segment's queue at
+        # replay (device_put at segment head).  _prod_dev also drives the
+        # commit-time re-home of out buffers written on a foreign device.
+        prod_dev: "dict[int, Any]" = {}
+        for s, buf in g._extern.items():
+            prod_dev[s] = buf.device
+        for n in nodes:
+            if isinstance(n, WriteNode):
+                prod_dev[n.sym] = n.buf.device
+        for seg in self._segments:
+            for n in seg.nodes:
+                for s in n.res_syms:
+                    prod_dev[s] = seg.device
+        self._prod_dev = prod_dev
+        self._transfers: "list[tuple[int, str, str]]" = []  # (sym, src, dst)
+        for seg in self._segments:
+            slots = []
+            for pos, s in enumerate(seg.in_syms):
+                src = prod_dev.get(s)
+                if src is not None and src.key != seg.device.key:
+                    slots.append(pos)
+                    self._transfers.append((s, src.key, seg.device.key))
+            seg.transfer_ixs = tuple(slots)
 
     def _compile_segments(self) -> None:
         g = self.graph
@@ -408,61 +464,122 @@ class GraphExec:
 
                 return fused
 
-            specs = [g._sym_spec[s] for s in in_syms]
-            try:
-                # Pin input shardings to the segment's device so replay on a
-                # non-default device doesn't trip compiled-sharding checks.
-                sharding = jax.sharding.SingleDeviceSharding(seg.device.jax_device)
-                specs = [
-                    jax.ShapeDtypeStruct(sp.shape, sp.dtype, sharding=sharding)
-                    for sp in specs
-                ]
-            except (AttributeError, TypeError):  # older jax: default placement
-                pass
+            # Pin input shardings to the segment's device so replay on a
+            # non-default device doesn't trip compiled-sharding checks.
+            from repro.core.program import pin_specs
+
+            specs = pin_specs([g._sym_spec[s] for s in in_syms], seg.device.jax_device)
             jitted = jax.jit(make_fused(), donate_argnums=seg.donated_ixs)
             seg.compiled = jitted.lower(*specs).compile()
 
     # -- replay ------------------------------------------------------------
 
+    def _stage_write(self, n: WriteNode, feeds) -> "tuple[Any, bool]":
+        """Resolve one write node's payload -> (device array on the planned
+        device, adopted-by-reference?).  Shared by both replay paths so
+        feeds/donation semantics cannot diverge."""
+        data = n.data
+        if feeds is not None:
+            data = feeds.get(n, feeds.get(n.buf, data))
+        if data is None:
+            raise ValueError(
+                f"write node for buffer gid={n.buf.gid} has no payload: "
+                "record one at capture or pass feeds={node: data}"
+            )
+        arr = _prepare(n.buf, data, self._prod_dev[n.sym].jax_device)
+        if arr is not data:
+            return arr, False
+        if n.sym in self._donated_syms:
+            # The payload was adopted by reference and this replay will
+            # donate its storage into a fused executable — copy so the
+            # caller's array (and the recorded default) survives for the
+            # next replay.
+            return jnp.array(arr), False
+        return arr, True  # caller-owned storage, by ref
+
+    def _stage_env(self, feeds, pre: "dict[int, Future] | None" = None) -> "tuple[dict[int, Any], set[int]]":
+        """Bind extern inputs and (fed) write payloads to their syms.
+
+        Values are normalized onto the device the *plan* recorded for them
+        (``_prod_dev``): segment executables are device-pinned and the
+        transfer plan is frozen at instantiate, but ``Buffer.device`` can
+        move between replays (percolation re-homes handles) — a moved
+        extern must be brought back to its planned home, not fed as-is.
+        ``pre`` carries futures of externs already being read on their
+        owning queues (foreign buffers); the rest are read directly."""
+        g = self.graph
+        env: "dict[int, Any]" = {}
+        adopted: "set[int]" = set()
+        for s, buf in g._extern.items():
+            if pre is not None and s in pre:
+                env[s] = pre[s].get()  # earlier-submitted: safe to park on
+            else:
+                env[s] = _extern_read(buf, self._prod_dev[s].jax_device)()
+        for n in self._writes:
+            env[n.sym], was_adopted = self._stage_write(n, feeds)
+            if was_adopted:
+                adopted.add(n.sym)
+        return env, adopted
+
+    def _commit(self, env: "dict[int, Any]", adopted: "set[int]", block: bool) -> GraphResult:
+        """Commit buffer states (CUDA Graphs ownership rule): a buffer
+        keeps its final value when that value survived replay (it was
+        materialized and not donated into a fused executable); otherwise
+        its storage is gone and reads must fail.  A buffer whose final
+        value materialized on another device is re-homed to it."""
+        g = self.graph
+        live_vals = []
+        for bid, s in self._final_sym.items():
+            buf = g._buffers[bid]
+            if s in g._extern:
+                if s in self._keep:
+                    live_vals.append(env[s])
+                continue
+            if s in env and s not in self._donated_syms:
+                buf._set_array(env[s], aliased=s in adopted)
+                prod = self._prod_dev.get(s)
+                if prod is not None and prod is not buf.device:
+                    buf._rehome(prod)
+                live_vals.append(env[s])
+            else:
+                buf._invalidate()
+
+        fetches: dict = {}
+        reads: list = []
+        for n in g._nodes:
+            if isinstance(n, ReadNode):
+                val = np.asarray(env[n.sym])
+                fetches[n] = val
+                reads.append(val)
+            elif isinstance(n, LaunchNode) and n.out_bufs is None:
+                vals = [env[s] for s in n.res_syms]
+                fetches[n] = vals[0] if len(vals) == 1 else vals
+                live_vals.extend(vals)
+        if block and live_vals:
+            jax.block_until_ready(live_vals)
+        return GraphResult(fetches, reads)
+
     def replay(self, feeds: "dict | None" = None, sync: str = "ready") -> "Future[GraphResult]":
-        """Execute the whole graph: one ops-queue hop, one ``Future``
+        """Execute the whole graph and resolve **one** ``Future``
         (``cudaGraphLaunch`` analogue).
+
+        Single-device graphs take one ops-queue hop.  Multi-device graphs
+        fan out: each fused segment is dispatched to its own device's ops
+        queue the moment its producer segments finish (cross-device edges
+        run their planned transfer steps first), and all segments join
+        through the single returned future.
 
         ``feeds`` overrides recorded write payloads, keyed by the
         ``WriteNode`` handle or by the target ``Buffer``.  ``sync="ready"``
         resolves at device completion of all kept values (CUDA-event
         semantics); ``sync="dispatch"`` resolves once results are
         submitted (the queue is released immediately)."""
-        g = self.graph
         block = sync == "ready"
+        if self._fanout:
+            return self._replay_fanout(feeds, block)
 
-        def _execute() -> GraphResult:
-            for q in self._foreign_queues:
-                q.drain()  # order extern reads after their devices' pending ops
-            env: "dict[int, Any]" = {}
-            adopted: "set[int]" = set()
-            for s, buf in g._extern.items():
-                env[s] = buf.array()
-            for n in self._writes:
-                data = n.data
-                if feeds is not None:
-                    data = feeds.get(n, feeds.get(n.buf, data))
-                if data is None:
-                    raise ValueError(
-                        f"write node for buffer gid={n.buf.gid} has no payload: "
-                        "record one at capture or pass feeds={node: data}"
-                    )
-                arr = _prepare(n.buf, data)
-                if arr is data:
-                    if n.sym in self._donated_syms:
-                        # The payload was adopted by reference and this
-                        # replay will donate its storage into a fused
-                        # executable — copy so the caller's array (and the
-                        # recorded default) survives for the next replay.
-                        arr = jnp.array(arr)
-                    else:
-                        adopted.add(n.sym)  # caller-owned storage, by ref
-                env[n.sym] = arr
+        def _execute(pre) -> GraphResult:
+            env, adopted = self._stage_env(feeds, pre)
             for seg in self._segments:
                 xs = [env[s] for s in seg.in_syms]
                 if self._multi_device:
@@ -471,57 +588,164 @@ class GraphExec:
                 outs = seg.compiled(*xs)
                 for s, v in zip(seg.out_syms, outs):
                     env[s] = v
+            return self._commit(env, adopted, block)
 
-            # Commit buffer states (CUDA Graphs ownership rule): a buffer
-            # keeps its final value when that value survived replay (it was
-            # materialized and not donated into a fused executable);
-            # otherwise its storage is gone and reads must fail.
-            live_vals = []
-            for bid, s in self._final_sym.items():
-                buf = g._buffers[bid]
-                if s in g._extern:
-                    if s in self._keep:
-                        live_vals.append(env[s])
-                    continue
-                if s in env and s not in self._donated_syms:
-                    buf._set_array(env[s], aliased=s in adopted)
-                    live_vals.append(env[s])
-                else:
-                    buf._invalidate()
+        # Foreign externs: reads submitted NOW on their owning queues
+        # (resolved per replay — a re-homed buffer reads on its current
+        # queue), ordered after pending eager ops there AND behind the
+        # previous replay of this exec (pipelined replays must not read
+        # an extern before the prior commit rebinds it).  _execute and
+        # the reads only park on earlier-submitted work (deadlock-freedom
+        # note in __init__); the lock is held for submission only.
+        with self._replay_lock:
+            pre: "dict[int, Future]" = {}
+            prev = self._last_replay
+            for s, buf in self.graph._extern.items():
+                q = buf.device.ops_queue
+                if q is not self._queue:
+                    pre[s] = q.submit(
+                        _extern_read(buf, self._prod_dev[s].jax_device, after=prev)
+                    )
+            launched = self._queue.submit(_execute, pre)
+            self._last_replay = launched
+        return launched
 
-            fetches: dict = {}
-            reads: list = []
-            for n in g._nodes:
-                if isinstance(n, ReadNode):
-                    val = np.asarray(env[n.sym])
-                    fetches[n] = val
-                    reads.append(val)
-                elif isinstance(n, LaunchNode) and n.out_bufs is None:
-                    vals = [env[s] for s in n.res_syms]
-                    fetches[n] = vals[0] if len(vals) == 1 else vals
-                    live_vals.extend(vals)
-            if block and live_vals:
-                jax.block_until_ready(live_vals)
-            return GraphResult(fetches, reads)
+    def _replay_fanout(self, feeds, block: bool) -> "Future[GraphResult]":
+        """Concurrent multi-device replay.
 
-        return self._queue.submit(_execute)
+        Everything queue-bound is submitted synchronously, in capture
+        order, from the calling thread — extern reads on their owning
+        queues, then one task per segment on its own queue — so the
+        WorkQueue submission-ordering contract holds exactly as on the
+        single-hop path: eager work submitted after ``replay()`` returns
+        runs after the replay's work on that device.  A segment task
+        parks its worker on its producers' futures (the same discipline
+        eager launches use for pending builds); progress is guaranteed
+        because producers are always capture-earlier, hence ahead on
+        their queues.  Join + buffer commit run on the host pool and
+        resolve the single returned future.
+        """
+        from repro.core.executor import get_runtime
+        from repro.core.futures import Promise, when_all
+
+        g = self.graph
+        pool = get_runtime().pool
+        # Serialize whole replays: released by the join task (a Lock may
+        # be released by a different thread than took it).
+        self._replay_lock.acquire()
+        try:
+            sym_futs: "dict[int, Future]" = {}
+            # Extern inputs: read on the owning queue (ordered after any
+            # pending eager ops there), normalized to the planned device.
+            for s, buf in g._extern.items():
+                sym_futs[s] = buf.device.ops_queue.submit(
+                    _extern_read(buf, self._prod_dev[s].jax_device)
+                )
+
+            # Write payloads: host data, no queue ordering needed — one
+            # pool task prepares them and resolves per-sym promises.
+            adopted: "set[int]" = set()
+            wpromises = {n.sym: Promise(name=f"write:{n.sym}") for n in self._writes}
+            for s, p in wpromises.items():
+                sym_futs[s] = p.get_future()
+
+            def _stage_writes():
+                pending = dict(wpromises)
+                try:
+                    for n in self._writes:
+                        arr, was_adopted = self._stage_write(n, feeds)
+                        if was_adopted:
+                            adopted.add(n.sym)
+                        pending.pop(n.sym).set_value(arr)
+                except BaseException as e:  # noqa: BLE001
+                    for p in pending.values():
+                        p.set_exception(e)
+
+            pool.submit(_stage_writes)
+
+            # Segments: submitted NOW, in capture order, each parked on
+            # its producers (extern reads / write promises / earlier
+            # segments' outputs — all ahead of it on their queues).
+            seg_futs = []
+            for seg in self._segments:
+                deps = [sym_futs[s] for s in seg.in_syms]
+
+                def _parked(seg=seg, deps=deps):
+                    return _segment_runner(seg)(*[d.get() for d in deps])
+
+                fut = seg.device.ops_queue.submit(_parked)
+                seg_futs.append(fut)
+                for i, s in enumerate(seg.out_syms):
+                    sym_futs[s] = fut.then(lambda outs, i=i: outs[i], executor="inline")
+        except BaseException:
+            self._replay_lock.release()
+            raise
+
+        def _join_and_commit() -> GraphResult:
+            try:
+                when_all(seg_futs, name=f"join:{g.name}").get()  # first failure propagates
+                env = {s: f.get() for s, f in sym_futs.items()}
+                return self._commit(env, adopted, block)
+            finally:
+                self._replay_lock.release()
+
+        return Future.from_concurrent(pool.submit(_join_and_commit), name=f"replay:{g.name}")
 
     __call__ = replay
 
     def __repr__(self) -> str:
         nseg = len(self._segments)
         nk = sum(len(s.nodes) for s in self._segments)
-        return f"GraphExec({self.graph.name}: {nk} launches -> {nseg} fused segment(s))"
+        nt = len(self._transfers)
+        mode = "fan-out" if self._fanout else "single-hop"
+        return (
+            f"GraphExec({self.graph.name}: {nk} launches -> {nseg} fused segment(s), "
+            f"{nt} transfer(s), {mode})"
+        )
 
 
-def _prepare(buf: Buffer, data):
-    """Feed payload -> device array matching the buffer (zero-copy when the
-    payload already conforms)."""
+def _extern_read(buf: Buffer, jd, after: "Future | None" = None):
+    """Task reading an extern buffer's current value, normalized onto the
+    planned device ``jd`` (submitted to the buffer's owning queue so it
+    orders after pending eager ops there).  ``after`` orders the read
+    behind a previous replay of the same exec (always an earlier-submitted
+    task, so parking on it preserves the deadlock-freedom discipline)."""
+
+    def _read():
+        if after is not None:
+            after.wait()
+        arr = buf.array()
+        return arr if arr.devices() == {jd} else jax.device_put(arr, jd)
+
+    return _read
+
+
+def _segment_runner(seg: "_Segment"):
+    """Executable for one fan-out dispatch: run the segment's planned
+    transfer steps (cross-device SSA edges -> device_put onto this
+    segment's device), then its fused executable."""
+    jd = seg.device.jax_device
+
+    def _run_segment(*xs):
+        if seg.transfer_ixs:
+            xs = list(xs)
+            for i in seg.transfer_ixs:
+                x = xs[i]
+                if not isinstance(x, jax.Array) or x.devices() != {jd}:
+                    xs[i] = jax.device_put(x, jd)
+        return seg.compiled(*xs)
+
+    return _run_segment
+
+
+def _prepare(buf: Buffer, data, jd):
+    """Feed payload -> device array matching the buffer on ``jd`` (the
+    planned device; zero-copy when the payload already conforms)."""
     if isinstance(data, jax.Array) and data.shape == buf.shape and data.dtype == buf.dtype:
-        if data.devices() == {buf.device.jax_device}:
+        if data.devices() == {jd}:
             return data
-        return jax.device_put(data, buf.device.jax_device)
+        return jax.device_put(data, jd)
     src = np.asarray(data)
     if src.shape != buf.shape or src.dtype != buf.dtype:
         src = src.reshape(buf.shape).astype(buf.dtype)
-    return jax.device_put(src, buf.device.jax_device)
+    return jax.device_put(src, jd)

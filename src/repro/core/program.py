@@ -14,7 +14,15 @@ launch geometry, DESIGN.md §2).
 
 Percolation: ``run`` executes where the program's device is; argument
 buffers living on other devices are first moved there with async copies
-(futures), never blocking the caller.
+(futures), never blocking the caller.  Executables are pinned to the
+program's device (input shardings fixed at lowering), so a launch really
+runs *there*, not wherever XLA's default placement lands.
+
+``run_on_any`` (DESIGN.md §9) is the scheduler-routed launch: a placement
+policy picks the device, the program's per-device *sibling* (same kernels,
+compiled for that device — the paper's "any kernel on any device") runs
+it, and argument percolation plus ``out``-buffer re-homing happen
+automatically.  This is §3 percolation done by policy instead of by hand.
 
 Hot-path notes (DESIGN.md §8): signature inspection is done once per
 kernel (``inspect.signature`` costs ~10 µs — far more than a queue hop),
@@ -27,6 +35,7 @@ from __future__ import annotations
 
 import importlib.util
 import inspect
+import weakref
 from dataclasses import dataclass
 from typing import Any, Callable, Optional, Sequence
 
@@ -48,6 +57,26 @@ class Dim3:
 
     def as_tuple(self) -> "tuple[int, int, int]":
         return (self.x, self.y, self.z)
+
+
+def pin_specs(specs, jax_device) -> list:
+    """``ShapeDtypeStruct``s with shardings pinned to one device.
+
+    Pinned lowering is what makes a launch execute where its program (or
+    graph segment) lives instead of on XLA's default device; older jax
+    without sharding-carrying specs falls back to default placement.
+    Shared by ``Program.build`` and graph segment compilation so the
+    compat behavior cannot diverge between the two launch paths.
+    """
+    specs = [
+        s if isinstance(s, jax.ShapeDtypeStruct) else jax.ShapeDtypeStruct(s.shape, s.dtype)
+        for s in specs
+    ]
+    try:
+        sharding = jax.sharding.SingleDeviceSharding(jax_device)
+        return [jax.ShapeDtypeStruct(sp.shape, sp.dtype, sharding=sharding) for sp in specs]
+    except (AttributeError, TypeError):  # older jax: default placement
+        return specs
 
 
 def _normalize_dim(d) -> "tuple[int, ...] | None":
@@ -77,9 +106,14 @@ class Program:
         # once, not per launch) and bound callables per (name, grid, block).
         self._geo_params: "dict[str, tuple[bool, bool]]" = {}
         self._bound_cache: "dict[tuple, Callable]" = {}
+        # Per-device sibling programs (run_on_any targets), device.key -> Program.
+        self._siblings: "dict[str, Program]" = {}
         self.gid = agas.registry.register(
             self, agas.Placement(device.key, device.jax_device.process_index), kind="program"
         )
+        # GC-safe AGAS retirement (same leak fix as Buffer): the registry
+        # must not pin dead programs forever.
+        self._finalizer = weakref.finalize(self, agas.registry.unregister, self.gid)
 
     # -- construction ---------------------------------------------------------
 
@@ -101,6 +135,22 @@ class Program:
 
     def kernel_names(self) -> "list[str]":
         return sorted(self._kernels)
+
+    def for_device(self, device) -> "Program":
+        """This program's sibling on ``device`` (cached; self if home).
+
+        Siblings share the kernel sources but keep their own compile
+        caches — the "any kernel on any device" half of run_on_any: the
+        same source percolates to whatever device the policy picks and is
+        runtime-compiled there (NVRTC-per-device analogue).
+        """
+        if device is self.device or device.key == self.device.key:
+            return self
+        sib = self._siblings.get(device.key)
+        if sib is None:
+            sib = Program(device, self._kernels, name=f"{self.name}@{device.key}")
+            sib = self._siblings.setdefault(device.key, sib)  # racing creator loses
+        return sib
 
     # -- build (async runtime compilation) -------------------------------------
 
@@ -162,10 +212,11 @@ class Program:
             compiled = self._cache.get(key)
             if compiled is None:
                 bound = self._bind(name, grid, block)
-                arg_specs = [
-                    jax.ShapeDtypeStruct(s.shape, s.dtype) if not isinstance(s, jax.ShapeDtypeStruct) else s
-                    for s in specs
-                ]
+                # Device-pinned lowering: a launch must execute where the
+                # program lives (the paper's placement contract) — without
+                # this, run_on_any siblings would all compile for device 0
+                # and the scheduler would place nothing.
+                arg_specs = pin_specs(specs, self.device.jax_device)
                 compiled = jax.jit(bound).lower(*arg_specs).compile()
                 self._cache[key] = compiled
             return compiled
@@ -221,7 +272,15 @@ class Program:
             if moved:
                 for i, b in zip(moved.keys(), resolved_args):
                     arg_list[i] = b
-            vals = [a.array() if isinstance(a, Buffer) else a for a in arg_list]
+            jd = home.jax_device
+            vals = []
+            for a in arg_list:
+                v = a.array() if isinstance(a, Buffer) else a
+                # Executables are device-pinned (see build): host values and
+                # stragglers the percolation pass didn't cover land here.
+                if not isinstance(v, jax.Array) or v.devices() != {jd}:
+                    v = jax.device_put(v, jd)
+                vals.append(v)
             res = compiled(*vals)
             if out is None:
                 return res
@@ -232,21 +291,35 @@ class Program:
                 )
             for b, v in zip(out, res_list):
                 b._set_array(v)
+                # Results live where they were computed; the handle follows
+                # (location transparency: AGAS placement moves, GID doesn't).
+                b._rehome(home)
             return list(out)
 
-        # Order: (copies, build) -> ops-queue launch. Fast path: when the
-        # executable is already cached and nothing percolates, submit the
-        # launch directly (one hop) — this keeps the layer overhead at the
-        # paper's "negligible" level. Slow path: dataflow joins the futures.
-        if moved is None and build_fut.done():
-            launched = home.ops_queue.submit(_launch, build_fut.get())
+        # Order: (copies, build) -> ops-queue launch.  Non-percolating
+        # launches enqueue on the ops queue *now* — compiled executables
+        # run with one hop, uncompiled ones park the queue worker on the
+        # build future (the compile queue never depends on the ops queue,
+        # so this cannot deadlock).  Eager enqueue keeps the queue's depth
+        # an honest load signal at submission time (DESIGN.md §9): the
+        # scheduler sees a launch the moment it is placed, not after its
+        # kernel finishes compiling.  (Head-of-line blocking during a cold
+        # compile is accepted: per-device queues are in-order streams, and
+        # a parked worker is exactly the backlog the signal should show.)
+        # Percolating launches must not block
+        # the worker (the copy lands *on this queue*), so they join via
+        # dataflow off-queue; their depth shows up when the copy resolves.
+        if moved is None:
+            if build_fut.done():
+                launched = home.ops_queue.submit(_launch, build_fut.get())
+            else:
+                launched = home.ops_queue.submit(lambda: _launch(build_fut.get()))
         else:
 
             def _enqueue(compiled, *resolved):
                 return home.ops_queue.submit(_launch, compiled, *resolved).get()
 
-            deps = moved.values() if moved else ()
-            launched = dataflow(_enqueue, build_fut, *deps, name=f"run:{name}")
+            launched = dataflow(_enqueue, build_fut, *moved.values(), name=f"run:{name}")
 
         if sync == "dispatch":
             return launched
@@ -259,3 +332,30 @@ class Program:
         from repro.core.executor import get_runtime
 
         return launched.then(_ready, executor=get_runtime().pool, name=f"done:{name}")
+
+    def run_on_any(
+        self,
+        args: "Sequence[Buffer | Any]",
+        name: str,
+        grid=None,
+        block=None,
+        out: "Sequence[Buffer] | None" = None,
+        sync: str = "ready",
+        scheduler=None,
+    ):
+        """Launch kernel ``name`` on whatever device the placement policy
+        picks — the paper's "any kernel on any (local or remote) device",
+        with §3 percolation done by policy instead of by hand.
+
+        The scheduler (default: process scheduler, ``least_loaded``)
+        chooses from its fleet; the launch runs through the per-device
+        sibling program, foreign argument buffers percolate over, and
+        ``out`` buffers are re-homed to the chosen device.  Semantics
+        otherwise match ``run`` (works under graph capture too: the node
+        records against the chosen device, giving multi-device graphs).
+        """
+        from repro.core.scheduler import get_scheduler
+
+        sched = scheduler if scheduler is not None else get_scheduler()
+        dev = sched.select(args=args, program=self)
+        return self.for_device(dev).run(args, name, grid=grid, block=block, out=out, sync=sync)

@@ -1,0 +1,261 @@
+"""Locality-aware placement scheduler (DESIGN.md §9).
+
+The paper's headline — "any user defined CUDA kernel can be launched on
+any (local or remote) GPU device" — needs a layer that *chooses* the
+device.  HPXCL leaves placement to the caller; StarPU and Specx showed
+that a task-based runtime earns its keep through pluggable scheduling
+policies sitting between submission and heterogeneous workers.  This
+module is that layer for our runtime: a ``Scheduler`` holds the device
+fleet and a ``PlacementPolicy`` maps each task (its argument buffers) to
+one device.
+
+Policies
+--------
+``static``       pin everything to one device (HPXCL's implicit policy —
+                 the baseline every other policy is measured against).
+``round_robin``  cycle through the fleet regardless of state.
+``least_loaded`` pick the device whose ops queue has the smallest
+                 backlog (``WorkQueue.load()`` depth); ties rotate, so a
+                 blind signal degrades to round-robin, never a pile-up.
+``affinity``     pick the device already holding the most argument bytes
+                 (AGAS placement records / resident-bytes reverse index),
+                 minimizing percolation traffic; load breaks ties.
+
+The policy input is deliberately duck-typed: an argument counts toward
+affinity if it exposes ``device``/``nbytes`` (our ``Buffer``) or is a
+committed ``jax.Array`` — so policies are unit-testable with fakes and
+serve-path fan-out can score raw arrays.
+
+``Program.run_on_any`` routes launches through the default scheduler
+(``get_scheduler()``); serving fan-out (``repro.serving``) and the fig6
+benchmark use the same object, so one placement decision layer sees all
+traffic.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any, Callable, Optional, Sequence
+
+__all__ = [
+    "PlacementPolicy",
+    "StaticPolicy",
+    "RoundRobinPolicy",
+    "LeastLoadedPolicy",
+    "AffinityPolicy",
+    "Scheduler",
+    "get_scheduler",
+    "set_scheduler",
+    "make_policy",
+    "POLICIES",
+]
+
+
+def _arg_home(arg: Any) -> "tuple[str | None, int]":
+    """(device_key, nbytes) of ``arg``'s resident storage, or (None, 0).
+
+    Buffers resolve through their AGAS placement record (the handle may
+    have been re-homed by percolation); committed ``jax.Array``s through
+    their sharding (checked before the duck-typed fallback — a jax.Array
+    has ``.device``/``.nbytes`` too, but its device has no ``.key``).
+    Anything else contributes nothing.
+    """
+    nbytes = getattr(arg, "nbytes", None)
+    if nbytes is None:
+        return None, 0
+    if hasattr(arg, "gid") and getattr(arg, "device", None) is not None:  # Buffer
+        from repro.core import agas
+
+        try:
+            return agas.registry.placement(arg.gid).device_key, int(nbytes)
+        except KeyError:
+            return getattr(arg.device, "key", None), int(nbytes)
+    devices = getattr(arg, "devices", None)
+    if callable(devices):  # committed jax.Array
+        try:
+            keys = {f"{d.platform}:{d.id}" for d in devices()}
+        except Exception:  # noqa: BLE001 - uncommitted/abstract arrays
+            return None, 0
+        if len(keys) == 1:
+            return next(iter(keys)), int(nbytes)
+        return None, 0
+    key = getattr(getattr(arg, "device", None), "key", None)  # duck-typed fake
+    return (key, int(nbytes)) if key is not None else (None, 0)
+
+
+def _load_score(device) -> "tuple[int, float]":
+    l = device.ops_queue.load()
+    return (l.depth, l.busy_time)
+
+
+class PlacementPolicy:
+    """Maps (args, devices) -> one device.  Stateless unless noted."""
+
+    name = "base"
+
+    def select(self, devices: Sequence, args: Sequence = (), program=None):
+        raise NotImplementedError
+
+
+class StaticPolicy(PlacementPolicy):
+    """Everything on one device (HPXCL's hand-placement, as a policy)."""
+
+    name = "static"
+
+    def __init__(self, index: int = 0):
+        self.index = index
+
+    def select(self, devices, args=(), program=None):
+        return devices[self.index % len(devices)]
+
+
+class RoundRobinPolicy(PlacementPolicy):
+    """Cycle through the fleet; stateful (one counter, lock-protected)."""
+
+    name = "round_robin"
+
+    def __init__(self):
+        self._next = 0
+        self._lock = threading.Lock()
+
+    def select(self, devices, args=(), program=None):
+        with self._lock:
+            i = self._next
+            self._next = i + 1
+        return devices[i % len(devices)]
+
+
+class LeastLoadedPolicy(PlacementPolicy):
+    """Smallest ops-queue backlog wins; ties ROTATE through the tied
+    devices (stateful counter), so when the depth signal is blind — e.g.
+    percolating launches enqueue only after their copies resolve — the
+    policy degrades to round-robin spread, never to piling everything on
+    one historically-favored device."""
+
+    name = "least_loaded"
+
+    def __init__(self):
+        self._rr = 0
+        self._lock = threading.Lock()
+
+    def select(self, devices, args=(), program=None):
+        depths = [d.ops_queue.load().depth for d in devices]
+        lo = min(depths)
+        tied = [i for i, depth in enumerate(depths) if depth == lo]
+        with self._lock:
+            pick = tied[self._rr % len(tied)]
+            self._rr += 1
+        return devices[pick]
+
+
+class AffinityPolicy(PlacementPolicy):
+    """Most argument bytes already resident wins (percolation avoidance);
+    among equally-good hosts the least-loaded one is chosen, so a fleet
+    with no resident data degrades to ``least_loaded``."""
+
+    name = "affinity"
+
+    def __init__(self):
+        self._fallback = LeastLoadedPolicy()
+
+    def select(self, devices, args=(), program=None):
+        # Resolve every arg's placement ONCE (one AGAS lookup per arg),
+        # then score devices against the aggregated bytes-per-key map.
+        resident: "dict[str, int]" = {}
+        for a in args:
+            key, nb = _arg_home(a)
+            if key is not None and nb:
+                resident[key] = resident.get(key, 0) + nb
+        if not resident:
+            return self._fallback.select(devices, args=args, program=program)
+
+        def score(dev):
+            depth, busy = _load_score(dev)
+            return (-resident.get(dev.key, 0), depth, busy)
+
+        return min(devices, key=score)
+
+
+POLICIES: "dict[str, Callable[[], PlacementPolicy]]" = {
+    "static": StaticPolicy,
+    "round_robin": RoundRobinPolicy,
+    "least_loaded": LeastLoadedPolicy,
+    "affinity": AffinityPolicy,
+}
+
+
+def make_policy(policy: "str | PlacementPolicy") -> PlacementPolicy:
+    if isinstance(policy, PlacementPolicy):
+        return policy
+    try:
+        return POLICIES[policy]()
+    except KeyError:
+        raise ValueError(f"unknown placement policy {policy!r}; have {sorted(POLICIES)}") from None
+
+
+class Scheduler:
+    """Placement decisions over a device fleet.
+
+    ``devices=None`` discovers the fleet lazily (all devices, Listing 1)
+    on first use, so the default scheduler works before/without explicit
+    setup.  ``select`` returns the chosen ``Device`` and records the
+    decision in per-device placement counters (``stats()``), which the
+    integration tests and fig6 use to verify spread.
+    """
+
+    def __init__(self, devices: "Sequence | None" = None, policy: "str | PlacementPolicy" = "least_loaded"):
+        self.policy = make_policy(policy)
+        self._devices: "list | None" = list(devices) if devices is not None else None
+        self._placements: "dict[str, int]" = {}
+        self._lock = threading.Lock()
+
+    def devices(self) -> list:
+        devs = self._devices
+        if devs is None:
+            from repro.core.device import get_all_devices
+
+            devs = self._devices = list(get_all_devices().get())
+        if not devs:
+            raise RuntimeError("Scheduler has no devices to place on")
+        return devs
+
+    def select(self, args: Sequence = (), program=None):
+        dev = self.policy.select(self.devices(), args=args, program=program)
+        with self._lock:
+            self._placements[dev.key] = self._placements.get(dev.key, 0) + 1
+        return dev
+
+    def stats(self) -> "dict[str, int]":
+        """Placement counts per device key (decision log, not queue state)."""
+        with self._lock:
+            return dict(self._placements)
+
+    def __repr__(self) -> str:
+        n = len(self._devices) if self._devices is not None else "?"
+        return f"Scheduler(policy={self.policy.name}, devices={n})"
+
+
+_default: "Scheduler | None" = None
+_default_lock = threading.Lock()
+
+
+def get_scheduler() -> Scheduler:
+    """Process-default scheduler (lazy fleet discovery, ``least_loaded``)."""
+    global _default
+    if _default is None:
+        with _default_lock:
+            if _default is None:
+                _default = Scheduler()
+    return _default
+
+
+def set_scheduler(sched: "Scheduler | None") -> None:
+    """Replace the process-default scheduler (None restores lazy default)."""
+    global _default
+    with _default_lock:
+        _default = sched
+
+
+def _on_runtime_reset() -> None:
+    """Drop the default scheduler with the runtime: it caches ``Device``
+    handles whose queues died (see ``executor.reset_runtime``)."""
+    set_scheduler(None)

@@ -2,6 +2,12 @@
 
 ``serve_step`` is the unit the decode_* dry-run cells lower: one new token
 against a KV cache of ``seq_len`` (donated, updated in place by XLA).
+
+Batch fan-out (DESIGN.md §9): independent serving batches are routed
+through the placement scheduler — ``route_batches`` asks the policy for a
+device per batch (load for ``least_loaded``, resident bytes for
+``affinity``), percolates the batch there, and runs it on that device's
+ops queue.  ``make_serve_fanout`` specializes this to decode steps.
 """
 from __future__ import annotations
 
@@ -35,3 +41,41 @@ def make_prefill(cfg, plan=None):
         return logits, kv
 
     return prefill
+
+
+def route_batches(fn, batches, scheduler=None, percolate: bool = True):
+    """Fan independent batches across devices via the placement scheduler.
+
+    For each batch (any pytree of arrays) the scheduler picks a device —
+    scoring the batch's leaves, so ``affinity`` keeps cache-resident
+    requests where their bytes already live — the batch is percolated
+    there (``percolate=False`` trusts the caller's placement) and
+    ``fn(batch)`` runs on that device's ops queue.  Returns one future
+    per batch; join with ``repro.core.wait_all``.
+    """
+    from repro.core.scheduler import get_scheduler
+
+    sched = scheduler if scheduler is not None else get_scheduler()
+    futs = []
+    for b in batches:
+        dev = sched.select(args=jax.tree_util.tree_leaves(b))
+
+        def _run(b=b, dev=dev):
+            placed = jax.device_put(b, dev.jax_device) if percolate else b
+            return fn(placed)
+
+        futs.append(dev.ops_queue.submit(_run))
+    return futs
+
+
+def make_serve_fanout(cfg, plan=None):
+    """Scheduler-routed decode: returns ``fanout(requests, scheduler=None)``
+    where each request is a ``(params, cache, tokens, pos)`` tuple; every
+    request decodes one token on the device the policy places it on.
+    Returns one future per request (value: ``(next_tokens, cache)``)."""
+    step = jax.jit(make_serve_step(cfg, plan))
+
+    def fanout(requests, scheduler=None):
+        return route_batches(lambda req: step(*req), requests, scheduler=scheduler)
+
+    return fanout

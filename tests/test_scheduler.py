@@ -1,0 +1,440 @@
+"""Locality-aware scheduler (DESIGN.md §9): placement policies, load
+accounting, AGAS reverse index / resident bytes, buffer lifetime, the
+stale-runtime reset fix, and a forced-8-host-device integration run."""
+import gc
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    QueueLoad,
+    Scheduler,
+    get_all_devices,
+    get_all_localities,
+    get_runtime,
+    get_scheduler,
+    make_policy,
+    registry,
+    reset_runtime,
+    set_scheduler,
+    wait_all,
+)
+from repro.core.scheduler import (
+    AffinityPolicy,
+    LeastLoadedPolicy,
+    RoundRobinPolicy,
+    StaticPolicy,
+)
+
+# ---------------------------------------------------------------------------
+# policy unit tests (duck-typed fakes: policies only read key/ops_queue.load)
+# ---------------------------------------------------------------------------
+
+
+class _FakeQueue:
+    def __init__(self, depth=0, busy_time=0.0):
+        self.depth, self.busy_time = depth, busy_time
+
+    def load(self) -> QueueLoad:
+        return QueueLoad(
+            depth=self.depth,
+            inflight=1 if self.depth else 0,
+            busy_for=0.0,
+            busy_time=self.busy_time,
+            submitted=self.depth,
+            completed=0,
+        )
+
+
+class _FakeDevice:
+    def __init__(self, key, depth=0, busy_time=0.0):
+        self.key = key
+        self.ops_queue = _FakeQueue(depth, busy_time)
+
+    def __repr__(self):
+        return f"_FakeDevice({self.key})"
+
+
+class _FakeBuf:
+    """Affinity arg: anything exposing device + nbytes counts."""
+
+    def __init__(self, device, nbytes):
+        self.device, self.nbytes = device, nbytes
+
+
+def _fleet(n=4):
+    return [_FakeDevice(f"cpu:{i}") for i in range(n)]
+
+
+def test_static_policy_pins_one_device():
+    devs = _fleet()
+    p = StaticPolicy()
+    assert [p.select(devs).key for _ in range(5)] == ["cpu:0"] * 5
+    assert StaticPolicy(index=2).select(devs).key == "cpu:2"
+
+
+def test_round_robin_cycles_through_fleet():
+    devs = _fleet(3)
+    p = RoundRobinPolicy()
+    picked = [p.select(devs).key for _ in range(7)]
+    assert picked == ["cpu:0", "cpu:1", "cpu:2", "cpu:0", "cpu:1", "cpu:2", "cpu:0"]
+
+
+def test_least_loaded_prefers_idle_queue():
+    devs = _fleet(4)
+    devs[0].ops_queue.depth = 3
+    devs[1].ops_queue.depth = 1
+    devs[3].ops_queue.depth = 2
+    assert LeastLoadedPolicy().select(devs).key == "cpu:2"  # the idle one
+
+
+def test_least_loaded_ties_rotate_not_pile_up():
+    devs = _fleet(3)
+    p = LeastLoadedPolicy()
+    # all idle: a blind signal must degrade to round-robin spread
+    assert [p.select(devs).key for _ in range(4)] == ["cpu:0", "cpu:1", "cpu:2", "cpu:0"]
+    devs[1].ops_queue.depth = 2
+    picked = {p.select(devs).key for _ in range(4)}
+    assert picked == {"cpu:0", "cpu:2"}  # the loaded queue is skipped
+
+
+def test_affinity_avoids_percolation():
+    devs = _fleet(4)
+    devs[2].ops_queue.depth = 5  # resident data outweighs load ...
+    args = [_FakeBuf(devs[2], nbytes=1 << 20), _FakeBuf(devs[0], nbytes=16)]
+    assert AffinityPolicy().select(devs, args=args).key == "cpu:2"
+    # ... and with no resident args it degrades to least_loaded
+    devs[2].ops_queue.depth = 5
+    assert AffinityPolicy().select(devs, args=[np.ones(4)]).key == "cpu:0"
+
+
+def test_arg_home_resolves_committed_jax_arrays():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.scheduler import _arg_home
+
+    dev = get_all_devices(1, 0).get()[0]
+    arr = jax.device_put(jnp.ones(16, jnp.float32), dev.jax_device)
+    key, nb = _arg_home(arr)
+    assert key == dev.key and nb == arr.nbytes  # not shadowed by .device/.nbytes
+
+
+def test_make_policy_rejects_unknown():
+    with pytest.raises(ValueError, match="unknown placement policy"):
+        make_policy("fifo")
+    p = RoundRobinPolicy()
+    assert make_policy(p) is p  # instances pass through
+
+
+def test_scheduler_records_placement_stats():
+    devs = _fleet(2)
+    s = Scheduler(devs, policy="round_robin")
+    for _ in range(4):
+        s.select()
+    assert s.stats() == {"cpu:0": 2, "cpu:1": 2}
+
+
+# ---------------------------------------------------------------------------
+# WorkQueue load accounting
+# ---------------------------------------------------------------------------
+
+
+def test_workqueue_load_counts_backlog():
+    import threading
+
+    q = get_runtime().queue("test-load-accounting")
+    assert q.load().depth == 0
+    gate = threading.Event()
+    started = threading.Event()
+
+    def _block():
+        started.set()
+        gate.wait(10)
+
+    f = q.submit(_block)
+    rest = [q.submit(lambda: None) for _ in range(3)]
+    started.wait(10)
+    load = q.load()
+    assert load.depth == 4 and load.inflight == 1 and load.busy_for >= 0.0
+    gate.set()
+    wait_all([f] + rest)
+    load = q.load()
+    assert load.depth == 0 and load.inflight == 0
+    assert load.completed == load.submitted and load.busy_time > 0.0
+
+
+# ---------------------------------------------------------------------------
+# AGAS reverse index, resident bytes, buffer lifetime (leak fix)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture()
+def device():
+    return get_all_devices(1, 0).get()[0]
+
+
+def test_reverse_index_and_resident_bytes(device):
+    base = registry.resident_bytes(device.key)
+    buf = device.create_buffer(256, np.float32).get()
+    assert buf.gid in registry.gids_on(device.key, kind="buffer")
+    assert registry.resident_bytes(device.key) == base + 1024
+    assert device.resident_bytes() == base + 1024
+    buf.free().get()
+    assert registry.resident_bytes(device.key) == base
+    assert buf.gid not in registry.gids_on(device.key)
+
+
+def test_buffer_free_is_terminal_and_idempotent(device):
+    buf = device.create_buffer(8, np.float32).get()
+    buf.free().get()
+    buf.free().get()  # idempotent: second free is a ready no-op
+    with pytest.raises(RuntimeError, match="freed"):
+        buf.array()
+    with pytest.raises(KeyError):
+        registry.resolve(buf.gid)
+
+
+def test_free_is_ordered_after_pending_launches(device):
+    prog = device.create_program({"double": lambda x: x * 2.0}, name="free-order").get()
+    buf = device.create_buffer_from(np.arange(8, dtype=np.float32)).get()
+    fut = prog.run([buf], "double")
+    buf.free()  # queued behind the launch: the launch still reads live storage
+    np.testing.assert_allclose(np.asarray(fut.get()), np.arange(8.0) * 2.0)
+    with pytest.raises(RuntimeError, match="freed"):
+        buf.enqueue_read().get()
+
+
+def test_collected_buffer_unregisters_via_finalizer(device):
+    base_bytes = registry.resident_bytes(device.key)
+    buf = device.create_buffer(512, np.float32).get()
+    gid = buf.gid
+    assert registry.resident_bytes(device.key) == base_bytes + 2048
+    del buf
+    gc.collect()  # may also reap other dead objects' records — assert on gid
+    with pytest.raises(KeyError):
+        registry.resolve(gid)
+    assert gid not in registry.gids_on(device.key)
+    assert registry.resident_bytes(device.key) == base_bytes
+
+
+def test_copy_to_registers_bytes_on_target(device):
+    buf = device.create_buffer_from(np.arange(16, dtype=np.float32)).get()
+    moved = buf.copy_to(device).get()
+    assert moved.gid in registry.gids_on(device.key, kind="buffer")
+    wait_all([moved.free(), buf.free()])
+
+
+# ---------------------------------------------------------------------------
+# localities, default scheduler, run_on_any / route_batches smoke
+# ---------------------------------------------------------------------------
+
+
+def test_localities_group_by_process(device):
+    locs = get_all_localities(1, 0).get()
+    assert len(locs) >= 1
+    local = [l for l in locs if l.is_local]
+    assert local and device in list(local[0])
+
+
+def test_run_on_any_single_device(device):
+    prog = device.create_program({"double": lambda x: x * 2.0}, name="any").get()
+    sched = Scheduler([device], policy="least_loaded")
+    out = device.create_buffer(4, np.float32).get()
+    fut = prog.run_on_any([np.arange(4, dtype=np.float32)], "double", out=[out], scheduler=sched)
+    fut.get()
+    np.testing.assert_allclose(out.enqueue_read_sync(), [0.0, 2.0, 4.0, 6.0])
+    assert sched.stats() == {device.key: 1}
+
+
+def test_route_batches_places_every_batch(device):
+    from repro.serving.serve_step import route_batches
+
+    sched = Scheduler([device], policy="round_robin")
+    batches = [{"x": np.full(4, i, np.float32)} for i in range(3)]
+    futs = route_batches(lambda b: b["x"] * 2.0, batches, scheduler=sched)
+    vals = [np.asarray(f.get()) for f in futs]
+    for i, v in enumerate(vals):
+        np.testing.assert_allclose(v, np.full(4, 2.0 * i))
+    assert sched.stats() == {device.key: 3}
+
+
+def test_default_scheduler_is_process_wide():
+    set_scheduler(None)
+    s1, s2 = get_scheduler(), get_scheduler()
+    assert s1 is s2
+    mine = Scheduler(policy="round_robin")
+    set_scheduler(mine)
+    try:
+        assert get_scheduler() is mine
+    finally:
+        set_scheduler(None)
+
+
+# ---------------------------------------------------------------------------
+# stale-runtime regression (satellite fix): reset must drop cached devices
+# ---------------------------------------------------------------------------
+
+
+def test_reset_runtime_recycles_device_cache():
+    dev = get_all_devices(1, 0).get()[0]
+    dev.create_buffer(4, np.float32).get()  # exercise the old queues
+    old_gid = dev.gid
+    reset_runtime()
+    # the old Device's AGAS record is retired with its queues
+    with pytest.raises(KeyError):
+        registry.resolve(old_gid)
+    # rediscovery binds fresh queues — this used to raise "WorkQueue ...
+    # is shut down" because the cache kept devices of the dead runtime
+    fresh = get_all_devices(1, 0).get()[0]
+    buf = fresh.create_buffer_from(np.arange(4.0, dtype=np.float32)).get()
+    np.testing.assert_allclose(buf.enqueue_read_sync(), np.arange(4.0))
+    # the default scheduler was rebuilt over the fresh fleet too
+    assert get_scheduler().select().ops_queue is fresh.ops_queue
+
+
+# ---------------------------------------------------------------------------
+# integration: 8 forced host devices (re-exec pattern, see
+# test_multidevice_train.py) — spread, least_loaded vs static wall-clock,
+# affinity placement, multi-device graph fan-out replay
+# ---------------------------------------------------------------------------
+
+_CHILD = textwrap.dedent(
+    """
+    import os, time
+    os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=8 "
+                               "--xla_cpu_multi_thread_eigen=false "
+                               + os.environ.get("XLA_FLAGS", ""))
+    import numpy as np
+    import jax
+    from repro.core import Scheduler, TaskGraph, capture, get_all_devices, registry, wait_all
+    from repro.kernels.partition_map.ref import partition_map_ref
+
+    devices = get_all_devices(1, 0).get()
+    assert len(devices) == 8, devices
+
+    # fig6 partition workload, compute-dense variant (iterated map)
+    def k(x):
+        def body(i, v):
+            return partition_map_ref(v) * 0.5 + v * 0.5
+        return jax.lax.fori_loop(0, 32, body, x)
+
+    prog = devices[0].create_program({"k": k}, "partition").get()
+    parts = [np.random.default_rng(i).normal(size=(1 << 17,)).astype(np.float32)
+             for i in range(8)]
+
+    def pipeline(sched):
+        futs = [prog.run_on_any([p], "k", scheduler=sched) for p in parts]
+        wait_all(futs)
+        return [f.get() for f in futs]
+
+    # placement spread: least_loaded fills the whole 8-device fleet
+    sched_ll = Scheduler(devices, policy="least_loaded")
+    pipeline(sched_ll)
+    spread = sched_ll.stats()
+    print("SPREAD", len(spread))
+    assert len(spread) == 8, spread
+
+    # wall-clock: least_loaded must beat static single-device placement.
+    # Timed on a 2-device fleet (a 2-core CI box cannot feed 8 concurrent
+    # queues), interleaved min-of-reps, retried on load spikes — shared
+    # runners must not turn a structural 2x advantage into a flaky red.
+    fleet2 = devices[:2]
+    def time_policy(policy):
+        sched = Scheduler(fleet2, policy=policy)
+        t0 = time.perf_counter()
+        pipeline(sched)
+        return time.perf_counter() - t0
+    time_policy("static"); time_policy("least_loaded")  # warm both routes
+    best = float("inf")
+    for attempt in range(4):
+        t_s = t_l = float("inf")
+        for _ in range(3):  # interleave so load spikes hit both policies
+            t_s = min(t_s, time_policy("static"))
+            t_l = min(t_l, time_policy("least_loaded"))
+        best = min(best, t_l / t_s)
+        print("TIMES", f"{t_s:.4f}", f"{t_l:.4f}", f"best_ratio={best:.3f}")
+        if best < 0.9:
+            break
+    assert best < 1.0, best  # least_loaded beat static in at least one round
+
+    # affinity keeps work where the bytes are (no percolation)
+    target = devices[5]
+    big = target.create_buffer_from(np.ones(1 << 16, np.float32)).get()
+    aff = Scheduler(devices, policy="affinity")
+    out = target.create_buffer(1 << 16, np.float32).get()
+    prog.run_on_any([big], "k", out=[out], scheduler=aff).get()
+    assert aff.stats() == {target.key: 1}, aff.stats()
+    assert registry.placement(out.gid).device_key == target.key
+    print("AFFINITY ok")
+
+    # captured multi-device graph (recorded through run_on_any) replays
+    # through ONE future: per-device fused segments + explicit transfer
+    d0, d1 = devices[0], devices[1]
+    p2 = d0.create_program({"inc": lambda x: x + 1.0, "scale": lambda x: x * 3.0}, "g").get()
+    b_in = d0.create_buffer(16, np.float32).get()
+    t_mid = d0.create_buffer(16, np.float32).get()
+    t_out = d1.create_buffer(16, np.float32).get()
+    rr = Scheduler([d0, d1], policy="round_robin")
+    with capture("xdev") as g:
+        w = b_in.enqueue_write(0, np.ones(16, np.float32))
+        p2.run_on_any([b_in], "inc", out=[t_mid], scheduler=rr)     # -> cpu:0
+        p2.run_on_any([t_mid], "scale", out=[t_out], scheduler=rr)  # -> cpu:1
+        r = t_out.enqueue_read()
+    exe = g.instantiate()
+    assert exe._fanout and len(exe._segments) == 2, repr(exe)
+    assert len(exe._transfers) >= 1, repr(exe)
+    fut = exe.replay()          # ONE future for the whole graph
+    res = fut.get()
+    np.testing.assert_allclose(res[r], np.full(16, 6.0))
+    res2 = exe.replay(feeds={w: np.full(16, 2.0, np.float32)}).get()
+    np.testing.assert_allclose(res2[r], np.full(16, 9.0))
+    assert registry.placement(t_out.gid).device_key == d1.key
+    print("GRAPH", repr(exe))
+
+    # fan-out donation safety: a sym consumed by two segments that may run
+    # CONCURRENTLY (both depend only on the producer) must never be donated
+    a0 = d0.create_buffer(8, np.float32).get()
+    m1 = d0.create_buffer(8, np.float32).get()
+    o1 = d1.create_buffer(8, np.float32).get()
+    o2 = d0.create_buffer(8, np.float32).get()
+    ga = TaskGraph("donate-race")
+    ga.write(a0, np.ones(8, np.float32))
+    ga.run(p2.for_device(d0), [a0], "inc", out=[m1])    # seg 0 (dev0) -> m1
+    ga.run(p2.for_device(d1), [m1], "scale", out=[o1])  # seg 1 (dev1) reads m1
+    ga.run(p2.for_device(d0), [m1], "inc", out=[o2])    # seg 2 (dev0) reads m1 too
+    r1, r2 = ga.read(o1), ga.read(o2)
+    m1_sym = ga._cur[id(m1)]
+    exe_a = ga.instantiate()
+    assert exe_a._fanout and len(exe_a._segments) == 3, repr(exe_a)
+    assert m1_sym not in exe_a._donated_syms  # concurrent readers: no donation
+    res_a = exe_a.replay().get()
+    np.testing.assert_allclose(res_a[r1], np.full(8, 6.0))  # (1+1)*3
+    np.testing.assert_allclose(res_a[r2], np.full(8, 3.0))  # (1+1)+1
+    print("OK")
+    """
+)
+
+
+@pytest.mark.slow
+def test_scheduler_integration_8_host_devices():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src:" + env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, "-c", _CHILD],
+        capture_output=True,
+        text=True,
+        env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        timeout=900,
+    )
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    out = proc.stdout
+    assert "OK" in out and "AFFINITY ok" in out, out
+    # the wall-clock comparison (least_loaded beats static) is asserted in
+    # the child; surface its measurement here for the test log
+    assert any(l.startswith("TIMES") for l in out.splitlines()), out
