@@ -1,0 +1,77 @@
+"""Fig. 7 (extension): remote-launch overhead — local vs loopback vs cluster.
+
+The paper's §5 protocol (``benchmarks/common.timeit``: 11 iterations,
+first discarded) applied to the same registered kernel launched three
+ways:
+
+* ``local``    — ``Program.run`` on this process's device (baseline),
+* ``loopback`` — through a ``LoopbackParcelport`` locality: the full
+  parcel path (encode, action dispatch, reply decode) without process
+  hops — the codec + dispatch cost in isolation,
+* ``cluster``  — through a ``LocalClusterParcelport`` worker process:
+  adds the real IPC hop and cross-process scheduling.
+
+Derived columns report the multiple over the local baseline, so the
+transport tax is tracked per-PR in ``BENCH_remote.json`` alongside the
+futurization (BENCH_overhead) and scaling (BENCH_multidevice) numbers.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import timeit
+
+_KERNEL = "partition_map_ref"
+
+
+def _time_launch(prog, x, iters: int) -> float:
+    def launch():
+        prog.run([x], _KERNEL).get()
+
+    launch()  # warm-up: compile / create remote executables outside the clock
+    return timeit(launch, iters=iters)
+
+
+def run(quick: bool = False):
+    from repro.core import LocalClusterParcelport, LoopbackParcelport, Program, get_all_devices
+    from repro.core.parcel import resolve_kernel
+
+    iters = 4 if quick else 11
+    n = 1 << (12 if quick else 14)
+    x = np.random.default_rng(0).normal(size=(n,)).astype(np.float32)
+    rows = []
+
+    dev = get_all_devices().get()[0]
+    prog = Program(dev, {_KERNEL: resolve_kernel(_KERNEL)}, "fig7")
+    t_local = _time_launch(prog, x, iters)
+    rows.append({"name": f"fig7/local_launch_n{n}", "s": t_local, "derived": "transport=local"})
+
+    loop = LoopbackParcelport(n_localities=1)
+    try:
+        rprog = loop.localities()[0].devices[0].create_program([_KERNEL], name="fig7-loop").get()
+        t_loop = _time_launch(rprog, x, iters)
+        rows.append({
+            "name": f"fig7/loopback_launch_n{n}", "s": t_loop,
+            "derived": f"transport=loopback;x_local={t_loop / t_local:.2f}",
+        })
+    finally:
+        loop.shutdown()
+
+    try:
+        port = LocalClusterParcelport(n_workers=1, heartbeat_timeout=120.0)
+    except Exception as e:  # noqa: BLE001 - no-subprocess environments
+        rows.append({
+            "name": "fig7/FAILED", "s": -1.0,
+            "derived": f"cluster spawn failed: {e}"[:200].replace(",", ";"),
+        })
+        return rows
+    try:
+        cprog = port.localities()[0].devices[0].create_program([_KERNEL], name="fig7-cluster").get()
+        t_cluster = _time_launch(cprog, x, iters)
+        rows.append({
+            "name": f"fig7/cluster_launch_n{n}", "s": t_cluster,
+            "derived": f"transport=cluster;x_local={t_cluster / t_local:.2f}",
+        })
+    finally:
+        port.shutdown()
+    return rows

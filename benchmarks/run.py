@@ -2,10 +2,12 @@
 
 Prints ``name,us_per_call,derived`` CSV rows (paper §5 protocol: 11
 iterations, first discarded, mean of the remaining 10).  The overhead
-module's rows are additionally written to ``BENCH_overhead.json`` and the
+module's rows are additionally written to ``BENCH_overhead.json``, the
 fig6 multi-device rows (incl. per-policy scheduler rows) to
-``BENCH_multidevice.json`` so both the native/futurized/graph gap and the
-1→4-device scaling trajectory are tracked per-PR.
+``BENCH_multidevice.json``, and the fig7 remote-transport rows (local vs
+loopback vs cluster launch) to ``BENCH_remote.json`` so the
+native/futurized/graph gap, the 1→4-device scaling trajectory and the
+parcel-transport tax are all tracked per-PR.
 
     PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig3,...]
 """
@@ -23,6 +25,7 @@ MODULES = [
     ("fig4", "benchmarks.fig4_partition"),
     ("fig5", "benchmarks.fig5_mandelbrot"),
     ("fig6", "benchmarks.fig6_multidevice"),
+    ("fig7", "benchmarks.fig7_remote"),
     ("roofline", "benchmarks.roofline_table"),
 ]
 
@@ -49,7 +52,11 @@ def main() -> None:
             for r in rows:
                 derived = str(r.get("derived", "")).replace(",", ";")
                 print(f"{r['name']},{r['s'] * 1e6:.1f},{derived}", flush=True)
-            json_out = {"overhead": "BENCH_overhead.json", "fig6": "BENCH_multidevice.json"}.get(tag)
+            json_out = {
+                "overhead": "BENCH_overhead.json",
+                "fig6": "BENCH_multidevice.json",
+                "fig7": "BENCH_remote.json",
+            }.get(tag)
             if json_out:
                 payload = {
                     "quick": args.quick,

@@ -1,0 +1,76 @@
+"""Remote launches end-to-end: "any kernel on any (local or remote) device".
+
+Spawns a 2-worker ``LocalClusterParcelport`` (each worker is a separate
+process — a real remote locality with its own JAX runtime and AGAS
+registry), discovers the cluster-wide localities, places a kernel on a
+remote one, overlaps the remote launch with local CPU work, and joins
+everything with one ``wait_all`` — the paper's Listing 2 pattern stretched
+across processes.
+
+    PYTHONPATH=src python examples/remote_launch.py
+"""
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+
+def main():
+    from repro.core import (
+        LocalClusterParcelport,
+        Program,
+        async_,
+        get_all_devices,
+        get_all_localities,
+        wait_all,
+    )
+    from repro.kernels.mandelbrot.ref import mandelbrot_ref
+    from repro.kernels.partition_map.ref import partition_map_ref
+
+    t0 = time.perf_counter()
+    port = LocalClusterParcelport(n_workers=2, heartbeat_timeout=60.0)
+    print(f"cluster up in {time.perf_counter() - t0:.1f}s")
+
+    # 1. discover: local locality + every remote one the port reaches
+    locs = get_all_localities(cluster=port).get()
+    for loc in locs:
+        print(f"  {loc}: {[d.key for d in loc]}")
+    remote = next(l for l in locs if not l.is_local)
+    rdev = remote.devices[0]
+
+    # 2. place a kernel on the remote locality (percolates BY NAME — the
+    #    worker resolves and runtime-compiles it there, NVRTC-style)
+    prog = rdev.create_program(["mandelbrot"], name="mandel").get()
+    t1 = time.perf_counter()
+    remote_fut = prog.run([np.array([256, 256], np.int32)], "mandelbrot")
+
+    # 3. overlap with local CPU work while the remote locality computes
+    local_fut = async_(lambda: float(np.sum(np.asarray(partition_map_ref(
+        np.random.default_rng(0).normal(size=(1 << 16,)).astype(np.float32))))))
+
+    # 4. one barrier for both worlds (hpx::wait_all, Listing 2 l.38)
+    wait_all([remote_fut, local_fut])
+    dt = time.perf_counter() - t1
+    img = np.asarray(remote_fut.get()[0])
+    print(f"remote mandelbrot {img.shape} ({img.dtype}) + local reduce "
+          f"{local_fut.get():.1f} overlapped in {dt * 1e3:.1f} ms")
+
+    # 5. scheduler-routed: run_on_any(cluster=...) lets the percolation
+    #    policy pick the locality (hpx::async(locality, action) by policy)
+    dev = get_all_devices().get()[0]
+    pm = Program(dev, {"partition_map_ref": partition_map_ref}, "pm")
+    sched = port.scheduler()  # percolation policy over local + remote devices
+    futs = [pm.run_on_any([np.full(4096, i, np.float32)], "partition_map_ref",
+                          scheduler=sched) for i in range(8)]
+    wait_all(futs)
+    print(f"run_on_any placements: {sched.stats()}")
+
+    port.shutdown()
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

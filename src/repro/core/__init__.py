@@ -18,10 +18,22 @@ Scheduler-routed launches (DESIGN.md §9) drop the explicit device:
 
     sched = Scheduler(policy="least_loaded")          # or affinity/round_robin
     prog.run_on_any([buf], "sum", out=[res], scheduler=sched).get()
+
+Cluster-wide launches (DESIGN.md §10) drop the explicit *locality*:
+
+    port = LocalClusterParcelport(n_workers=2)        # or LoopbackParcelport
+    prog.run_on_any([buf], "sum", cluster=port).get() # hpx::async(locality, action)
 """
-from repro.core.agas import GID, Placement, Registry, registry
+from repro.core.agas import GID, Placement, Registry, locality_of, registry, set_locality_id
 from repro.core.buffer import Buffer
-from repro.core.device import Device, Locality, get_all_devices, get_all_localities
+from repro.core.device import (
+    Device,
+    Locality,
+    RemoteBuffer,
+    RemoteDevice,
+    get_all_devices,
+    get_all_localities,
+)
 from repro.core.executor import QueueLoad, Runtime, WorkQueue, get_runtime, reset_runtime
 from repro.core.futures import (
     Future,
@@ -36,10 +48,19 @@ from repro.core.futures import (
     when_any,
 )
 from repro.core.graph import GraphExec, GraphResult, TaskGraph, capture, current_graph
-from repro.core.program import Dim3, Program
+from repro.core.parcel import (
+    LocalClusterParcelport,
+    LoopbackParcelport,
+    Parcel,
+    Parcelport,
+    RemoteError,
+    register_kernel,
+)
+from repro.core.program import Dim3, Program, RemoteProgram
 from repro.core.scheduler import (
     AffinityPolicy,
     LeastLoadedPolicy,
+    PercolationPolicy,
     PlacementPolicy,
     RoundRobinPolicy,
     Scheduler,
@@ -54,11 +75,21 @@ __all__ = [
     "Placement",
     "Registry",
     "registry",
+    "locality_of",
+    "set_locality_id",
     "Buffer",
     "Device",
     "Locality",
+    "RemoteDevice",
+    "RemoteBuffer",
     "get_all_devices",
     "get_all_localities",
+    "Parcel",
+    "Parcelport",
+    "LoopbackParcelport",
+    "LocalClusterParcelport",
+    "RemoteError",
+    "register_kernel",
     "Runtime",
     "WorkQueue",
     "QueueLoad",
@@ -69,6 +100,7 @@ __all__ = [
     "RoundRobinPolicy",
     "LeastLoadedPolicy",
     "AffinityPolicy",
+    "PercolationPolicy",
     "Scheduler",
     "get_scheduler",
     "set_scheduler",
@@ -85,6 +117,7 @@ __all__ = [
     "when_any",
     "Dim3",
     "Program",
+    "RemoteProgram",
     "TaskGraph",
     "GraphExec",
     "GraphResult",

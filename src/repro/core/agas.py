@@ -7,6 +7,16 @@ updates the placement record, never the handle.  In multi-controller JAX
 the "remote" case is a non-addressable device in ``jax.devices()``; the
 registry does not care which it is.
 
+Locality-scoped GIDs (DESIGN.md §10): every process is one *locality*;
+parcelport workers call ``set_locality_id`` at startup, and every GID they
+mint carries their locality in its high bits (``locality_of`` recovers
+it).  Cross-locality resolution happens through *proxy records*: when a
+remote object's handle (e.g. ``RemoteBuffer``) arrives here, it registers
+itself under the remote-minted GID via ``register_proxy`` — the same GID
+then resolves on both sides of the wire, to the object on its owner and
+to the proxy everywhere else.  A GID that is neither local nor proxied
+raises a ``KeyError`` naming the owning locality.
+
 Scheduler support (DESIGN.md §9): alongside the forward GID map the
 registry maintains a *reverse* index ``device_key -> {GID}`` and a
 per-device resident-bytes counter (fed by ``nbytes`` registration
@@ -22,9 +32,38 @@ import weakref
 from dataclasses import dataclass, field
 from typing import Any, Optional
 
-__all__ = ["GID", "Placement", "Registry", "registry"]
+__all__ = [
+    "GID",
+    "Placement",
+    "Registry",
+    "registry",
+    "set_locality_id",
+    "get_locality_id",
+    "locality_of",
+]
 
 GID = int
+
+# Locality scoping: GID = (locality_id << _LOC_SHIFT) | sequence.  The
+# parent process is locality 0 (seed-compatible: its GIDs are unchanged);
+# parcelport workers are assigned unique nonzero ids before minting.
+_LOC_SHIFT = 40
+_locality_id = 0
+
+
+def set_locality_id(locality_id: int) -> None:
+    """Declare this process's locality (parcelport workers, at startup)."""
+    global _locality_id
+    _locality_id = int(locality_id)
+
+
+def get_locality_id() -> int:
+    return _locality_id
+
+
+def locality_of(gid: GID) -> int:
+    """The locality that minted ``gid``."""
+    return gid >> _LOC_SHIFT
 
 
 @dataclass(frozen=True)
@@ -103,17 +142,43 @@ class Registry:
             store, weak = weakref.ref(obj), True
         except TypeError:
             store, weak = obj, False
-        gid = next(self._counter)
+        gid = (_locality_id << _LOC_SHIFT) | next(self._counter)
         with self._lock:
             rec = self._records[gid] = _Record(store, placement, kind, dict(meta), weak)
             self._index_add(gid, rec)
         return gid
 
+    def register_proxy(self, obj: Any, gid: GID, placement: Placement, kind: str = "proxy", **meta) -> bool:
+        """Insert a record under a *foreign-minted* GID (cross-locality
+        resolution: the remote object's local proxy answers for its GID).
+        Returns False — and registers nothing — when the GID already
+        resolves here (e.g. loopback transports, where the "remote" object
+        lives in this very registry)."""
+        try:
+            store, weak = weakref.ref(obj), True
+        except TypeError:
+            store, weak = obj, False
+        with self._lock:
+            if gid in self._records:
+                return False
+            rec = self._records[gid] = _Record(store, placement, kind, dict(meta), weak)
+            self._index_add(gid, rec)
+        return True
+
+    def _missing(self, gid: GID) -> KeyError:
+        owner = locality_of(gid)
+        if owner != _locality_id:
+            return KeyError(
+                f"GID {gid} is owned by locality L{owner} and has no proxy here; "
+                "resolve it through a parcelport"
+            )
+        return KeyError(f"GID {gid} is not registered")
+
     def resolve(self, gid: GID) -> Any:
         with self._lock:
             rec = self._records.get(gid)
         if rec is None:
-            raise KeyError(f"GID {gid} is not registered")
+            raise self._missing(gid)
         obj = rec.target()
         if obj is None:
             raise KeyError(f"GID {gid} refers to a collected object")
@@ -123,7 +188,7 @@ class Registry:
         with self._lock:
             rec = self._records.get(gid)
         if rec is None:
-            raise KeyError(f"GID {gid} is not registered")
+            raise self._missing(gid)
         return rec.placement
 
     def update_placement(self, gid: GID, placement: Placement) -> None:

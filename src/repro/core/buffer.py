@@ -210,9 +210,21 @@ class Buffer:
         """Move contents to ``target_device``; future of the *new* Buffer.
         Updates AGAS placement — the percolation primitive.
 
+        A remote target turns the move into explicit transfer parcels:
+        D2H read here, then a ``create_buffer_from`` parcel on the owning
+        locality (future of the new ``RemoteBuffer``).
+
         Not captured by graph regions: inside ``capture()`` this executes
         eagerly (stage cross-device moves before the capture; captured
         launches read whatever device the buffer is on at replay)."""
+        if getattr(target_device, "is_remote_proxy", False):
+            from repro.core.executor import get_runtime
+
+            return self.enqueue_read().then(
+                lambda host: target_device.create_buffer_from(host).get(),
+                executor=get_runtime().pool,
+                name=f"copy:gid{self.gid}",
+            )
 
         def _stage():
             return self.array()  # capture current contents in submission order

@@ -19,9 +19,19 @@ backlog and ``Device.resident_bytes()`` the AGAS byte total placed here —
 the two signals the ``least_loaded`` and ``affinity`` placement policies
 read.  ``Locality`` groups devices by owning process (HPX locality
 analogue); ``get_all_localities()`` mirrors ``hpx::find_all_localities``.
+
+Remote proxies (DESIGN.md §10): ``RemoteDevice``/``RemoteBuffer`` are the
+parcel-backed twins of ``Device``/``Buffer`` — same async surface, but
+``create_buffer`` / ``enqueue_write`` / ``enqueue_read`` / ``free`` (and
+launches, through ``RemoteProgram``) travel as parcels to the owning
+locality and resolve the caller's futures from reply parcels.  A proxy's
+``ops_queue`` is a real local ``WorkQueue``: it orders parcel submission
+per remote device and feeds the same ``load()`` signal the placement
+policies read for local devices.
 """
 from __future__ import annotations
 
+import weakref
 from typing import Any, Callable, Optional
 
 import jax
@@ -31,7 +41,15 @@ from repro.core import agas
 from repro.core.executor import QueueLoad, WorkQueue, get_runtime
 from repro.core.futures import Future
 
-__all__ = ["Device", "Locality", "get_all_devices", "get_all_localities", "capability_of"]
+__all__ = [
+    "Device",
+    "Locality",
+    "RemoteDevice",
+    "RemoteBuffer",
+    "get_all_devices",
+    "get_all_localities",
+    "capability_of",
+]
 
 # Pseudo "compute capability" per platform so the Listing-1 signature keeps
 # meaning on TPU/CPU: (major, minor).
@@ -188,6 +206,256 @@ class Locality:
         return f"Locality(process={self.process_index}, {where}, {len(self.devices)} device(s))"
 
 
+# ---------------------------------------------------------------------------
+# remote proxies (parcel-backed; DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+
+def _release_remote(port, locality_id: int, gid: int, proxied: bool) -> None:
+    """GC finalizer for RemoteBuffer: retire the local proxy record (the
+    resident-bytes accounting must not outlive the handle) and send a
+    best-effort free parcel (never raises — the port or worker may already
+    be gone at collection time)."""
+    if proxied:
+        agas.registry.unregister(gid)
+    try:
+        port.call(locality_id, "free", {"gid": gid})
+    except Exception:  # noqa: BLE001
+        pass
+
+
+class RemoteDevice:
+    """Parcel-backed handle to a device owned by another locality.
+
+    Duck-types ``Device`` everywhere the runtime reads it: ``key``,
+    ``ops_queue``/``compile_queue`` (real local queues — parcel submission
+    order per remote device, and the scheduler's ``load()`` signal),
+    ``load()``, ``resident_bytes()``, ``capability()``, plus ``alive()``
+    (heartbeat-fed; a dead locality is excluded from placement).
+    ``jax_device`` is a *local staging anchor*: values bound for this
+    device are normalized onto it before they are shipped in a parcel.
+    """
+
+    is_remote_proxy = True
+
+    def __init__(self, port, locality_id: int, remote_key: str, platform: str = "cpu",
+                 capability: "tuple[int, int]" = (1, 0)):
+        self._port = port
+        self.locality_id = locality_id
+        self.remote_key = remote_key
+        self.key = f"L{locality_id}/{remote_key}"
+        self._platform = platform
+        self._capability = tuple(capability)
+        self.jax_device = jax.devices()[0]  # staging anchor, not the executor
+        rt = get_runtime()
+        self.ops_queue: WorkQueue = rt.queue(f"parcel-ops:{self.key}")
+        self.compile_queue: WorkQueue = rt.queue(f"parcel-compile:{self.key}")
+        self.gid: agas.GID = agas.registry.register(
+            self, agas.Placement(self.key, locality_id), kind="device"
+        )
+
+    # -- identity ----------------------------------------------------------
+
+    @property
+    def platform(self) -> str:
+        return self._platform
+
+    @property
+    def process_index(self) -> int:
+        return self.locality_id
+
+    @property
+    def is_local(self) -> bool:
+        return False
+
+    def capability(self) -> "tuple[int, int]":
+        return self._capability
+
+    # -- scheduler signals ---------------------------------------------------
+
+    def load(self) -> QueueLoad:
+        return self.ops_queue.load()
+
+    def resident_bytes(self) -> int:
+        return agas.registry.resident_bytes(self.key)
+
+    def alive(self) -> bool:
+        """Heartbeat verdict for the owning locality (scheduler exclusion)."""
+        return self._port.alive(self.locality_id)
+
+    # -- parcel plumbing -----------------------------------------------------
+
+    def _call(self, action: str, **payload) -> "Future":
+        """Send one action parcel, ordered through this device's ops queue
+        (submission order across writes/launches/reads is the stream
+        contract, exactly as for local devices)."""
+        payload.setdefault("device", self.remote_key)
+        port, loc = self._port, self.locality_id
+        if not port.alive(loc):
+            return Future.failed(RuntimeError(
+                f"parcel {action!r} to locality L{loc} failed fast: the locality is dead "
+                "(missed heartbeat or worker exit) and is excluded from placement"
+            ))
+        return self.ops_queue.submit(lambda: port.call_sync(loc, action, payload))
+
+    # -- factory surface -----------------------------------------------------
+
+    def create_buffer(self, shape, dtype=np.float32, fill: Any = None) -> "Future":
+        """Allocate a buffer on the remote locality (async; the
+        ``create_buffer`` action parcel)."""
+        shape_p = list(shape) if isinstance(shape, (tuple, list)) else int(shape)
+        fut = self._call("create_buffer", shape=shape_p, dtype=np.dtype(dtype).str, fill=fill)
+        return fut.then(lambda rep: RemoteBuffer(self, rep["gid"], rep["shape"], rep["dtype"]),
+                        executor="inline")
+
+    def create_buffer_from(self, data) -> "Future":
+        fut = self._call("create_buffer_from", data=np.asarray(data))
+        return fut.then(lambda rep: RemoteBuffer(self, rep["gid"], rep["shape"], rep["dtype"]),
+                        executor="inline")
+
+    def create_program(self, kernels, name: str = "program") -> "Future":
+        """Create a program on the remote locality.  ``kernels`` are
+        *names* (str or list of str) resolved by the remote's kernel
+        registry, or a ``{name: callable}`` dict whose callables stay
+        local as shape-inference shadows (percolation by reference)."""
+        from repro.core.program import RemoteProgram
+
+        return self.compile_queue.submit(lambda: RemoteProgram(self, kernels, name=name))
+
+    # -- graph capture -------------------------------------------------------
+
+    def capture(self, name: str = "captured"):
+        from repro.core.graph import capture as _capture
+
+        return _capture(name)
+
+    # -- synchronization -----------------------------------------------------
+
+    def synchronize(self) -> None:
+        self.ops_queue.drain()
+        self.compile_queue.drain()
+
+    def __repr__(self) -> str:
+        state = "alive" if self.alive() else "DEAD"
+        return f"RemoteDevice({self.key}, {state}, gid={self.gid})"
+
+
+class RemoteBuffer:
+    """Location-transparent handle to a buffer owned by another locality.
+
+    The remote-minted GID is proxied into the local AGAS registry (with
+    ``nbytes``), so placement policies score remote-resident bytes exactly
+    like local ones.  Transfers are parcels: ``enqueue_write`` ships host
+    data out, ``enqueue_read`` brings it back, ``copy_to`` chains the two
+    (the explicit cross-locality percolation move).
+    """
+
+    is_remote_proxy = True
+    is_remote_buffer = True
+
+    def __init__(self, device: RemoteDevice, gid: int, shape, dtype):
+        self.device = device
+        self.gid = gid
+        self.shape = tuple(shape)
+        self.dtype = np.dtype(dtype)
+        self._freed = False
+        self._free_future: "Future | None" = None
+        self._proxied = agas.registry.register_proxy(
+            self, gid, agas.Placement(device.key, device.locality_id),
+            kind="buffer", nbytes=self.nbytes,
+        )
+        self._finalizer = weakref.finalize(
+            self, _release_remote, device._port, device.locality_id, gid, self._proxied
+        )
+
+    @property
+    def size(self) -> int:
+        return int(np.prod(self.shape)) if self.shape else 1
+
+    @property
+    def nbytes(self) -> int:
+        return self.size * self.dtype.itemsize
+
+    # -- async transfer surface ----------------------------------------------
+
+    def enqueue_write(self, offset: int, data, count: "int | None" = None) -> "Future":
+        from repro.core.graph import current_graph
+
+        if current_graph() is not None:
+            raise NotImplementedError(
+                "graph capture writes to local buffers only; stage remote "
+                "transfers outside the capture region (remote buffers may be "
+                "read as extern inputs)"
+            )
+        return self.device._call("enqueue_write", gid=self.gid, offset=offset,
+                                 data=np.asarray(data), count=count)
+
+    def enqueue_read(self, offset: int = 0, count: "int | None" = None) -> "Future":
+        from repro.core.graph import current_graph
+
+        g = current_graph()
+        if g is not None:
+            return g.read(self, offset=offset, count=count)
+        return self.device._call("enqueue_read", gid=self.gid, offset=offset, count=count)
+
+    def enqueue_read_sync(self, offset: int = 0, count: "int | None" = None):
+        from repro.core.graph import current_graph
+
+        if current_graph() is not None:
+            raise RuntimeError(
+                "enqueue_read_sync inside a graph-capture region: the value "
+                "does not exist until replay. Use enqueue_read()."
+            )
+        return self.enqueue_read(offset, count).get()
+
+    def _read_now(self) -> np.ndarray:
+        """Synchronous read bypassing the proxy queue — for callers already
+        running ON this device's ops queue (graph extern reads), where an
+        ``enqueue_read`` would deadlock behind the calling task."""
+        return self.device._port.call_sync(
+            self.device.locality_id,
+            "enqueue_read",
+            {"device": self.device.remote_key, "gid": self.gid, "offset": 0, "count": None},
+        )
+
+    def copy_to(self, target_device) -> "Future":
+        """Percolation across localities: one read parcel here, one write
+        on the target — future of the *new* buffer on ``target_device``."""
+        if target_device is self.device:
+            return Future.ready(self)
+        pool = get_runtime().pool
+        return self.enqueue_read().then(
+            lambda host: target_device.create_buffer_from(host).get(),
+            executor=pool,
+            name=f"copy:gid{self.gid}",
+        )
+
+    # -- lifetime --------------------------------------------------------------
+
+    def free(self) -> "Future":
+        if self._free_future is None:
+            self._freed = True
+            if self._finalizer is not None:
+                self._finalizer.detach()
+                self._finalizer = None
+            if self._proxied:
+                agas.registry.unregister(self.gid)
+            self._free_future = self.device._call("free", gid=self.gid)
+        return self._free_future
+
+    # -- kernel-facing view ----------------------------------------------------
+
+    def array(self):
+        raise RuntimeError(
+            f"RemoteBuffer gid={self.gid} lives on locality "
+            f"L{self.device.locality_id}; its value is not addressable here — "
+            "use enqueue_read() (or launch through a RemoteProgram on that locality)"
+        )
+
+    def __repr__(self) -> str:
+        return f"RemoteBuffer(gid={self.gid}, {self.dtype}{list(self.shape)} @ {self.device.key})"
+
+
 _device_cache: "dict[str, Device]" = {}
 
 
@@ -228,15 +496,23 @@ def get_all_devices(major: int = 0, minor: int = 0) -> "Future[list[Device]]":
     return get_runtime().async_(_discover)
 
 
-def get_all_localities(major: int = 0, minor: int = 0) -> "Future[list[Locality]]":
+def get_all_localities(major: int = 0, minor: int = 0, cluster=None) -> "Future[list[Locality]]":
     """Group capability-filtered devices by owning process
     (``hpx::find_all_localities`` analogue); future of the list, ordered
-    by process index with the local locality's devices first within it."""
+    by process index with the local locality's devices first within it.
+    With ``cluster`` (a ``Parcelport``), the port's remote localities are
+    appended — the cluster-wide discovery surface."""
 
     def _group() -> "list[Locality]":
         by_proc: "dict[int, list[Device]]" = {}
         for dev in get_all_devices(major, minor).get():
             by_proc.setdefault(dev.process_index, []).append(dev)
-        return [Locality(pi, devs) for pi, devs in sorted(by_proc.items())]
+        locs = [Locality(pi, devs) for pi, devs in sorted(by_proc.items())]
+        if cluster is not None:
+            for loc in cluster.localities():
+                devs = [d for d in loc if d.capability() >= (major, minor)]
+                if devs:
+                    locs.append(Locality(loc.process_index, devs))
+        return locs
 
     return get_runtime().async_(_group)

@@ -215,7 +215,17 @@ def reset_runtime() -> None:
     default scheduler (which holds ``Device`` handles) are therefore
     dropped with the runtime — the next discovery re-registers devices
     against the fresh runtime's queues.
+
+    Live parcelports are drained and shut down FIRST: their remote-device
+    proxy queues belong to the runtime being torn down, and their cluster
+    worker *processes* must never outlive the session that spawned them
+    (a leaked worker would survive the test run).
     """
+    import sys
+
+    _parcel = sys.modules.get("repro.core.parcel")
+    if _parcel is not None:  # never import the transport just to reset it
+        _parcel._shutdown_all_ports()
     global _runtime
     with _runtime_lock:
         if _runtime is not None:

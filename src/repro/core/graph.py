@@ -103,9 +103,11 @@ class WriteNode:
 class LaunchNode:
     """Recorded kernel launch."""
 
-    __slots__ = ("program", "kernel", "arg_refs", "out_bufs", "res_syms", "bound", "device")
+    __slots__ = ("program", "kernel", "arg_refs", "out_bufs", "res_syms", "bound", "device",
+                 "grid", "block")
 
-    def __init__(self, program, kernel, arg_refs, out_bufs, res_syms, bound, device):
+    def __init__(self, program, kernel, arg_refs, out_bufs, res_syms, bound, device,
+                 grid=None, block=None):
         self.program = program
         self.kernel = kernel
         self.arg_refs = arg_refs  # list of _SymRef | constant
@@ -113,6 +115,11 @@ class LaunchNode:
         self.res_syms = res_syms  # list[int], one per kernel result
         self.bound = bound  # geometry-bound callable
         self.device = device
+        # Raw geometry, kept for remote-segment plans (a parcel refers to
+        # the kernel by NAME and re-binds geometry on the owning locality;
+        # the local ``bound`` closure never crosses the wire).
+        self.grid = grid
+        self.block = block
 
 
 class ReadNode:
@@ -185,6 +192,11 @@ class TaskGraph:
         """Record a full-buffer H2D write.  ``data`` is the default payload;
         override per replay with ``replay(feeds={node_or_buffer: new_data})``."""
         self._check_mutable()
+        if getattr(buf, "is_remote_buffer", False):
+            raise NotImplementedError(
+                "graph capture writes to local buffers only; stage remote "
+                "transfers outside the capture region"
+            )
         if offset != 0 or (count is not None and count != buf.size):
             raise NotImplementedError(
                 "graph capture supports full-buffer writes only (offset=0); "
@@ -212,6 +224,12 @@ class TaskGraph:
         self._check_mutable()
         if name not in program._kernels:
             raise KeyError(f"no kernel '{name}' in {program.name}")
+        if out is not None and any(getattr(b, "is_remote_buffer", False) for b in out):
+            raise NotImplementedError(
+                "captured graphs write results to local buffers only; a "
+                "remote launch with local out buffers ships the values back "
+                "at replay (remote buffers may still be read as extern inputs)"
+            )
         bound = program._bind(name, grid, block)
         arg_refs: list = []
         shape_args: list = []
@@ -235,7 +253,7 @@ class TaskGraph:
                 self._cur[id(b)] = s
                 self._buffers[id(b)] = b
         node = LaunchNode(program, name, arg_refs, list(out) if out is not None else None,
-                          res_syms, bound, program.device)
+                          res_syms, bound, program.device, grid=grid, block=block)
         self._nodes.append(node)
         return node
 
@@ -400,7 +418,9 @@ class GraphExec:
             ]
             seg.in_syms = in_syms
             seg.out_syms = out_syms
-            if self._donate:
+            # Remote segments never donate: their inputs are shipped in a
+            # parcel, not handed to a local donating executable.
+            if self._donate and not getattr(seg.device, "is_remote_proxy", False):
                 donated = []
                 for pos, s in enumerate(in_syms):
                     if s in g._extern:
@@ -449,6 +469,12 @@ class GraphExec:
     def _compile_segments(self) -> None:
         g = self.graph
         for seg in self._segments:
+            if getattr(seg.device, "is_remote_proxy", False):
+                # A segment living on a remote locality replays as ONE
+                # run_segment parcel: kernel-name plan + input arrays out,
+                # output arrays back (DESIGN.md §10).  No local jit.
+                seg.compiled = _remote_segment_executor(seg)
+                continue
             nodes, in_syms, out_syms = seg.nodes, tuple(seg.in_syms), tuple(seg.out_syms)
 
             def make_fused(nodes=nodes, in_syms=in_syms, out_syms=out_syms):
@@ -538,7 +564,10 @@ class GraphExec:
             if s in env and s not in self._donated_syms:
                 buf._set_array(env[s], aliased=s in adopted)
                 prod = self._prod_dev.get(s)
-                if prod is not None and prod is not buf.device:
+                # A remote producer's value was shipped BACK by the reply
+                # parcel — the buffer's data is local, so it stays home.
+                if (prod is not None and prod is not buf.device
+                        and not getattr(prod, "is_remote_proxy", False)):
                     buf._rehome(prod)
                 live_vals.append(env[s])
             else:
@@ -709,15 +738,80 @@ def _extern_read(buf: Buffer, jd, after: "Future | None" = None):
     planned device ``jd`` (submitted to the buffer's owning queue so it
     orders after pending eager ops there).  ``after`` orders the read
     behind a previous replay of the same exec (always an earlier-submitted
-    task, so parking on it preserves the deadlock-freedom discipline)."""
+    task, so parking on it preserves the deadlock-freedom discipline).
+
+    A remote extern is fetched with a synchronous read parcel
+    (``_read_now``): this task already runs ON the proxy's ops queue, so
+    an ``enqueue_read`` — which would enqueue *behind* this task — must
+    not be used here."""
 
     def _read():
         if after is not None:
             after.wait()
+        if getattr(buf, "is_remote_buffer", False):
+            return jax.device_put(buf._read_now(), jd)
         arr = buf.array()
         return arr if arr.devices() == {jd} else jax.device_put(arr, jd)
 
     return _read
+
+
+def _remote_segment_executor(seg: "_Segment"):
+    """Executable for a segment owned by a remote locality.
+
+    Encodes the segment's launch plan once — kernel names (plus the
+    remote program's GID when the recording program lives on that
+    locality), SSA arg refs, literal args, geometry — and at each call
+    ships it with the input arrays as one ``run_segment`` parcel.  The
+    reply's output arrays are staged onto the local anchor device so
+    downstream segments/transfer steps consume them exactly like locally
+    produced values.  Runs on the proxy's ops queue like any segment, so
+    parcel ordering per remote device is preserved.
+    """
+    from repro.core.program import _normalize_dim
+
+    dev = seg.device
+    plan = []
+    for n in seg.nodes:
+        args = []
+        for a in n.arg_refs:
+            if isinstance(a, _SymRef):
+                args.append(("sym", a.sym))
+            elif isinstance(a, jax.Array):
+                args.append(("val", np.asarray(a)))
+            else:
+                args.append(("val", a))
+        plan.append({
+            "kernel": n.kernel,
+            "args": args,
+            "res": list(n.res_syms),
+            "grid": _normalize_dim(n.grid),
+            "block": _normalize_dim(n.block),
+            "_program": n.program,  # resolved to a GID lazily below
+        })
+    in_syms, out_syms = list(seg.in_syms), list(seg.out_syms)
+
+    def _run_remote(*xs):
+        nodes = []
+        for node in plan:
+            prog = node["_program"]
+            gid_f = getattr(prog, "_remote_gid_f", None)
+            pgid = None
+            if gid_f is not None and getattr(prog.device, "locality_id", None) == dev.locality_id:
+                pgid = gid_f.get()  # create parcel is earlier on this queue
+            wire = {k: v for k, v in node.items() if k != "_program"}
+            wire["program"] = pgid
+            nodes.append(wire)
+        outs = dev._port.call_sync(dev.locality_id, "run_segment", {
+            "device": dev.remote_key,
+            "nodes": nodes,
+            "in_syms": in_syms,
+            "out_syms": out_syms,
+            "inputs": [np.asarray(x) for x in xs],
+        })
+        return tuple(jax.device_put(o, dev.jax_device) for o in outs)
+
+    return _run_remote
 
 
 def _segment_runner(seg: "_Segment"):

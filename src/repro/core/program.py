@@ -40,11 +40,16 @@ from dataclasses import dataclass
 from typing import Any, Callable, Optional, Sequence
 
 import jax
+import numpy as np
 
 from repro.core.buffer import Buffer
 from repro.core.futures import Future, dataflow, when_all
 
-__all__ = ["Dim3", "Program"]
+__all__ = ["Dim3", "Program", "RemoteProgram"]
+
+
+def _is_remote_buffer(a: Any) -> bool:
+    return getattr(a, "is_remote_buffer", False)
 
 
 @dataclass
@@ -148,7 +153,10 @@ class Program:
             return self
         sib = self._siblings.get(device.key)
         if sib is None:
-            sib = Program(device, self._kernels, name=f"{self.name}@{device.key}")
+            if getattr(device, "is_remote_proxy", False):
+                sib = RemoteProgram(device, self._kernels, name=f"{self.name}@{device.key}")
+            else:
+                sib = Program(device, self._kernels, name=f"{self.name}@{device.key}")
             sib = self._siblings.setdefault(device.key, sib)  # racing creator loses
         return sib
 
@@ -217,7 +225,14 @@ class Program:
                 # this, run_on_any siblings would all compile for device 0
                 # and the scheduler would place nothing.
                 arg_specs = pin_specs(specs, self.device.jax_device)
-                compiled = jax.jit(bound).lower(*arg_specs).compile()
+                try:
+                    compiled = jax.jit(bound).lower(*arg_specs).compile()
+                except jax.errors.JAXTypeError:
+                    # Value-dependent kernel (shapes read from argument
+                    # DATA, e.g. mandelbrot's int32[2] size vector): not
+                    # traceable, so it runs eagerly — the NVRTC-refuses-
+                    # to-compile path, degraded to interpretation.
+                    compiled = bound
                 self._cache[key] = compiled
             return compiled
 
@@ -257,14 +272,21 @@ class Program:
         home = self.device
 
         # Percolation: move foreign buffers to the program's device first.
+        # A RemoteBuffer is always foreign to a local program — the move is
+        # then an explicit cross-locality transfer (read parcel + device_put).
         moved: "dict[int, Future] | None" = None
         for i, a in enumerate(args):
-            if isinstance(a, Buffer) and a.device is not home:
+            if (isinstance(a, Buffer) and a.device is not home) or _is_remote_buffer(a):
                 if moved is None:
                     moved = {}
                 moved[i] = a.copy_to(home)
 
-        specs = [a.array() if isinstance(a, Buffer) else a for a in args]
+        specs = [
+            a.array() if isinstance(a, Buffer)
+            else jax.ShapeDtypeStruct(a.shape, a.dtype) if _is_remote_buffer(a)
+            else a
+            for a in args
+        ]
         build_fut = self.build(name, *specs, grid=grid, block=block)
 
         def _launch(compiled, *resolved_args):
@@ -342,6 +364,7 @@ class Program:
         out: "Sequence[Buffer] | None" = None,
         sync: str = "ready",
         scheduler=None,
+        cluster=None,
     ):
         """Launch kernel ``name`` on whatever device the placement policy
         picks — the paper's "any kernel on any (local or remote) device",
@@ -353,9 +376,177 @@ class Program:
         ``out`` buffers are re-homed to the chosen device.  Semantics
         otherwise match ``run`` (works under graph capture too: the node
         records against the chosen device, giving multi-device graphs).
+
+        ``cluster`` (a ``Parcelport``) widens the fleet to every locality
+        the port reaches — ``hpx::async(locality, action)`` as a placement
+        decision: the policy scores the full localities × devices grid
+        (``percolation`` cost model by default), and a remote pick routes
+        the launch through a ``RemoteProgram`` sibling as parcels.
         """
         from repro.core.scheduler import get_scheduler
 
-        sched = scheduler if scheduler is not None else get_scheduler()
+        if scheduler is not None:
+            sched = scheduler
+        elif cluster is not None:
+            sched = cluster.scheduler()
+        else:
+            sched = get_scheduler()
         dev = sched.select(args=args, program=self)
         return self.for_device(dev).run(args, name, grid=grid, block=block, out=out, sync=sync)
+
+
+def _release_remote_program(port, locality_id: int, gid_future: "Future") -> None:
+    """GC finalizer for RemoteProgram: best-effort free parcel so the
+    worker's object table does not grow without bound.  Skips (rather than
+    blocks) when the create reply never arrived."""
+    try:
+        if gid_future.done() and gid_future.exception() is None:
+            port.call(locality_id, "free", {"gid": gid_future.get()})
+    except Exception:  # noqa: BLE001 - teardown is best-effort
+        pass
+
+
+class RemoteProgram(Program):
+    """Proxy for a program owned by a remote locality (DESIGN.md §10).
+
+    Kernels percolate **by name**: construction sends a ``create_program``
+    parcel listing kernel names, which the owning locality resolves
+    through its own registry and runtime-compiles there (the NVRTC-at-the-
+    device analogue, across a process boundary).  The callables kept here
+    are *shadows* — used only for shape inference (``jax.eval_shape``
+    during graph capture) and geometry binding; they never execute
+    locally through this class.
+
+    ``run`` turns into a ``launch`` parcel: locality-resident buffer
+    arguments travel as GID references (zero copy), everything else is
+    read back to the host and shipped inline; ``out`` buffers on the
+    target locality keep results remote, local ``out`` buffers receive
+    the reply arrays.  The reply parcel resolves the returned future —
+    completion on the remote device, i.e. ``sync="ready"`` semantics.
+    """
+
+    def __init__(self, device, kernels, name: str = "program"):
+        from repro.core.parcel import resolve_kernel
+
+        if isinstance(kernels, str):
+            kernels = [kernels]
+        if callable(kernels) and not isinstance(kernels, dict):
+            kernels = {getattr(kernels, "__name__", "kernel"): kernels}
+        elif not isinstance(kernels, dict):
+            kernels = {n: resolve_kernel(n) for n in kernels}
+        super().__init__(device, kernels, name=name)
+        self._remote_gid_f: Future = device._call(
+            "create_program", kernels=list(self._kernels), name=name
+        ).then(lambda rep: rep["gid"], executor="inline")
+        # The owning locality holds its Program strongly in the action
+        # server's object table; retire it when this proxy is collected
+        # (same free parcel as buffers — _do_free pops any GID).
+        self._remote_finalizer = weakref.finalize(
+            self, _release_remote_program, device._port, device.locality_id, self._remote_gid_f
+        )
+
+    def remote_gid(self) -> int:
+        """GID of the program object on the owning locality (blocks on the
+        create reply the first time)."""
+        return self._remote_gid_f.get()
+
+    def build(self, name: str, *specs, grid=None, block=None) -> Future:
+        """Remote runtime compilation (async): ships shape/dtype specs, the
+        owning locality lowers and caches the executable there."""
+        if name not in self._kernels:
+            return Future.failed(KeyError(f"no kernel '{name}' in {self.name}"))
+        spec_p = [(tuple(s.shape), np.dtype(s.dtype).str) for s in specs]
+        dev = self.device
+        port, loc = dev._port, dev.locality_id
+        gid_f = self._remote_gid_f
+        grid_n, block_n = _normalize_dim(grid), _normalize_dim(block)
+
+        def _send():
+            return port.call_sync(loc, "build", {
+                "device": dev.remote_key, "program": gid_f.get(), "kernel": name,
+                "specs": spec_p, "grid": grid_n, "block": block_n,
+            })
+
+        return dev.compile_queue.submit(_send)
+
+    def run(
+        self,
+        args: "Sequence[Buffer | Any]",
+        name: str,
+        grid=None,
+        block=None,
+        out: "Sequence[Buffer] | None" = None,
+        sync: str = "ready",
+    ):
+        from repro.core.graph import current_graph
+
+        g = current_graph()
+        if g is not None:
+            return g.run(self, args, name, grid=grid, block=block, out=out)
+        if name not in self._kernels:
+            return Future.failed(KeyError(f"no kernel '{name}' in {self.name}"))
+
+        dev = self.device
+        port, loc = dev._port, dev.locality_id
+
+        # Argument descriptors: locality-resident buffers go as GID refs;
+        # everything else materializes on the host and ships inline.
+        descs: "list" = [None] * len(args)
+        fetch_ix: "list[int]" = []
+        fetch_futs: "list[Future]" = []
+        for i, a in enumerate(args):
+            if _is_remote_buffer(a) and a.device.locality_id == loc:
+                descs[i] = ("gid", a.gid)
+            elif isinstance(a, Buffer) or _is_remote_buffer(a):
+                fetch_ix.append(i)
+                fetch_futs.append(a.enqueue_read())
+            elif isinstance(a, jax.Array):
+                descs[i] = ("val", np.asarray(a))
+            else:
+                descs[i] = ("val", a)
+
+        if out is None:
+            out_gids, mode = None, "none"
+        elif all(_is_remote_buffer(b) and b.device.locality_id == loc for b in out):
+            out_gids, mode = [b.gid for b in out], "remote"
+        elif all(isinstance(b, Buffer) for b in out):
+            out_gids, mode = None, "local"
+        else:
+            raise ValueError(
+                "out buffers of a remote launch must either all live on the "
+                "target locality (results stay remote) or all be local "
+                "buffers (results ship back)"
+            )
+
+        grid_n, block_n = _normalize_dim(grid), _normalize_dim(block)
+        gid_f = self._remote_gid_f
+
+        def _send(*vals):
+            for i, v in zip(fetch_ix, vals):
+                descs[i] = ("val", np.asarray(v))
+            rep = port.call_sync(loc, "launch", {
+                "device": dev.remote_key, "program": gid_f.get(), "kernel": name,
+                "args": descs, "out": out_gids, "grid": grid_n, "block": block_n,
+            })
+            if mode == "remote":
+                return list(out)
+            if mode == "local":
+                for b, v in zip(out, rep):
+                    b._set_array(jax.device_put(np.asarray(v), b.device.jax_device))
+                return list(out)
+            return rep
+
+        # Ordering: the launch parcel goes through the remote device's ops
+        # queue, after any previously submitted writes there.  Pending host
+        # fetches join off-queue first (same discipline as the percolating
+        # local launch path — a queue worker must not wait on its own queue).
+        if not fetch_futs:
+            return dev.ops_queue.submit(_send)
+        from repro.core.executor import get_runtime
+
+        return dataflow(
+            lambda *vals: dev.ops_queue.submit(lambda: _send(*vals)).get(),
+            *fetch_futs,
+            executor=get_runtime().pool,
+            name=f"remote-run:{name}",
+        )

@@ -20,6 +20,17 @@ Policies
 ``affinity``     pick the device already holding the most argument bytes
                  (AGAS placement records / resident-bytes reverse index),
                  minimizing percolation traffic; load breaks ties.
+``percolation``  score the full ``localities × devices`` grid by the
+                 *bytes that would have to move* if the task ran there —
+                 a cross-locality move (an explicit transfer parcel pair,
+                 DESIGN.md §10) costs a configurable multiple of an
+                 intra-locality copy; load breaks ties.  This is the
+                 cluster-aware generalization of ``affinity``.
+
+Liveness (DESIGN.md §10): devices exposing ``alive()`` (remote proxies,
+fed by the parcelport heartbeat) are excluded from placement while dead —
+a locality whose worker missed its deadline never receives new work, and
+``select`` raises descriptively when the whole fleet is gone.
 
 The policy input is deliberately duck-typed: an argument counts toward
 affinity if it exposes ``device``/``nbytes`` (our ``Buffer``) or is a
@@ -42,12 +53,32 @@ __all__ = [
     "RoundRobinPolicy",
     "LeastLoadedPolicy",
     "AffinityPolicy",
+    "PercolationPolicy",
     "Scheduler",
     "get_scheduler",
     "set_scheduler",
     "make_policy",
+    "locality_of_key",
     "POLICIES",
 ]
+
+
+def locality_of_key(key: "str | None") -> int:
+    """Locality id encoded in a device key (``L3/cpu:0`` -> 3; local
+    keys -> 0)."""
+    if key and key.startswith("L"):
+        head, sep, _ = key.partition("/")
+        if sep:
+            try:
+                return int(head[1:])
+            except ValueError:
+                return 0
+    return 0
+
+
+def _is_alive(device: Any) -> bool:
+    alive = getattr(device, "alive", None)
+    return True if alive is None else bool(alive())
 
 
 def _arg_home(arg: Any) -> "tuple[str | None, int]":
@@ -175,11 +206,51 @@ class AffinityPolicy(PlacementPolicy):
         return min(devices, key=score)
 
 
+class PercolationPolicy(PlacementPolicy):
+    """Minimize percolation traffic over the ``localities × devices`` grid.
+
+    Each candidate device is charged the bytes every argument would have
+    to move to reach it: nothing when the bytes are already there, 1x for
+    an intra-locality copy, ``cross_locality_cost``x when the move crosses
+    a locality boundary (an explicit read-parcel + write-parcel pair over
+    the transport, DESIGN.md §10).  Ties break by queue load; with no
+    resident argument bytes at all the policy degrades to ``least_loaded``.
+    """
+
+    name = "percolation"
+
+    def __init__(self, cross_locality_cost: float = 8.0):
+        self.cross_locality_cost = float(cross_locality_cost)
+        self._fallback = LeastLoadedPolicy()
+
+    def select(self, devices, args=(), program=None):
+        homes: "list[tuple[str, int, int]]" = []
+        for a in args:
+            key, nb = _arg_home(a)
+            if key is not None and nb:
+                homes.append((key, locality_of_key(key), nb))
+        if not homes:
+            return self._fallback.select(devices, args=args, program=program)
+
+        def score(dev):
+            dev_loc = locality_of_key(dev.key)
+            cost = 0.0
+            for key, loc, nb in homes:
+                if key == dev.key:
+                    continue
+                cost += nb * (self.cross_locality_cost if loc != dev_loc else 1.0)
+            depth, busy = _load_score(dev)
+            return (cost, depth, busy)
+
+        return min(devices, key=score)
+
+
 POLICIES: "dict[str, Callable[[], PlacementPolicy]]" = {
     "static": StaticPolicy,
     "round_robin": RoundRobinPolicy,
     "least_loaded": LeastLoadedPolicy,
     "affinity": AffinityPolicy,
+    "percolation": PercolationPolicy,
 }
 
 
@@ -219,7 +290,16 @@ class Scheduler:
         return devs
 
     def select(self, args: Sequence = (), program=None):
-        dev = self.policy.select(self.devices(), args=args, program=program)
+        devs = self.devices()
+        # Heartbeat exclusion: a locality whose worker died takes no new
+        # placements — its devices report alive() False until recovery.
+        live = [d for d in devs if _is_alive(d)]
+        if not live:
+            raise RuntimeError(
+                "Scheduler has no live devices: every locality in the fleet "
+                "is dead (missed heartbeat or worker exit)"
+            )
+        dev = self.policy.select(live, args=args, program=program)
         with self._lock:
             self._placements[dev.key] = self._placements.get(dev.key, 0) + 1
         return dev

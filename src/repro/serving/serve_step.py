@@ -43,7 +43,7 @@ def make_prefill(cfg, plan=None):
     return prefill
 
 
-def route_batches(fn, batches, scheduler=None, percolate: bool = True):
+def route_batches(fn, batches, scheduler=None, percolate: bool = True, cluster=None):
     """Fan independent batches across devices via the placement scheduler.
 
     For each batch (any pytree of arrays) the scheduler picks a device —
@@ -52,17 +52,48 @@ def route_batches(fn, batches, scheduler=None, percolate: bool = True):
     there (``percolate=False`` trusts the caller's placement) and
     ``fn(batch)`` runs on that device's ops queue.  Returns one future
     per batch; join with ``repro.core.wait_all``.
+
+    Cluster fan-out (DESIGN.md §10): with ``cluster`` (a ``Parcelport``)
+    the fleet widens to every remote locality.  A batch placed on a
+    cross-process locality ships as one ``apply`` parcel — which requires
+    ``fn`` to be a registered **kernel name** (str), since a closure
+    cannot cross the process boundary; in-process transports (loopback)
+    and local devices accept callables as before.
     """
+    import numpy as np
+
     from repro.core.scheduler import get_scheduler
 
-    sched = scheduler if scheduler is not None else get_scheduler()
+    if scheduler is not None:
+        sched = scheduler
+    elif cluster is not None:
+        sched = cluster.scheduler()
+    else:
+        sched = get_scheduler()
+    kernel_name = fn if isinstance(fn, str) else None
+    local_fn = fn
+    if kernel_name is not None:
+        from repro.core.parcel import resolve_kernel
+
+        local_fn = resolve_kernel(kernel_name)
     futs = []
     for b in batches:
         dev = sched.select(args=jax.tree_util.tree_leaves(b))
+        if getattr(dev, "is_remote_proxy", False) and not dev._port.in_process:
+            if kernel_name is None:
+                raise ValueError(
+                    f"route_batches placed a batch on {dev.key}, a cross-process "
+                    "locality, but fn is a closure: pass a registered kernel "
+                    "name (str) so the work can travel as a parcel"
+                )
+            futs.append(dev._call(
+                "apply", kernel=kernel_name, batch=jax.tree_util.tree_map(np.asarray, b)
+            ))
+            continue
 
         def _run(b=b, dev=dev):
             placed = jax.device_put(b, dev.jax_device) if percolate else b
-            return fn(placed)
+            return local_fn(placed)
 
         futs.append(dev.ops_queue.submit(_run))
     return futs
