@@ -4,10 +4,12 @@ Prints ``name,us_per_call,derived`` CSV rows (paper §5 protocol: 11
 iterations, first discarded, mean of the remaining 10).  The overhead
 module's rows are additionally written to ``BENCH_overhead.json``, the
 fig6 multi-device rows (incl. per-policy scheduler rows) to
-``BENCH_multidevice.json``, and the fig7 remote-transport rows (local vs
-loopback vs cluster launch) to ``BENCH_remote.json`` so the
-native/futurized/graph gap, the 1→4-device scaling trajectory and the
-parcel-transport tax are all tracked per-PR.
+``BENCH_multidevice.json``, the fig7 remote-transport rows (local vs
+loopback vs cluster launch) to ``BENCH_remote.json``, and the fig8
+stream-overlap rows (1-stream serialized vs 2-stream double-buffered
+pipeline) to ``BENCH_overlap.json`` so the native/futurized/graph gap,
+the 1→4-device scaling trajectory, the parcel-transport tax and the
+transfer–compute overlap win are all tracked per-PR.
 
     PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig3,...]
 """
@@ -26,6 +28,7 @@ MODULES = [
     ("fig5", "benchmarks.fig5_mandelbrot"),
     ("fig6", "benchmarks.fig6_multidevice"),
     ("fig7", "benchmarks.fig7_remote"),
+    ("fig8", "benchmarks.fig8_overlap"),
     ("roofline", "benchmarks.roofline_table"),
 ]
 
@@ -56,6 +59,7 @@ def main() -> None:
                 "overhead": "BENCH_overhead.json",
                 "fig6": "BENCH_multidevice.json",
                 "fig7": "BENCH_remote.json",
+                "fig8": "BENCH_overlap.json",
             }.get(tag)
             if json_out:
                 payload = {

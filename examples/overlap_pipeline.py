@@ -1,0 +1,79 @@
+"""Two-stream double buffering, overlapped with host-side work.
+
+The stream-engine demo (DESIGN.md §11): a chunked pipeline — H2D ->
+kernel -> D2H -> host consume — alternates chunks between two streams
+over two buffer slots, with completion events serializing the kernels
+onto one "compute engine" (the CUDA copy-engine pattern).  While the
+device crunches chunk ``i``, stream ``i+1`` stages and ships the next
+chunk, and the MAIN thread keeps doing its own work the whole time —
+the paper's claim that transfers, launches and host computation all
+overlap, in one page of code.
+
+    PYTHONPATH=src python examples/overlap_pipeline.py
+"""
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.core import get_all_devices
+
+
+def kernel(x, grid=None, block=None):
+    import jax.numpy as jnp
+
+    for _ in range(2):
+        x = jnp.sin(x) * 1.0001 + x * 0.5
+    return x
+
+
+def main():
+    dev = get_all_devices().get()[0]
+    prog = dev.create_program({"work": kernel}, "overlap").get()
+
+    n, nchunks = 1 << 20, 8
+    rng = np.random.default_rng(0)
+    chunks = [rng.normal(size=(n,)).astype(np.float32) for _ in range(nchunks)]
+
+    # Double buffering: two slots, reused alternately.  Same-stream FIFO
+    # guarantees slot i%2's previous read finished before it is rewritten.
+    inb = [dev.create_buffer(n, np.float32).get() for _ in range(2)]
+    outb = [dev.create_buffer(n, np.float32).get() for _ in range(2)]
+    streams = [dev.create_stream("pipe-a"), dev.create_stream("pipe-b")]
+
+    t0 = time.perf_counter()
+    checksums, prev_kernel = [], None
+    for i, chunk in enumerate(chunks):
+        s = streams[i % 2]
+        s.enqueue_write(inb[i % 2], 0, chunk)              # H2D on this stream
+        if prev_kernel is not None:
+            s.wait_event(prev_kernel)                      # one compute engine
+        s.launch(prog, [inb[i % 2]], "work", out=[outb[i % 2]])
+        prev_kernel = s.record()                           # fires at kernel COMPLETION
+        r = s.enqueue_read(outb[i % 2])                    # D2H on this stream
+        # Host-side consume, stream-ordered (cudaLaunchHostFunc analogue).
+        checksums.append(s.submit(lambda f=r: float(np.abs(f.get()).sum())))
+
+    # The pipeline is in flight — the main core is free.  Overlap it with
+    # genuine host work (the paper's "work on the main cores").
+    host_acc, host_rounds = 0.0, 0
+    while not all(f.done() for f in checksums):
+        host_acc += float(np.sin(np.arange(1 << 14)).sum())
+        host_rounds += 1
+    wall = time.perf_counter() - t0
+
+    total = sum(f.get() for f in checksums)
+    hwm = dev._dispatcher.high_water()
+    print(f"pipelined {nchunks} chunks x {n * 4 / 1e6:.1f} MB in {wall * 1e3:.0f} ms")
+    print(f"checksum {total:.1f}; host did {host_rounds} rounds of its own work meanwhile")
+    print(f"peak concurrent lanes on {dev.key}: {hwm} (>1 == overlap really happened)")
+    assert hwm > 1, "expected at least two lanes running concurrently"
+
+    dev.synchronize()  # drains ALL streams (§11 fix), not just the default
+
+
+if __name__ == "__main__":
+    main()

@@ -14,6 +14,15 @@ Public surface mirrors HPXCL:
     prog.run([buf, res, n], "sum", grid=Dim3(1), block=Dim3(32), out=[res]).get()
     result = res.enqueue_read_sync()
 
+Streams (DESIGN.md §11) give transfer–compute overlap on one device —
+independent chains run on their own lanes, same-stream order is FIFO:
+
+    s1, s2 = dev.create_stream(), dev.create_stream()
+    s1.enqueue_write(a, 0, host_a); prog.launch([a], "k", out=[ra], stream=s1)
+    s2.enqueue_write(b, 0, host_b); prog.launch([b], "k", out=[rb], stream=s2)
+    done = s1.record()                                # cudaEventRecord
+    s2.wait_event(done)                               # cudaStreamWaitEvent
+
 Scheduler-routed launches (DESIGN.md §9) drop the explicit device:
 
     sched = Scheduler(policy="least_loaded")          # or affinity/round_robin
@@ -34,7 +43,15 @@ from repro.core.device import (
     get_all_devices,
     get_all_localities,
 )
-from repro.core.executor import QueueLoad, Runtime, WorkQueue, get_runtime, reset_runtime
+from repro.core.executor import (
+    Lane,
+    LaneDispatcher,
+    QueueLoad,
+    Runtime,
+    WorkQueue,
+    get_runtime,
+    reset_runtime,
+)
 from repro.core.futures import (
     Future,
     FutureState,
@@ -57,6 +74,7 @@ from repro.core.parcel import (
     register_kernel,
 )
 from repro.core.program import Dim3, Program, RemoteProgram
+from repro.core.stream import Event, Stream
 from repro.core.scheduler import (
     AffinityPolicy,
     LeastLoadedPolicy,
@@ -92,9 +110,13 @@ __all__ = [
     "register_kernel",
     "Runtime",
     "WorkQueue",
+    "Lane",
+    "LaneDispatcher",
     "QueueLoad",
     "get_runtime",
     "reset_runtime",
+    "Stream",
+    "Event",
     "PlacementPolicy",
     "StaticPolicy",
     "RoundRobinPolicy",

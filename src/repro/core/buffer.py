@@ -1,6 +1,7 @@
 """Device memory buffer (paper §4, Fig. 2 ``buffer``).
 
-Operations are submitted to the owning device's ``ops`` queue and return
+Operations are submitted to one of the owning device's streams (the
+default stream unless ``stream=`` is given — DESIGN.md §11) and return
 futures — ``enqueue_write`` / ``enqueue_read`` are the
 ``cudaMemcpyAsync(H2D/D2H)`` analogues; ``copy_to`` moves a buffer between
 devices ("effective memory exchange between different entities", §4) and
@@ -108,12 +109,16 @@ class Buffer:
 
     # -- async transfer surface ----------------------------------------------
 
-    def enqueue_write(self, offset: int, data, count: "int | None" = None) -> Future:
+    def enqueue_write(self, offset: int, data, count: "int | None" = None,
+                      stream=None) -> Future:
         """Asynchronously copy host ``data`` into the buffer at ``offset``
         (elements, flat view). ``cudaMemcpyAsync(HostToDevice)`` analogue.
 
-        Full-buffer writes (offset 0, covering size) take a zero-copy fast
-        path when ``data`` already matches shape and dtype.  Inside a
+        ``stream`` scopes the ordering (DESIGN.md §11): the write runs
+        FIFO with that stream's other work and concurrently with other
+        streams; ``None`` means the device's default stream.  Full-buffer
+        writes (offset 0, covering size) take a zero-copy fast path when
+        ``data`` already matches shape and dtype.  Inside a
         ``graph.capture()`` region the write is recorded (full-buffer only)
         and a graph node is returned instead of a future.
         """
@@ -164,12 +169,15 @@ class Buffer:
             self._donated = False
             return None
 
-        return self.device.ops_queue.submit(_write)
+        q = self.device.ops_queue if stream is None else stream._lane_for(self.device)
+        return q.submit(_write)
 
-    def enqueue_read(self, offset: int = 0, count: "int | None" = None) -> Future:
+    def enqueue_read(self, offset: int = 0, count: "int | None" = None,
+                     stream=None) -> Future:
         """Asynchronously copy device data to the host; future of np.ndarray.
         ``cudaMemcpyAsync(DeviceToHost)`` analogue.
 
+        ``stream`` scopes the ordering exactly as for ``enqueue_write``.
         Inside a ``graph.capture()`` region the read is recorded as a fetch
         node (full-buffer only) and the node handle is returned."""
         from repro.core.graph import current_graph
@@ -190,12 +198,13 @@ class Buffer:
             out.copy_to_host_async()
             return out
 
+        q = self.device.ops_queue if stream is None else stream._lane_for(self.device)
         # resolve to a numpy array; inline continuation (non-blocking fn)
-        return self.device.ops_queue.submit(_read).then(
+        return q.submit(_read).then(
             lambda a: np.asarray(a), executor="inline", name=f"read:gid{self.gid}"
         )
 
-    def enqueue_read_sync(self, offset: int = 0, count: "int | None" = None):
+    def enqueue_read_sync(self, offset: int = 0, count: "int | None" = None, stream=None):
         from repro.core.graph import current_graph
 
         if current_graph() is not None:
@@ -204,7 +213,7 @@ class Buffer:
                 "does not exist until replay. Use enqueue_read() to record a "
                 "fetch node and index the replay's GraphResult with it."
             )
-        return self.enqueue_read(offset, count).get()
+        return self.enqueue_read(offset, count, stream=stream).get()
 
     def copy_to(self, target_device) -> Future:
         """Move contents to ``target_device``; future of the *new* Buffer.
@@ -253,8 +262,9 @@ class Buffer:
         """Release device storage and retire the AGAS record (async;
         ``cudaFreeAsync`` analogue — future of None, idempotent).
 
-        The release is submitted to the owning device's ops queue, so
-        operations already enqueued (e.g. a launch reading this buffer)
+        The release is gated on a barrier across ALL of the owning
+        device's streams, so operations already enqueued on any lane
+        (e.g. a launch reading this buffer from a non-default stream)
         complete against live storage first — freeing after submitting a
         launch is safe, exactly as ``cudaFree`` after kernel submission.
         Explicit counterpart of the GC finalizer: the registration and
@@ -267,7 +277,7 @@ class Buffer:
         asked first".
         """
 
-        def _release():
+        def _release(_=None):
             self._freed = True
             if self._finalizer is not None:
                 self._finalizer.detach()
@@ -278,7 +288,12 @@ class Buffer:
 
         with _free_lock:
             if self._free_future is None:
-                self._free_future = self.device.ops_queue.submit(_release)
+                disp = getattr(self.device, "_dispatcher", None)
+                if disp is None:  # duck-typed device with a bare queue
+                    self._free_future = self.device.ops_queue.submit(_release)
+                else:
+                    # _release is non-blocking; inline on the barrier is safe.
+                    self._free_future = disp.barrier().then(_release, executor="inline")
         return self._free_future
 
     def _rehome(self, device) -> None:

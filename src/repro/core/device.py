@@ -6,10 +6,16 @@ of ``jax.devices()``) and exposes HPXCL's surface:
 
   * ``create_buffer``  — async allocation (``cudaMalloc`` analogue)
   * ``create_program`` — async program creation (NVRTC source analogue)
-  * per-device work queues: ``ops`` (transfers/launch submission order) and
+  * per-device work lanes: ``ops`` (transfers/launch submission order) and
     ``compile`` (runtime compilation), separate so that building a kernel
     overlaps data transfers exactly as in Listing 2
-  * ``synchronize``    — drain queues and block on outstanding arrays
+  * ``create_stream`` / ``default_stream`` — N ordered lanes per device
+    (``cudaStream_t`` analogue, DESIGN.md §11): independent transfer/
+    launch chains overlap, same-stream order is preserved;
+    ``ops_queue`` IS the default stream's lane, so stream-less code keeps
+    the exact single-queue semantics
+  * ``synchronize``    — drain ALL the device's streams (not just the
+    default lane) plus the compile queue
 
 ``get_all_devices(major, minor)`` mirrors the paper's Listing 1: it returns
 a *future* of the device list, filtered by a minimum capability.
@@ -31,6 +37,7 @@ policies read for local devices.
 """
 from __future__ import annotations
 
+import threading
 import weakref
 from typing import Any, Callable, Optional
 
@@ -38,8 +45,9 @@ import jax
 import numpy as np
 
 from repro.core import agas
-from repro.core.executor import QueueLoad, WorkQueue, get_runtime
+from repro.core.executor import LaneDispatcher, QueueLoad, WorkQueue, get_runtime
 from repro.core.futures import Future
+from repro.core.stream import Stream
 
 __all__ = [
     "Device",
@@ -73,8 +81,17 @@ class Device:
         self.jax_device = jax_device
         self.key = f"{jax_device.platform}:{jax_device.id}"
         rt = get_runtime()
-        # Two queues per device: ops (stream analogue) + compile (NVRTC).
-        self.ops_queue: WorkQueue = rt.queue(f"ops:{self.key}")
+        # Streams multiplex onto one lane dispatcher per device
+        # (DESIGN.md §11); compilation keeps its own queue (NVRTC) so
+        # building a kernel overlaps transfers on any stream.
+        self._dispatcher: LaneDispatcher = rt.dispatcher(f"ops:{self.key}")
+        self._streams: "list[Stream]" = []
+        self._stream_lock = threading.Lock()
+        self._replay_streams: "dict[int, Stream]" = {}
+        self._default_stream = self.create_stream(name="default")
+        # Back-compat alias: the default stream's lane IS the ops queue —
+        # stream-less submission order is unchanged.
+        self.ops_queue = self._default_stream.lane
         self.compile_queue: WorkQueue = rt.queue(f"compile:{self.key}")
         self.gid: agas.GID = agas.registry.register(
             self, agas.Placement(self.key, jax_device.process_index), kind="device"
@@ -97,11 +114,60 @@ class Device:
     def capability(self) -> "tuple[int, int]":
         return capability_of(self.jax_device)
 
+    # -- streams (cudaStream_t analogue, DESIGN.md §11) ----------------------
+
+    @property
+    def default_stream(self) -> Stream:
+        """Stream 0: the lane stream-less ops order through (``ops_queue``)."""
+        return self._default_stream
+
+    def create_stream(self, name: "str | None" = None) -> Stream:
+        """A new ordered lane of work on this device (``cudaStreamCreate``).
+
+        Work on distinct streams runs concurrently (the dispatcher
+        multiplexes lanes onto a shared pool); work within one stream is
+        strictly FIFO.  Streams are cheap — a deque plus counters; worker
+        threads are pooled."""
+        with self._stream_lock:
+            idx = len(self._streams)
+            label = name if name is not None else f"s{idx}"
+            # Lane key is index-prefixed: dispatcher.lane() memoizes by
+            # name, and two streams must NEVER share a lane (a user name
+            # colliding with an auto 's{idx}' or 'replay' lane would
+            # silently serialize them — or deadlock a wait_event).
+            lane = self._dispatcher.lane(f"{idx}.{label}")
+            s = Stream(self, lane, name=f"{self.key}/{label}")
+            self._streams.append(s)
+            return s
+
+    def streams(self) -> "list[Stream]":
+        with self._stream_lock:
+            return list(self._streams)
+
+    def _replay_lane(self, chain: int):
+        """Lane carrying fused-graph chain ``chain`` at replay (DESIGN.md
+        §11): chain 0 rides the default stream; higher chains get
+        dedicated, memoized replay streams so independent chains of any
+        captured graph overlap without growing a lane per ``GraphExec``."""
+        if chain == 0:
+            return self.ops_queue
+        with self._stream_lock:
+            s = self._replay_streams.get(chain)
+            if s is None:
+                # 'replay.' keys cannot collide with create_stream's
+                # '{idx}.{label}' keys (idx is always an integer).
+                lane = self._dispatcher.lane(f"replay.{chain}")
+                s = Stream(self, lane, name=f"{self.key}/replay{chain}")
+                self._streams.append(s)
+                self._replay_streams[chain] = s
+        return s.lane
+
     # -- scheduler signals --------------------------------------------------
 
     def load(self) -> QueueLoad:
-        """Ops-queue backlog snapshot (``least_loaded`` input)."""
-        return self.ops_queue.load()
+        """Whole-device backlog snapshot: per-lane depths summed across
+        every stream (``least_loaded`` input, DESIGN.md §9/§11)."""
+        return self._dispatcher.load()
 
     def resident_bytes(self) -> int:
         """AGAS-registered bytes currently placed here (``affinity`` input)."""
@@ -170,8 +236,12 @@ class Device:
     # -- synchronization ----------------------------------------------------
 
     def synchronize(self) -> None:
-        """Drain both queues (``cudaDeviceSynchronize`` analogue)."""
-        self.ops_queue.drain()
+        """Drain ALL of this device's streams — every lane, not just the
+        default one — plus the compile queue (``cudaDeviceSynchronize``).
+        The barrier covers everything submitted to any stream before the
+        call; lanes drain in parallel, so synchronizing never serializes
+        otherwise-overlapping streams."""
+        self._dispatcher.drain()
         self.compile_queue.drain()
 
     def __repr__(self) -> str:
@@ -250,6 +320,12 @@ class RemoteDevice:
         rt = get_runtime()
         self.ops_queue: WorkQueue = rt.queue(f"parcel-ops:{self.key}")
         self.compile_queue: WorkQueue = rt.queue(f"parcel-compile:{self.key}")
+        # Streams on a remote device are ordered parcel *channels*: each
+        # stream gets its own submission queue, so parcels of one stream
+        # stay strictly ordered while different streams' parcels may be
+        # in flight concurrently (DESIGN.md §11).
+        self._stream_lock = threading.Lock()
+        self._streams: "list[Stream]" = [Stream(self, self.ops_queue, name=f"{self.key}/default")]
         self.gid: agas.GID = agas.registry.register(
             self, agas.Placement(self.key, locality_id), kind="device"
         )
@@ -271,10 +347,50 @@ class RemoteDevice:
     def capability(self) -> "tuple[int, int]":
         return self._capability
 
+    # -- streams (ordered parcel channels, DESIGN.md §11) --------------------
+
+    @property
+    def default_stream(self) -> Stream:
+        return self._streams[0]
+
+    def create_stream(self, name: "str | None" = None) -> Stream:
+        """A new ordered parcel channel to this remote device: stream verbs
+        become parcels submitted through the channel's own queue, so each
+        stream's parcels keep submission order while channels overlap."""
+        rt = get_runtime()
+        with self._stream_lock:
+            idx = len(self._streams)
+            label = name if name is not None else f"s{idx}"
+            # Index-prefixed queue key: rt.queue() memoizes by name, and
+            # two channels must never share a queue (see Device.create_stream).
+            chan = rt.queue(f"parcel-ops:{self.key}:{idx}.{label}")
+            s = Stream(self, chan, name=f"{self.key}/{label}")
+            self._streams.append(s)
+            return s
+
+    def streams(self) -> "list[Stream]":
+        with self._stream_lock:
+            return list(self._streams)
+
+    def _replay_lane(self, chain: int):
+        # Remote fused segments replay as ONE parcel each; keeping every
+        # chain on the default channel preserves the run_segment ordering
+        # the multi-locality replay tests pin down.
+        return self.ops_queue
+
     # -- scheduler signals ---------------------------------------------------
 
     def load(self) -> QueueLoad:
-        return self.ops_queue.load()
+        """Backlog summed across every parcel channel of this device."""
+        loads = [s.lane.load() for s in self.streams()]
+        return QueueLoad(
+            depth=sum(l.depth for l in loads),
+            inflight=sum(l.inflight for l in loads),
+            busy_for=max((l.busy_for for l in loads), default=0.0),
+            busy_time=sum(l.busy_time for l in loads),
+            submitted=sum(l.submitted for l in loads),
+            completed=sum(l.completed for l in loads),
+        )
 
     def resident_bytes(self) -> int:
         return agas.registry.resident_bytes(self.key)
@@ -285,10 +401,12 @@ class RemoteDevice:
 
     # -- parcel plumbing -----------------------------------------------------
 
-    def _call(self, action: str, **payload) -> "Future":
-        """Send one action parcel, ordered through this device's ops queue
-        (submission order across writes/launches/reads is the stream
-        contract, exactly as for local devices)."""
+    def _call(self, action: str, lane=None, **payload) -> "Future":
+        """Send one action parcel, ordered through this device's default
+        channel — or, when ``lane`` is given, through that stream's own
+        parcel channel (same-stream parcels keep submission order; the
+        per-channel worker blocks on each reply, so the next parcel of
+        the channel is only sent once the previous one has executed)."""
         payload.setdefault("device", self.remote_key)
         port, loc = self._port, self.locality_id
         if not port.alive(loc):
@@ -296,7 +414,8 @@ class RemoteDevice:
                 f"parcel {action!r} to locality L{loc} failed fast: the locality is dead "
                 "(missed heartbeat or worker exit) and is excluded from placement"
             ))
-        return self.ops_queue.submit(lambda: port.call_sync(loc, action, payload))
+        q = self.ops_queue if lane is None else lane
+        return q.submit(lambda: port.call_sync(loc, action, payload))
 
     # -- factory surface -----------------------------------------------------
 
@@ -332,7 +451,10 @@ class RemoteDevice:
     # -- synchronization -----------------------------------------------------
 
     def synchronize(self) -> None:
-        self.ops_queue.drain()
+        """Drain EVERY parcel channel of this device (all streams, not
+        just the default one) plus the compile queue."""
+        for s in self.streams():
+            s.lane.drain()
         self.compile_queue.drain()
 
     def __repr__(self) -> str:
@@ -378,7 +500,8 @@ class RemoteBuffer:
 
     # -- async transfer surface ----------------------------------------------
 
-    def enqueue_write(self, offset: int, data, count: "int | None" = None) -> "Future":
+    def enqueue_write(self, offset: int, data, count: "int | None" = None,
+                      stream=None) -> "Future":
         from repro.core.graph import current_graph
 
         if current_graph() is not None:
@@ -387,18 +510,22 @@ class RemoteBuffer:
                 "transfers outside the capture region (remote buffers may be "
                 "read as extern inputs)"
             )
-        return self.device._call("enqueue_write", gid=self.gid, offset=offset,
+        lane = None if stream is None else stream._lane_for(self.device)
+        return self.device._call("enqueue_write", lane=lane, gid=self.gid, offset=offset,
                                  data=np.asarray(data), count=count)
 
-    def enqueue_read(self, offset: int = 0, count: "int | None" = None) -> "Future":
+    def enqueue_read(self, offset: int = 0, count: "int | None" = None,
+                     stream=None) -> "Future":
         from repro.core.graph import current_graph
 
         g = current_graph()
         if g is not None:
             return g.read(self, offset=offset, count=count)
-        return self.device._call("enqueue_read", gid=self.gid, offset=offset, count=count)
+        lane = None if stream is None else stream._lane_for(self.device)
+        return self.device._call("enqueue_read", lane=lane, gid=self.gid,
+                                 offset=offset, count=count)
 
-    def enqueue_read_sync(self, offset: int = 0, count: "int | None" = None):
+    def enqueue_read_sync(self, offset: int = 0, count: "int | None" = None, stream=None):
         from repro.core.graph import current_graph
 
         if current_graph() is not None:
@@ -406,7 +533,7 @@ class RemoteBuffer:
                 "enqueue_read_sync inside a graph-capture region: the value "
                 "does not exist until replay. Use enqueue_read()."
             )
-        return self.enqueue_read(offset, count).get()
+        return self.enqueue_read(offset, count, stream=stream).get()
 
     def _read_now(self) -> np.ndarray:
         """Synchronous read bypassing the proxy queue — for callers already
@@ -433,6 +560,14 @@ class RemoteBuffer:
     # -- lifetime --------------------------------------------------------------
 
     def free(self) -> "Future":
+        """Release the remote storage (idempotent; future of None).
+
+        The free parcel is gated on a barrier across ALL of the device's
+        parcel channels: channels are mutually unordered, so a free sent
+        straight down the default channel could execute on the owning
+        locality before writes/launches still in flight on a stream
+        channel (remote use-after-free) — the same all-lanes rule as the
+        local ``Buffer.free``."""
         if self._free_future is None:
             self._freed = True
             if self._finalizer is not None:
@@ -440,7 +575,22 @@ class RemoteBuffer:
                 self._finalizer = None
             if self._proxied:
                 agas.registry.unregister(self.gid)
-            self._free_future = self.device._call("free", gid=self.gid)
+            dev = self.device
+            others = [s.lane for s in dev.streams() if s.lane is not dev.ops_queue]
+            if not others:
+                self._free_future = dev._call("free", gid=self.gid)
+            else:
+                from repro.core.futures import when_all
+
+                barrier = when_all([ch.submit(lambda: None) for ch in others])
+                # The continuation submits the free parcel to the default
+                # channel and waits for its reply — host pool, never
+                # inline on a channel worker.
+                self._free_future = barrier.then(
+                    lambda _: dev._call("free", gid=self.gid).get(),
+                    executor=get_runtime().pool,
+                    name=f"free:gid{self.gid}",
+                )
         return self._free_future
 
     # -- kernel-facing view ----------------------------------------------------

@@ -1,4 +1,5 @@
-"""Host-side execution resources: thread pools and static per-device queues.
+"""Host-side execution resources: thread pools, static per-device queues,
+and the lane-aware dispatcher behind streams.
 
 HPXCL attaches every device operation to a lightweight user-level thread
 under the *static* scheduling policy (one queue pinned per device — paper
@@ -7,12 +8,33 @@ one is created per logical device for ordered submission (XLA then overlaps
 the *execution*), plus a shared host pool for continuations, I/O and
 ``async_`` tasks.
 
-Load accounting (DESIGN.md §9): every queue counts submissions and
-completions and tracks how long its worker has been busy, so a placement
-policy (``least_loaded``) can read a real backlog signal off
-``WorkQueue.load()`` instead of guessing.  Counters are monotonically
-increasing; the snapshot is advisory (reads are unsynchronized with the
-worker by design — scheduling decisions tolerate a stale-by-one view).
+Lanes (DESIGN.md §11): a ``LaneDispatcher`` multiplexes N FIFO *lanes*
+onto one shared worker pool — each lane is the ordering substrate of one
+``repro.core.stream.Stream`` (the ``cudaStream_t`` analogue).  At most one
+task per lane runs at a time, so every lane preserves strict submission
+order, while tasks on *different* lanes of the same device run
+concurrently (transfer–compute overlap).
+
+Ordering guarantees, stated once here because every layer above relies on
+them:
+
+* **Same-lane FIFO** — tasks submitted to one lane (one stream) execute
+  strictly in submission order, never interleaved or reordered.
+* **Cross-lane: none** — two lanes of the same dispatcher have NO implied
+  ordering; synchronization between them is explicit (an ``Event``
+  recorded in one stream and waited on in another — happens-before is
+  then carried by the event's ``Future``).
+* **Dispatcher barrier** — ``barrier()``/``drain()`` cover everything
+  submitted to *any* lane before the call (``cudaDeviceSynchronize``).
+
+Load accounting (DESIGN.md §9): every queue and lane counts submissions
+and completions and tracks how long its worker has been busy, so a
+placement policy (``least_loaded``) can read a real backlog signal off
+``WorkQueue.load()`` / ``LaneDispatcher.load()`` (the per-lane depths are
+summed — a device busy on three lanes reports a depth of three) instead
+of guessing.  Counters are monotonically increasing; the snapshot is
+advisory (reads are unsynchronized with the worker by design — scheduling
+decisions tolerate a stale-by-one view).
 """
 from __future__ import annotations
 
@@ -25,9 +47,19 @@ import time
 from dataclasses import dataclass
 from typing import Callable, Optional
 
+from collections import deque
+
 from repro.core.futures import Future
 
-__all__ = ["QueueLoad", "WorkQueue", "Runtime", "get_runtime", "reset_runtime"]
+__all__ = [
+    "QueueLoad",
+    "WorkQueue",
+    "Lane",
+    "LaneDispatcher",
+    "Runtime",
+    "get_runtime",
+    "reset_runtime",
+]
 
 
 @dataclass(frozen=True)
@@ -163,6 +195,212 @@ class WorkQueue:
             self._thread.join(timeout=5)
 
 
+def _normalize_call(c) -> tuple:
+    """(fn, args, kwargs) from a callable or (fn[, args[, kwargs]]) tuple."""
+    if callable(c):
+        return c, (), {}
+    fn = c[0]
+    args = c[1] if len(c) > 1 else ()
+    kwargs = c[2] if len(c) > 2 else {}
+    return fn, args, kwargs
+
+
+class Lane:
+    """One FIFO lane of a ``LaneDispatcher`` — a stream's ordering substrate.
+
+    Duck-types ``WorkQueue`` (``submit`` / ``submit_many`` / ``load`` /
+    ``drain`` / ``name``) so every layer written against per-device queues
+    works unchanged against a lane.  At most one task of this lane runs at
+    a time (same-lane FIFO); the running happens on the dispatcher's
+    shared pool, so independent lanes execute concurrently.
+    """
+
+    def __init__(self, dispatcher: "LaneDispatcher", name: str):
+        self.dispatcher = dispatcher
+        self.name = name
+        self._pending: deque = deque()
+        self._lock = threading.Lock()  # guards _pending + the active handoff
+        self._active = False
+        self._submitted = 0
+        # Single-writer counters (only one pool thread runs this lane at a
+        # time — the _active handoff guarantees it): no lock needed.
+        self._completed = 0
+        self._busy_time = 0.0
+        self._busy_since: "float | None" = None
+
+    def _put(self, items: list) -> None:
+        d = self.dispatcher
+        if d._shutdown.is_set():
+            raise RuntimeError(f"Lane {self.name} is shut down")
+        with self._lock:
+            self._submitted += len(items)
+            self._pending.extend(items)
+            kick = not self._active
+            if kick:
+                self._active = True
+        if kick:
+            d._pool.submit(self._run)
+
+    def submit(self, fn: Callable, *args, **kwargs) -> Future:
+        fut: Future = Future(name=f"{self.name}:{getattr(fn, '__name__', 'task')}")
+        self._put([(fut, fn, args, kwargs)])
+        return fut
+
+    def submit_many(self, calls) -> "list[Future]":
+        """Batched enqueue: one handoff for N ordered calls (``WorkQueue``
+        contract — the calls run in order, uninterleaved with later
+        submissions to this lane)."""
+        items = []
+        futs: "list[Future]" = []
+        for c in calls:
+            fn, args, kwargs = _normalize_call(c)
+            fut: Future = Future(name=f"{self.name}:{getattr(fn, '__name__', 'task')}")
+            futs.append(fut)
+            items.append((fut, fn, args, kwargs))
+        if items:
+            self._put(items)
+        return futs
+
+    def _run(self) -> None:
+        """Drain the lane on a pool worker; exactly one runner at a time."""
+        d = self.dispatcher
+        d._note_lane_active(+1)
+        try:
+            while True:
+                with self._lock:
+                    if not self._pending:
+                        self._active = False
+                        return
+                    item = self._pending.popleft()
+                self._run_one(item)
+        finally:
+            d._note_lane_active(-1)
+
+    def _run_one(self, item) -> None:
+        fut, fn, args, kwargs = item
+        self._busy_since = time.monotonic()
+        try:
+            if fut._cf.set_running_or_notify_cancel():
+                try:
+                    fut._cf.set_result(fn(*args, **kwargs))
+                except BaseException as e:  # noqa: BLE001
+                    fut._cf.set_exception(e)
+        finally:
+            t0, self._busy_since = self._busy_since, None
+            self._busy_time += time.monotonic() - t0
+            self._completed += 1
+
+    def load(self) -> QueueLoad:
+        """Advisory backlog snapshot (same contract as ``WorkQueue.load``)."""
+        submitted, completed = self._submitted, self._completed
+        since = self._busy_since
+        busy_for = (time.monotonic() - since) if since is not None else 0.0
+        return QueueLoad(
+            depth=max(0, submitted - completed),
+            inflight=1 if since is not None else 0,
+            busy_for=busy_for,
+            busy_time=self._busy_time,
+            submitted=submitted,
+            completed=completed,
+        )
+
+    def drain(self) -> None:
+        """Block until everything submitted to THIS lane so far has run."""
+        self.submit(lambda: None).get()
+
+    def __repr__(self) -> str:
+        return f"Lane({self.name}, depth={self.load().depth})"
+
+
+class LaneDispatcher:
+    """N FIFO lanes multiplexed onto one shared pool (DESIGN.md §11).
+
+    The device-side half of the stream engine: each ``Stream`` owns one
+    lane; the dispatcher hands runnable lanes to the pool and tracks how
+    many lanes are executing at once (``high_water()`` — the observable
+    proof that transfer–compute overlap actually happened).
+    """
+
+    def __init__(self, name: str, pool: "_cf.ThreadPoolExecutor"):
+        self.name = name
+        self._pool = pool
+        self._lanes: "dict[str, Lane]" = {}
+        self._lock = threading.Lock()
+        self._shutdown = threading.Event()
+        self._active_lanes = 0
+        self._high_water = 0
+
+    def lane(self, name: str) -> Lane:
+        """The lane called ``name`` (created on first use)."""
+        with self._lock:
+            ln = self._lanes.get(name)
+            if ln is None:
+                ln = self._lanes[name] = Lane(self, f"{self.name}/{name}")
+            return ln
+
+    def lanes(self) -> "list[Lane]":
+        with self._lock:
+            return list(self._lanes.values())
+
+    # -- concurrency accounting (single counter, one lock) -------------------
+
+    def _note_lane_active(self, delta: int) -> None:
+        with self._lock:
+            self._active_lanes += delta
+            if self._active_lanes > self._high_water:
+                self._high_water = self._active_lanes
+
+    def high_water(self) -> int:
+        """Max lanes ever observed running concurrently (>1 == overlap)."""
+        with self._lock:
+            return self._high_water
+
+    def reset_high_water(self) -> None:
+        with self._lock:
+            self._high_water = self._active_lanes
+
+    # -- aggregate signals ---------------------------------------------------
+
+    def load(self) -> QueueLoad:
+        """Whole-device backlog: per-lane depths summed (DESIGN.md §9 —
+        the scheduler's load signal counts every lane, so a device busy on
+        three streams is three deep, not one)."""
+        depth = inflight = submitted = completed = 0
+        busy_for = busy_time = 0.0
+        for ln in self.lanes():
+            l = ln.load()
+            depth += l.depth
+            inflight += l.inflight
+            busy_for = max(busy_for, l.busy_for)
+            busy_time += l.busy_time
+            submitted += l.submitted
+            completed += l.completed
+        return QueueLoad(depth, inflight, busy_for, busy_time, submitted, completed)
+
+    # -- synchronization ------------------------------------------------------
+
+    def barrier(self) -> Future:
+        """Future resolving when everything submitted to ANY lane before
+        this call has completed (async ``cudaDeviceSynchronize``).  Markers
+        go to every lane in parallel — a barrier never serializes lanes."""
+        from repro.core.futures import when_all
+
+        markers = [ln.submit(lambda: None) for ln in self.lanes()]
+        return when_all(markers, name=f"barrier:{self.name}").then(
+            lambda _: None, executor="inline"
+        )
+
+    def drain(self) -> None:
+        """Blocking ``barrier()``."""
+        self.barrier().get()
+
+    def shutdown(self) -> None:
+        self._shutdown.set()
+
+    def __repr__(self) -> str:
+        return f"LaneDispatcher({self.name}, {len(self._lanes)} lane(s))"
+
+
 class Runtime:
     """Process-wide execution resources (HPX thread-manager analogue)."""
 
@@ -171,7 +409,13 @@ class Runtime:
         # file I/O), so oversubscription is the deadlock-safe choice
         n = host_workers or max(32, 4 * (os.cpu_count() or 1))
         self.pool = _cf.ThreadPoolExecutor(max_workers=n, thread_name_prefix="repro-host")
+        # Lanes get their own pool: a parked lane task (a launch waiting on
+        # its build future, a graph segment on its producers) must never
+        # starve host continuations of workers.  Same oversubscription
+        # argument as the host pool — lane tasks mostly wait.
+        self.lane_pool = _cf.ThreadPoolExecutor(max_workers=n, thread_name_prefix="repro-lane")
         self._queues: dict[str, WorkQueue] = {}
+        self._dispatchers: "dict[str, LaneDispatcher]" = {}
         self._lock = threading.Lock()
 
     def queue(self, name: str) -> WorkQueue:
@@ -181,15 +425,28 @@ class Runtime:
                 q = self._queues[name] = WorkQueue(name)
             return q
 
+    def dispatcher(self, name: str) -> LaneDispatcher:
+        """The lane dispatcher called ``name`` (one per device; created on
+        first use) — the multi-stream twin of ``queue()``."""
+        with self._lock:
+            d = self._dispatchers.get(name)
+            if d is None:
+                d = self._dispatchers[name] = LaneDispatcher(name, self.lane_pool)
+            return d
+
     def async_(self, fn: Callable, *args, **kwargs) -> Future:
         return Future.from_concurrent(self.pool.submit(fn, *args, **kwargs))
 
     def shutdown(self) -> None:
         with self._lock:
             queues, self._queues = list(self._queues.values()), {}
+            dispatchers, self._dispatchers = list(self._dispatchers.values()), {}
+        for d in dispatchers:
+            d.shutdown()
         for q in queues:
             q.shutdown()
         self.pool.shutdown(wait=False)
+        self.lane_pool.shutdown(wait=False)
 
 
 _runtime: Optional[Runtime] = None

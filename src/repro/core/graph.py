@@ -25,12 +25,32 @@ resolved at instantiate into an explicit *transfer step* (the percolation
 analogue, frozen into the plan).  At replay the segments are dispatched to
 their **own** ops queues as soon as their producer segments finish —
 independent segments overlap — and the whole graph still joins through
-**one** future.  Single-device graphs keep the one-hop fast path.
+**one** future.  Single-device single-chain graphs keep the one-hop fast
+path.
+
+Stream assignment (DESIGN.md §11): at ``instantiate()`` every launch is
+assigned to an SSA *chain* — a launch continues the chain of its first
+same-device producer, a launch with no same-device producer starts a new
+one — and each chain maps to its own stream lane on its device
+(``Device._replay_lane``).  Independent chains therefore replay
+concurrently (transfers overlap compute), while same-chain work keeps
+capture order on one lane.  Where chains join, the cross-chain SSA edge
+becomes an *event edge* (``GraphExec._event_edges``): the consuming
+segment parks on the producer segment's future — exactly an ``Event``
+recorded at the producer's tail and waited on by the consumer's stream.
+
+Ordering guarantees: same-chain segments replay FIFO on one lane in
+capture order; cross-chain and cross-device edges synchronize only
+through event edges (the per-sym futures); the whole replay joins through
+ONE future, and a buffer's committed state is whatever the LAST
+capture-ordered node left it (SSA makes this deterministic regardless of
+lane interleaving).
 
 Correspondence: capture <-> ``cudaStreamBeginCapture``; ``GraphExec`` <->
 ``cudaGraphExec_t``; ``replay`` <-> ``cudaGraphLaunch``; feed overrides at
-replay <-> ``cudaGraphExecKernelNodeSetParams``.  It is equally the
-paper's Listing 2 execution graph, frozen and re-launched (PAPER §4).
+replay <-> ``cudaGraphExecKernelNodeSetParams``; chain -> stream lane <->
+``cudaGraph`` node-to-stream assignment.  It is equally the paper's
+Listing 2 execution graph, frozen and re-launched (PAPER §4).
 
 Ownership rule (CUDA Graphs'): a buffer overwritten inside the graph whose
 final value is consumed by a later in-graph launch is *graph-internal* —
@@ -288,11 +308,14 @@ class TaskGraph:
 
 
 class _Segment:
-    __slots__ = ("device", "nodes", "in_syms", "out_syms", "compiled", "donated_ixs", "transfer_ixs")
+    __slots__ = ("device", "nodes", "chain", "queue", "in_syms", "out_syms", "compiled",
+                 "donated_ixs", "transfer_ixs")
 
-    def __init__(self, device, nodes):
+    def __init__(self, device, nodes, chain: int = 0):
         self.device = device
         self.nodes = nodes
+        self.chain = chain  # SSA chain id on this device -> stream lane
+        self.queue = None  # lane resolved at instantiate (_replay_lane)
         self.in_syms: "list[int]" = []
         self.out_syms: "list[int]" = []
         self.compiled = None
@@ -351,17 +374,43 @@ class GraphExec:
         g = self.graph
         nodes = g._nodes
 
-        # Segment = maximal run of launches on one device (writes/reads are
-        # replay-time host ops and do not break fusion; SSA ordering keeps
-        # them correct regardless of where they sit between launches).
+        # Stream assignment (DESIGN.md §11): every launch joins an SSA
+        # *chain* — the chain of its first same-device producer, or a new
+        # chain when it has none (an independent head).  Chains map 1:1 to
+        # stream lanes at replay, so independent chains overlap.
+        producer_launch: "dict[int, LaunchNode]" = {}  # sym -> producing launch
+        chain_counters: "dict[str, int]" = {}  # device.key -> next chain id
+        chain_of: "dict[int, int]" = {}  # id(LaunchNode) -> chain
+        for n in nodes:
+            if not isinstance(n, LaunchNode):
+                continue
+            chain = None
+            for a in n.arg_refs:
+                if isinstance(a, _SymRef):
+                    p = producer_launch.get(a.sym)
+                    if p is not None and p.device.key == n.device.key:
+                        chain = chain_of[id(p)]
+                        break
+            if chain is None:
+                chain = chain_counters.get(n.device.key, 0)
+                chain_counters[n.device.key] = chain + 1
+            chain_of[id(n)] = chain
+            for s in n.res_syms:
+                producer_launch[s] = n
+
+        # Segment = maximal run of launches on one (device, chain) — i.e.
+        # on one stream (writes/reads are replay-time host ops and do not
+        # break fusion; SSA ordering keeps them correct regardless of
+        # where they sit between launches).
         self._segments: "list[_Segment]" = []
         for n in nodes:
             if not isinstance(n, LaunchNode):
                 continue
-            if self._segments and self._segments[-1].device is n.device:
-                self._segments[-1].nodes.append(n)
+            last = self._segments[-1] if self._segments else None
+            if last is not None and last.device is n.device and last.chain == chain_of[id(n)]:
+                last.nodes.append(n)
             else:
-                self._segments.append(_Segment(n.device, [n]))
+                self._segments.append(_Segment(n.device, [n], chain=chain_of[id(n)]))
 
         # Liveness: which segment consumes each sym, and what must survive.
         launch_use_segs: "dict[int, list[int]]" = {}
@@ -392,13 +441,14 @@ class GraphExec:
         self._keep = keep
         self._final_sym = final_sym
 
-        # Fan-out replay when launches span devices: each segment runs on
-        # its own ops queue, joined through one future (DESIGN.md §9).
-        # Fan-out plans execute data-dependency ordered, not capture-
-        # ordered: two segments that both consume a sym may run
-        # CONCURRENTLY, so "last consumer donates" is only safe when a
-        # sym's consumers all sit in one segment.
-        self._fanout = len({seg.device.key for seg in self._segments}) > 1
+        # Fan-out replay when the plan has more than one segment — launches
+        # spanning devices (DESIGN.md §9) OR independent chains on one
+        # device (§11): each segment runs on its own stream lane, joined
+        # through one future.  Fan-out plans execute data-dependency
+        # ordered, not capture-ordered: two segments that both consume a
+        # sym may run CONCURRENTLY, so "last consumer donates" is only
+        # safe when a sym's consumers all sit in one segment.
+        self._fanout = len(self._segments) > 1
 
         # Per-segment interface: inputs (consumed, produced earlier) and
         # outputs (produced here, needed later or kept).
@@ -465,6 +515,28 @@ class GraphExec:
                     slots.append(pos)
                     self._transfers.append((s, src.key, seg.device.key))
             seg.transfer_ixs = tuple(slots)
+
+        # Stream lanes + event edges (DESIGN.md §11).  Each segment's
+        # replay lane is its chain's stream on its device, resolved once
+        # here.  A sym produced by one segment and consumed by a segment
+        # on a DIFFERENT lane is an *event edge* — record at the
+        # producer's tail, wait by the consumer's stream.  At replay the
+        # edge is realized by the per-sym futures (the consumer's lane
+        # task parks on the producer segment's future); _event_edges is
+        # the introspectable plan of those crossings (tests, __repr__),
+        # not a separate synchronization mechanism.
+        sym_seg: "dict[int, int]" = {}
+        for si, seg in enumerate(self._segments):
+            seg.queue = seg.device._replay_lane(seg.chain)
+            for n in seg.nodes:
+                for s in n.res_syms:
+                    sym_seg[s] = si
+        self._event_edges: "list[tuple[int, int, int]]" = []  # (producer, consumer, sym)
+        for si, seg in enumerate(self._segments):
+            for s in seg.in_syms:
+                pi = sym_seg.get(s)
+                if pi is not None and pi != si and self._segments[pi].queue is not seg.queue:
+                    self._event_edges.append((pi, si, s))
 
     def _compile_segments(self) -> None:
         g = self.graph
@@ -592,11 +664,13 @@ class GraphExec:
         """Execute the whole graph and resolve **one** ``Future``
         (``cudaGraphLaunch`` analogue).
 
-        Single-device graphs take one ops-queue hop.  Multi-device graphs
-        fan out: each fused segment is dispatched to its own device's ops
-        queue the moment its producer segments finish (cross-device edges
-        run their planned transfer steps first), and all segments join
-        through the single returned future.
+        Single-segment graphs take one ops-queue hop.  Multi-segment
+        graphs (launches spanning devices, or independent SSA chains on
+        one device — §11) fan out: each fused segment is dispatched to
+        its chain's stream lane the moment its producer segments finish
+        (cross-device edges run their planned transfer steps first,
+        cross-lane edges synchronize through event edges), and all
+        segments join through the single returned future.
 
         ``feeds`` overrides recorded write payloads, keyed by the
         ``WriteNode`` handle or by the target ``Buffer``.  ``sync="ready"``
@@ -692,9 +766,12 @@ class GraphExec:
 
             pool.submit(_stage_writes)
 
-            # Segments: submitted NOW, in capture order, each parked on
+            # Segments: submitted NOW, in capture order, each to its own
+            # stream lane (seg.queue — chain -> stream, §11), parked on
             # its producers (extern reads / write promises / earlier
-            # segments' outputs — all ahead of it on their queues).
+            # segments' outputs).  Same-lane segments stay FIFO in capture
+            # order; cross-lane dependencies synchronize through the sym
+            # futures — the plan's event edges.
             seg_futs = []
             for seg in self._segments:
                 deps = [sym_futs[s] for s in seg.in_syms]
@@ -702,7 +779,7 @@ class GraphExec:
                 def _parked(seg=seg, deps=deps):
                     return _segment_runner(seg)(*[d.get() for d in deps])
 
-                fut = seg.device.ops_queue.submit(_parked)
+                fut = seg.queue.submit(_parked)
                 seg_futs.append(fut)
                 for i, s in enumerate(seg.out_syms):
                     sym_futs[s] = fut.then(lambda outs, i=i: outs[i], executor="inline")
@@ -718,7 +795,23 @@ class GraphExec:
             finally:
                 self._replay_lock.release()
 
-        return Future.from_concurrent(pool.submit(_join_and_commit), name=f"replay:{g.name}")
+        out: "Future[GraphResult]" = Future.from_concurrent(
+            pool.submit(_join_and_commit), name=f"replay:{g.name}"
+        )
+        # Commit-visibility fences: the join/commit runs off-queue, so an
+        # EAGER op submitted to a device's default lane after replay()
+        # returns could otherwise run before _commit rebinds the buffers
+        # and observe pre-replay state — the single-hop path's FIFO
+        # guarantee, silently lost.  One fence per involved device parks
+        # its default lane until commit.  No deadlock: everything the
+        # commit waits on was submitted ABOVE, hence ahead of the fence
+        # on any shared lane.
+        fenced: "set[int]" = set()
+        for dev in [seg.device for seg in self._segments] + [b.device for b in g._buffers.values()]:
+            if id(dev) not in fenced:
+                fenced.add(id(dev))
+                dev.ops_queue.submit(out.wait)
+        return out
 
     __call__ = replay
 
@@ -726,10 +819,12 @@ class GraphExec:
         nseg = len(self._segments)
         nk = sum(len(s.nodes) for s in self._segments)
         nt = len(self._transfers)
+        nlanes = len({id(s.queue) for s in self._segments})
+        ne = len(self._event_edges)
         mode = "fan-out" if self._fanout else "single-hop"
         return (
-            f"GraphExec({self.graph.name}: {nk} launches -> {nseg} fused segment(s), "
-            f"{nt} transfer(s), {mode})"
+            f"GraphExec({self.graph.name}: {nk} launches -> {nseg} fused segment(s) "
+            f"on {nlanes} stream(s), {nt} transfer(s), {ne} event edge(s), {mode})"
         )
 
 

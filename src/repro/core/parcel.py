@@ -32,6 +32,23 @@ Three pieces:
   registry, or an importable ``"module:attr"`` path — source travels as
   a reference, never as code.
 
+Ordering guarantees (the contract the stream engine extends across
+localities, DESIGN.md §11):
+
+* **Parcel-channel FIFO** — parcels submitted through one channel (one
+  ``RemoteDevice`` stream, including its default ``ops_queue`` channel)
+  execute on the owning locality strictly in submission order: the
+  channel's worker sends a parcel and blocks on its reply before sending
+  the next, so order holds end-to-end, not just at the sender.
+* **Cross-channel: none** — parcels of different channels (different
+  streams, or different devices) may interleave arbitrarily on the
+  owning locality; synchronization between them is explicit (an
+  ``Event`` recorded on one stream, waited on by the other — the event's
+  future resolves on the reply parcel of the recorded channel's marker).
+* **Replies resolve futures exactly once** — each request ``pid`` is
+  matched to one reply; a dead locality fails its pending parcels fast
+  instead of leaving futures forever pending.
+
 Fault model (DESIGN.md §6, wired here): each cluster worker is watched by
 a ``fault.monitor.Heartbeat``; replies tick it, a monitor thread pings
 it, and a missed deadline (or a dead process) marks the locality dead —

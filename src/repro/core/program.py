@@ -250,6 +250,7 @@ class Program:
         block=None,
         out: "Sequence[Buffer] | None" = None,
         sync: str = "ready",
+        stream=None,
     ):
         """Launch kernel ``name`` with buffer/array ``args`` (async).
 
@@ -258,10 +259,16 @@ class Program:
         Without ``out`` the future resolves to the raw result arrays.
         ``sync="ready"`` resolves at device completion (CUDA-event
         semantics); ``sync="dispatch"`` resolves at submission.
+        ``stream`` scopes the submission order (DESIGN.md §11): the launch
+        runs FIFO with that stream's other work and concurrently with the
+        device's other streams; ``None`` means the default stream — the
+        pre-stream single-queue semantics, unchanged.
 
         Inside a ``repro.core.graph.capture()`` region the launch is
         *recorded*, not executed: the return value is then the graph node
-        (symbolic handle), and execution happens at ``replay()``.
+        (symbolic handle), and execution happens at ``replay()`` — capture
+        ignores ``stream`` and assigns chains to streams itself at
+        ``instantiate()`` (§11).
         """
         from repro.core.graph import current_graph
 
@@ -270,6 +277,7 @@ class Program:
             return g.run(self, args, name, grid=grid, block=block, out=out)
 
         home = self.device
+        queue = home.ops_queue if stream is None else stream._lane_for(home)
 
         # Percolation: move foreign buffers to the program's device first.
         # A RemoteBuffer is always foreign to a local program — the move is
@@ -333,17 +341,22 @@ class Program:
         # dataflow off-queue; their depth shows up when the copy resolves.
         if moved is None:
             if build_fut.done():
-                launched = home.ops_queue.submit(_launch, build_fut.get())
+                launched = queue.submit(_launch, build_fut.get())
             else:
-                launched = home.ops_queue.submit(lambda: _launch(build_fut.get()))
+                launched = queue.submit(lambda: _launch(build_fut.get()))
         else:
 
             def _enqueue(compiled, *resolved):
-                return home.ops_queue.submit(_launch, compiled, *resolved).get()
+                return queue.submit(_launch, compiled, *resolved).get()
 
             launched = dataflow(_enqueue, build_fut, *moved.values(), name=f"run:{name}")
 
         if sync == "dispatch":
+            # Dispatch-resolved future: stream events recorded after this
+            # launch mean "dispatched", as cudaEventRecord would if the
+            # work were still queued — completion events need sync="ready".
+            if stream is not None:
+                stream._note_completion(launched)
             return launched
 
         def _ready(res):
@@ -353,7 +366,27 @@ class Program:
 
         from repro.core.executor import get_runtime
 
-        return launched.then(_ready, executor=get_runtime().pool, name=f"done:{name}")
+        done = launched.then(_ready, executor=get_runtime().pool, name=f"done:{name}")
+        if stream is not None:
+            # Stream events must mean device completion (DESIGN.md §11):
+            # the lane task ends at dispatch, this future at readiness.
+            stream._note_completion(done)
+        return done
+
+    def launch(
+        self,
+        args: "Sequence[Buffer | Any]",
+        name: str,
+        grid=None,
+        block=None,
+        out: "Sequence[Buffer] | None" = None,
+        sync: str = "ready",
+        stream=None,
+    ):
+        """``run`` under its CUDA name — ``prog.launch([...], "k",
+        stream=s)`` submits the kernel on stream ``s`` (``<<<grid, block,
+        0, stream>>>``).  Identical semantics to ``run``."""
+        return self.run(args, name, grid=grid, block=block, out=out, sync=sync, stream=stream)
 
     def run_on_any(
         self,
@@ -477,6 +510,7 @@ class RemoteProgram(Program):
         block=None,
         out: "Sequence[Buffer] | None" = None,
         sync: str = "ready",
+        stream=None,
     ):
         from repro.core.graph import current_graph
 
@@ -488,6 +522,9 @@ class RemoteProgram(Program):
 
         dev = self.device
         port, loc = dev._port, dev.locality_id
+        # Stream-scoped remote launch: the parcel rides that stream's
+        # ordered channel instead of the default one (DESIGN.md §11).
+        lane = dev.ops_queue if stream is None else stream._lane_for(dev)
 
         # Argument descriptors: locality-resident buffers go as GID refs;
         # everything else materializes on the host and ships inline.
@@ -541,11 +578,11 @@ class RemoteProgram(Program):
         # fetches join off-queue first (same discipline as the percolating
         # local launch path — a queue worker must not wait on its own queue).
         if not fetch_futs:
-            return dev.ops_queue.submit(_send)
+            return lane.submit(_send)
         from repro.core.executor import get_runtime
 
         return dataflow(
-            lambda *vals: dev.ops_queue.submit(lambda: _send(*vals)).get(),
+            lambda *vals: lane.submit(lambda: _send(*vals)).get(),
             *fetch_futs,
             executor=get_runtime().pool,
             name=f"remote-run:{name}",

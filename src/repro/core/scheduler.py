@@ -113,8 +113,19 @@ def _arg_home(arg: Any) -> "tuple[str | None, int]":
     return (key, int(nbytes)) if key is not None else (None, 0)
 
 
+def _device_load(device):
+    """Backlog snapshot for placement: ``device.load()`` when the device
+    aggregates per-lane depths across its streams (DESIGN.md §11 — a
+    device busy on three lanes is three deep), else the bare ops queue
+    (duck-typed fakes and plain queue holders)."""
+    ld = getattr(device, "load", None)
+    if callable(ld):
+        return ld()
+    return device.ops_queue.load()
+
+
 def _load_score(device) -> "tuple[int, float]":
-    l = device.ops_queue.load()
+    l = _device_load(device)
     return (l.depth, l.busy_time)
 
 
@@ -156,7 +167,9 @@ class RoundRobinPolicy(PlacementPolicy):
 
 
 class LeastLoadedPolicy(PlacementPolicy):
-    """Smallest ops-queue backlog wins; ties ROTATE through the tied
+    """Smallest device backlog wins — summed across every stream lane of
+    the device (``Device.load()``, DESIGN.md §11), so a device running
+    three concurrent streams counts three deep; ties ROTATE through the tied
     devices (stateful counter), so when the depth signal is blind — e.g.
     percolating launches enqueue only after their copies resolve — the
     policy degrades to round-robin spread, never to piling everything on
@@ -169,7 +182,7 @@ class LeastLoadedPolicy(PlacementPolicy):
         self._lock = threading.Lock()
 
     def select(self, devices, args=(), program=None):
-        depths = [d.ops_queue.load().depth for d in devices]
+        depths = [_device_load(d).depth for d in devices]
         lo = min(depths)
         tied = [i for i, depth in enumerate(depths) if depth == lo]
         with self._lock:

@@ -1,0 +1,255 @@
+"""Streams & events — intra-device concurrency (DESIGN.md §11).
+
+The paper's central performance claim is that asynchronous transfers and
+kernel launches overlap with each other and with host work; a single
+per-device FIFO queue cannot express that — a transfer blocks the kernel
+behind it even when they touch disjoint buffers.  This module is the
+CUDA-streams/events analogue (in the spirit of StarPU worker lanes and
+Specx task lanes): a ``Stream`` is one ordered lane of work on one
+device, an ``Event`` a recorded point in a stream that other streams and
+hosts can wait on.
+
+Concept mapping (DESIGN.md §2):
+
+  * ``cudaStream_t``        -> ``Stream`` (one ``executor.Lane`` — or, for
+    remote devices, one ordered parcel channel)
+  * ``cudaEvent_t``         -> ``Event`` (``record`` / ``wait`` / ``query``,
+    backed by the ``Future`` machinery)
+  * ``cudaStreamWaitEvent`` -> ``Stream.wait_event``
+  * ``cudaStreamSynchronize`` -> ``Stream.synchronize``
+  * stream 0 / default stream -> ``Device.default_stream``
+
+Ordering guarantees (the contract every layer above builds on):
+
+* **Same-stream FIFO** — operations submitted to one stream execute
+  strictly in submission order: a write enqueued before a launch lands
+  before it, the launch before a later read.  ``Device.ops_queue`` is the
+  default stream's lane, so code that never mentions streams keeps the
+  exact pre-stream semantics.
+* **Cross-stream: explicit only** — two streams have NO implied ordering.
+  ``e = s1.record()`` then ``s2.wait_event(e)`` establishes
+  happens-before: everything submitted to ``s1`` before the record is
+  complete before anything submitted to ``s2`` after the wait runs.
+* **Events are one-shot and monotonic** — an ``Event`` marks the point in
+  the stream at which it was recorded; re-recording returns a new event.
+* **Remote streams = parcel channels** — a stream on a ``RemoteDevice``
+  maps onto its own ordered parcel channel: parcels of one stream arrive
+  and execute in submission order; parcels of different streams may
+  interleave (DESIGN.md §10).
+
+Deadlock rule (CUDA's): ``wait_event`` on an event that will only be
+recorded by LATER work on the same stream deadlocks that stream —
+record-then-wait, never wait-then-record.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any, Callable, Optional, Sequence
+
+from repro.core.futures import Future
+
+__all__ = ["Event", "Stream"]
+
+
+class Event:
+    """A recorded point in a stream (``cudaEvent_t`` analogue).
+
+    Becomes READY when every operation submitted to the recording stream
+    *before* the ``record()`` has completed.  ``future`` exposes the
+    underlying ``Future`` so hosts can compose it (``then``, ``when_all``)
+    like any other asynchronous value.
+    """
+
+    __slots__ = ("stream", "name", "_future")
+
+    def __init__(self, stream: "Stream", future: Future, name: str = ""):
+        self.stream = stream
+        self.name = name or f"event:{stream.name}"
+        self._future = future
+
+    @property
+    def future(self) -> Future:
+        return self._future
+
+    def query(self) -> bool:
+        """Non-blocking: has the recorded point been reached?
+        (``cudaEventQuery``)."""
+        return self._future.done()
+
+    def wait(self, timeout: "float | None" = None) -> "Event":
+        """Host-side block until the recorded point is reached
+        (``cudaEventSynchronize``).  Raises if the stream work ahead of
+        the record failed."""
+        self._future.get(timeout)
+        return self
+
+    synchronize = wait
+
+    def __repr__(self) -> str:
+        state = "ready" if self.query() else "pending"
+        return f"Event({self.name}, {state})"
+
+
+class Stream:
+    """One ordered lane of work on one device (``cudaStream_t`` analogue).
+
+    Construct via ``Device.create_stream()`` (or use
+    ``Device.default_stream``); the stream wraps an ``executor.Lane`` —
+    or, on a ``RemoteDevice``, an ordered parcel channel — and forwards
+    the device verbs with itself as the ordering scope:
+
+        s1, s2 = dev.create_stream(), dev.create_stream()
+        s1.enqueue_write(buf_a, 0, host_a)     # chain A ...
+        la = s1.launch(prog, [buf_a], "k", out=[out_a])
+        s2.enqueue_write(buf_b, 0, host_b)     # ... overlaps chain B
+        lb = s2.launch(prog, [buf_b], "k", out=[out_b])
+
+    Same-stream FIFO holds within each chain; the two chains run
+    concurrently (see module docstring for the full contract).
+    """
+
+    __slots__ = ("device", "lane", "name", "_events", "_lock", "_completions")
+
+    def __init__(self, device, lane, name: str = ""):
+        self.device = device
+        self.lane = lane
+        self.name = name or getattr(lane, "name", "stream")
+        self._events = 0
+        self._lock = threading.Lock()
+        # Completion futures of async-dispatched launches on this stream:
+        # their lane task ends at DISPATCH (XLA runs the kernel in the
+        # background), so a lane marker alone would record an event
+        # before the kernel finishes.  record() folds these in — the
+        # CUDA contract is completion, not submission.
+        self._completions: "list[Future]" = []
+
+    # -- plumbing ------------------------------------------------------------
+
+    def _lane_for(self, device):
+        """This stream's lane, validated against the submitting device —
+        an op scoped to a stream of the WRONG device would silently lose
+        its ordering guarantee, so it is refused outright."""
+        if device is not self.device and getattr(device, "key", None) != self.device.key:
+            raise ValueError(
+                f"stream {self.name!r} belongs to device {self.device.key}; "
+                f"it cannot order work on device {getattr(device, 'key', device)!r} — "
+                "create a stream on that device instead"
+            )
+        return self.lane
+
+    # -- generic host-callback submission (cudaLaunchHostFunc) ----------------
+
+    def submit(self, fn: Callable, *args, **kwargs) -> Future:
+        """Run a host callable at this point in the stream (FIFO with the
+        device ops already enqueued here)."""
+        return self.lane.submit(fn, *args, **kwargs)
+
+    # -- stream-scoped device verbs -------------------------------------------
+
+    def enqueue_write(self, buf, offset: int, data, count: "int | None" = None) -> Future:
+        """``buf.enqueue_write`` ordered by this stream."""
+        return buf.enqueue_write(offset, data, count, stream=self)
+
+    def enqueue_read(self, buf, offset: int = 0, count: "int | None" = None) -> Future:
+        """``buf.enqueue_read`` ordered by this stream."""
+        return buf.enqueue_read(offset, count, stream=self)
+
+    def launch(
+        self,
+        program,
+        args: "Sequence[Any]",
+        kernel: str,
+        grid=None,
+        block=None,
+        out=None,
+        sync: str = "ready",
+    ) -> Future:
+        """``program.run`` ordered by this stream (``Program.launch``
+        with ``stream=self``)."""
+        return program.run(args, kernel, grid=grid, block=block, out=out, sync=sync, stream=self)
+
+    # -- events ----------------------------------------------------------------
+
+    def _note_completion(self, fut: Future) -> None:
+        """Track an async launch's completion future so ``record()`` means
+        device completion (called by ``Program.run(stream=...)``)."""
+        with self._lock:
+            # Drop already-completed entries: the list stays O(in-flight).
+            self._completions = [f for f in self._completions if not f.done()]
+            self._completions.append(fut)
+
+    def record(self, name: str = "") -> Event:
+        """Record an event at the current tail of this stream
+        (``cudaEventRecord``): it fires once everything submitted so far
+        has COMPLETED — a lane marker covers transfers and host callbacks
+        (their tasks occupy the lane until done), joined with the pending
+        launch-completion futures (kernels complete asynchronously after
+        their dispatch task releases the lane)."""
+        from repro.core.futures import when_all
+
+        self._events += 1
+        marker = self.lane.submit(lambda: None)
+        with self._lock:
+            pending = list(self._completions)
+            if pending:
+                fut = when_all([marker, *pending], name=f"record:{self.name}").then(
+                    lambda _: None, executor="inline"
+                )
+                # Collapse: the event covers every completion noted so
+                # far, so it REPLACES them — a later record (or a
+                # synchronize/query) waits on this one future instead of
+                # re-joining the whole pending set.
+                self._completions = [fut]
+            else:
+                fut = marker
+        return Event(self, fut, name or f"{self.name}:e{self._events}")
+
+    def wait_event(self, event: Event) -> Future:
+        """Gate LATER work on this stream behind ``event``
+        (``cudaStreamWaitEvent``): returns the future of the gate task.
+        Ops submitted to this stream after the call run only once the
+        event's recorded point has been reached; the calling host thread
+        does not block."""
+        if event.stream is self:
+            # Same-stream FIFO already orders later work behind the
+            # recorded point; a gate task would only park the lane on an
+            # earlier task of itself (completed by FIFO) — a no-op.
+            return event.future
+        fut = event.future
+
+        def _gate() -> None:
+            # wait(), not get(): the gate orders, it does not re-raise —
+            # a failure surfaces on the event's own future, and on
+            # whichever later op actually consumes the poisoned value.
+            fut.wait()
+
+        return self.lane.submit(_gate)
+
+    # -- synchronization --------------------------------------------------------
+
+    def query(self) -> bool:
+        """Non-blocking: is every operation submitted so far complete —
+        including kernels still executing after dispatch?
+        (``cudaStreamQuery``)."""
+        if self.lane.load().depth != 0:
+            return False
+        with self._lock:
+            return all(f.done() for f in self._completions)
+
+    def synchronize(self) -> "Stream":
+        """Block until everything submitted to this stream has COMPLETED —
+        the lane is drained and every async launch has finished
+        (``cudaStreamSynchronize``)."""
+        self.lane.drain()
+        with self._lock:
+            pending = list(self._completions)
+        for f in pending:
+            f.wait()
+        return self
+
+    def load(self):
+        """This lane's backlog snapshot (per-stream ``QueueLoad``)."""
+        return self.lane.load()
+
+    def __repr__(self) -> str:
+        return f"Stream({self.name} @ {self.device.key}, depth={self.lane.load().depth})"

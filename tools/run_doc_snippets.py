@@ -1,0 +1,97 @@
+"""Execute every fenced ``python`` block in the given docs, so the
+tutorial can never rot.
+
+    PYTHONPATH=src python tools/run_doc_snippets.py docs README.md
+
+Each ` ```python ` block runs in its own subprocess under the caller's
+``PYTHONPATH`` (tier-1 environment) with a hard timeout; a block is
+skipped only when tagged ` ```python no-run ` (reserved for fragments
+that are deliberately incomplete — currently none).  Blocks run in file
+order, every file independent, and the first failure names the file,
+block number and starting line, then dumps the block and its stderr.
+"""
+from __future__ import annotations
+
+import os
+import pathlib
+import re
+import subprocess
+import sys
+import tempfile
+
+_FENCE = re.compile(r"^```python[ \t]*(?P<tag>no-run)?[ \t]*$")
+_TIMEOUT_S = 600
+
+
+def extract_blocks(path: "pathlib.Path") -> "list[tuple[int, str]]":
+    """(starting line, source) of every runnable python block in ``path``."""
+    blocks = []
+    lines = path.read_text().splitlines()
+    i = 0
+    while i < len(lines):
+        m = _FENCE.match(lines[i])
+        if m is None:
+            i += 1
+            continue
+        start = i + 2  # 1-based line of the block's first source line
+        body = []
+        i += 1
+        while i < len(lines) and lines[i].rstrip() != "```":
+            body.append(lines[i])
+            i += 1
+        i += 1
+        if m.group("tag") != "no-run":
+            blocks.append((start, "\n".join(body) + "\n"))
+    return blocks
+
+
+def run_block(path: "pathlib.Path", line: int, src: str, index: int) -> bool:
+    with tempfile.NamedTemporaryFile("w", suffix=f"_snippet{index}.py", delete=False) as f:
+        f.write(src)
+        tmp = f.name
+    try:
+        proc = subprocess.run(
+            [sys.executable, tmp],
+            capture_output=True,
+            text=True,
+            timeout=_TIMEOUT_S,
+            env=dict(os.environ),
+        )
+    finally:
+        os.unlink(tmp)
+    if proc.returncode != 0:
+        print(f"FAIL {path}:{line} (block {index})", file=sys.stderr)
+        print("----- block -----", file=sys.stderr)
+        print(src, file=sys.stderr)
+        print("----- stderr -----", file=sys.stderr)
+        print(proc.stderr[-4000:], file=sys.stderr)
+        return False
+    return True
+
+
+def main(argv: "list[str]") -> int:
+    targets: "list[pathlib.Path]" = []
+    for arg in argv or ["docs"]:
+        p = pathlib.Path(arg)
+        if p.is_dir():
+            targets.extend(sorted(p.glob("**/*.md")))
+        elif p.exists():
+            targets.append(p)
+        else:
+            print(f"no such file or directory: {arg}", file=sys.stderr)
+            return 2
+
+    total = 0
+    for path in targets:
+        blocks = extract_blocks(path)
+        for i, (line, src) in enumerate(blocks, 1):
+            print(f"RUN  {path}:{line} (block {i}/{len(blocks)})", flush=True)
+            if not run_block(path, line, src, i):
+                return 1
+            total += 1
+    print(f"OK   {total} snippet(s) across {len(targets)} file(s)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
