@@ -5,11 +5,14 @@ iterations, first discarded, mean of the remaining 10).  The overhead
 module's rows are additionally written to ``BENCH_overhead.json``, the
 fig6 multi-device rows (incl. per-policy scheduler rows) to
 ``BENCH_multidevice.json``, the fig7 remote-transport rows (local vs
-loopback vs cluster launch) to ``BENCH_remote.json``, and the fig8
+loopback vs cluster launch) to ``BENCH_remote.json``, the fig8
 stream-overlap rows (1-stream serialized vs 2-stream double-buffered
-pipeline) to ``BENCH_overlap.json`` so the native/futurized/graph gap,
-the 1→4-device scaling trajectory, the parcel-transport tax and the
-transfer–compute overlap win are all tracked per-PR.
+pipeline) to ``BENCH_overlap.json``, and the fig9 serving rows
+(continuous batching vs per-request serial, 1 and 8 devices) to
+``BENCH_serving.json`` so the native/futurized/graph gap, the
+1→4-device scaling trajectory, the parcel-transport tax, the
+transfer–compute overlap win and the batching throughput win are all
+tracked per-PR.
 
     PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig3,...]
 """
@@ -29,6 +32,7 @@ MODULES = [
     ("fig6", "benchmarks.fig6_multidevice"),
     ("fig7", "benchmarks.fig7_remote"),
     ("fig8", "benchmarks.fig8_overlap"),
+    ("fig9", "benchmarks.fig9_serving"),
     ("roofline", "benchmarks.roofline_table"),
 ]
 
@@ -60,6 +64,7 @@ def main() -> None:
                 "fig6": "BENCH_multidevice.json",
                 "fig7": "BENCH_remote.json",
                 "fig8": "BENCH_overlap.json",
+                "fig9": "BENCH_serving.json",
             }.get(tag)
             if json_out:
                 payload = {

@@ -44,7 +44,7 @@ def main():
     # make_prefill which the prefill_32k dry-run cells lower)
     tok = jnp.asarray(prompt[:, :1], jnp.int32)
     for p in range(args.prompt_len):
-        nxt, cache = serve(params, cache, tok, jnp.int32(p))
+        nxt, _logits, cache = serve(params, cache, tok, jnp.int32(p))
         tok = (
             jnp.asarray(prompt[:, p + 1 : p + 2], jnp.int32)
             if p + 1 < args.prompt_len
@@ -54,7 +54,7 @@ def main():
     generated = []
     t0 = time.perf_counter()
     for i in range(args.tokens):
-        nxt, cache = serve(params, cache, tok, jnp.int32(args.prompt_len + i))
+        nxt, _logits, cache = serve(params, cache, tok, jnp.int32(args.prompt_len + i))
         generated.append(np.asarray(nxt)[:, 0])
         tok = nxt
     dt = time.perf_counter() - t0

@@ -8,7 +8,10 @@ devices ("effective memory exchange between different entities", §4) and
 updates the AGAS placement (percolation).
 
 Offsets are in *elements* (dtype-safe), applied on a flat view of the
-buffer, matching HPXCL's (offset, size) windows.
+buffer, matching HPXCL's (offset, size) windows.  Windows are validated
+eagerly at enqueue time: an out-of-range (offset, count) raises
+``ValueError`` instead of being silently clamped by XLA's dynamic-slice
+semantics (which would read/overwrite the wrong elements).
 
 Hot-path notes (DESIGN.md §8): a full-buffer write whose source already
 matches the buffer's shape/dtype skips the flatten/reshape/astype copies —
@@ -50,6 +53,22 @@ def _flat_slice(src, offset, count):
 # Guards the submit-once of Buffer.free across racing threads; free is
 # rare enough that one process-wide lock beats a lock per buffer.
 _free_lock = threading.Lock()
+
+
+def _check_window(size: int, offset: int, count: int, op: str) -> None:
+    """Validate an (offset, count) element window against a buffer of
+    ``size`` elements, raising ``ValueError`` on any out-of-range request.
+
+    ``jax.lax.dynamic_slice`` / ``dynamic_update_slice`` CLAMP out-of-range
+    start indices instead of failing, so without this check a bad window
+    silently reads/overwrites the wrong elements — the validation must
+    happen eagerly at enqueue time, before the op reaches a queue."""
+    if offset < 0 or count < 0 or offset + count > size:
+        raise ValueError(
+            f"{op} window out of range: offset={offset}, count={count} on a "
+            f"buffer of {size} element(s) — need 0 <= offset and "
+            "offset + count <= size"
+        )
 
 
 class Buffer:
@@ -124,6 +143,19 @@ class Buffer:
         """
         from repro.core.graph import current_graph
 
+        data_len = int(np.size(data))
+        _check_window(
+            self.size, offset, count if count is not None else data_len,
+            "enqueue_write",
+        )
+        if count is not None and count > data_len:
+            # The write path copies min(count, len(data)) elements; a count
+            # the data cannot cover would silently write a SHORTER window
+            # than the one just validated.
+            raise ValueError(
+                f"enqueue_write count={count} exceeds the {data_len} element(s) "
+                "of data supplied"
+            )
         g = current_graph()
         if g is not None:
             return g.write(self, data, offset=offset, count=count)
@@ -182,11 +214,11 @@ class Buffer:
         node (full-buffer only) and the node handle is returned."""
         from repro.core.graph import current_graph
 
+        n = self.size - offset if count is None else count
+        _check_window(self.size, offset, n, "enqueue_read")
         g = current_graph()
         if g is not None:
             return g.read(self, offset=offset, count=count)
-
-        n = self.size - offset if count is None else count
 
         def _read():
             src = self.array()

@@ -167,7 +167,13 @@ class Future(Generic[T]):
         try:
             self._cf.set_result(r())
         except BaseException as e:  # noqa: BLE001 - futures carry any error
-            self._cf.set_exception(e)
+            try:
+                self._cf.set_exception(e)
+            except _cf.InvalidStateError:
+                # cancel() raced the resolver: the consumer walked away, the
+                # produced value (or its error) is discarded, never raised.
+                if not self._cf.cancelled():
+                    raise
 
     def _spawn_resolver(self) -> None:
         """Move a pending resolver onto the completion pool (if any)."""
@@ -183,6 +189,8 @@ class Future(Generic[T]):
             return FutureState.FAILED if self._exc is not None else FutureState.READY
         if self._has_resolver() or not self._cf.done():
             return FutureState.PENDING
+        if self._cf.cancelled():
+            return FutureState.FAILED
         return FutureState.FAILED if self._cf.exception() else FutureState.READY
 
     def done(self) -> bool:
@@ -210,7 +218,10 @@ class Future(Generic[T]):
         r = self._take_resolver()
         if r is not None:
             self._run_resolver_inline(r)
-        return self._cf.exception(timeout)
+        try:
+            return self._cf.exception(timeout)
+        except _cf.CancelledError as e:  # a cancelled future *carries* it
+            return e
 
     def wait(self, timeout: "float | None" = None) -> "Future[T]":
         try:
@@ -218,6 +229,26 @@ class Future(Generic[T]):
         except BaseException:  # noqa: BLE001 - wait() never raises
             pass
         return self
+
+    def cancel(self) -> bool:
+        """Best-effort cancellation of a still-pending future.
+
+        Returns True when the future was cancelled before anything started
+        producing its value; ``get()`` then raises ``CancelledError``.  A
+        completed (or value-mode) future — and a task already running on a
+        queue worker — cannot be cancelled and returns False.  Producers
+        (``Promise.set_value``, the serving engine's batch resolution)
+        tolerate a racing cancel: a result arriving after a successful
+        cancel is discarded, never raised."""
+        if self._cf is None:
+            return False
+        # Claiming the resolver keeps a lazy device-value future from
+        # starting its blocking wait after the cancel.
+        self._take_resolver()
+        return self._cf.cancel()
+
+    def cancelled(self) -> bool:
+        return self._cf is not None and self._cf.cancelled()
 
     # -- completion (used by Promise / WorkQueue) --------------------------
 
@@ -253,6 +284,8 @@ class Future(Generic[T]):
         """
         # Fast path: parent complete -> run inline, return completed future.
         if self._cf is None or (not self._has_resolver() and self._cf.done()):
+            if self._cf is not None and self._cf.cancelled():
+                return Future.failed(_cf.CancelledError(), name=name or f"{self.name}.then")
             exc = self._exc if self._cf is None else self._cf.exception()
             if exc is not None:
                 return Future.failed(exc, name=name or f"{self.name}.then")
@@ -266,7 +299,7 @@ class Future(Generic[T]):
         self._spawn_resolver()
 
         def _fire(parent: _cf.Future) -> None:
-            exc = parent.exception()
+            exc = _cf.CancelledError() if parent.cancelled() else parent.exception()
             if exc is not None:
                 out._cf.set_exception(exc)
                 return
@@ -292,7 +325,11 @@ class Future(Generic[T]):
 
 
 class Promise(Generic[T]):
-    """Manually-resolved future source (``hpx::promise``)."""
+    """Manually-resolved future source (``hpx::promise``).
+
+    A promise whose future was ``cancel()``-ed discards late results
+    instead of raising: the consumer walked away, the producer should not
+    crash for it."""
 
     def __init__(self, name: str = ""):
         self._future: Future[T] = Future(name=name)
@@ -301,10 +338,18 @@ class Promise(Generic[T]):
         return self._future
 
     def set_value(self, value: T) -> None:
-        self._future._set_result(value)
+        try:
+            self._future._set_result(value)
+        except _cf.InvalidStateError:
+            if not self._future._cf.cancelled():
+                raise
 
     def set_exception(self, exc: BaseException) -> None:
-        self._future._set_exception(exc)
+        try:
+            self._future._set_exception(exc)
+        except _cf.InvalidStateError:
+            if not self._future._cf.cancelled():
+                raise
 
 
 def make_ready_future(value: T) -> Future[T]:
@@ -349,7 +394,7 @@ def when_all(futures: "Iterable[Future]", name: str = "when_all") -> Future[list
 
     def _make_cb(i: int):
         def _cb(parent: _cf.Future) -> None:
-            exc = parent.exception()
+            exc = _cf.CancelledError() if parent.cancelled() else parent.exception()
             if exc is not None:
                 # set_exception on an already-done future raises; guard.
                 if not out._cf.done():
@@ -395,7 +440,7 @@ def when_any(futures: "Iterable[Future]", name: str = "when_any") -> Future[tupl
             if out._cf.done():
                 return
             try:
-                exc = parent.exception()
+                exc = _cf.CancelledError() if parent.cancelled() else parent.exception()
                 if exc is not None:
                     out._cf.set_exception(exc)
                 else:

@@ -341,6 +341,7 @@ class GraphExec:
                 break
         if route_dev is None:
             raise ValueError(f"TaskGraph '{graph.name}' is empty")
+        self._route_dev = route_dev
         self._queue = route_dev.ops_queue
         # The single-hop path serializes replays through its queue; the
         # fan-out join/commit runs off-queue, so back-to-back replays of
@@ -351,6 +352,7 @@ class GraphExec:
         # its foreign-extern pre-reads behind _last_replay instead.
         self._replay_lock = threading.Lock()
         self._last_replay: "Future | None" = None
+        self._last_replay_queue = self._queue  # lane of the previous replay
         # Placement spans segments AND extern inputs: a graph whose input
         # buffer lives on another device needs the replay-time device_put
         # guard even when all launches share one device.
@@ -475,6 +477,8 @@ class GraphExec:
                 for pos, s in enumerate(in_syms):
                     if s in g._extern:
                         continue  # replay re-reads extern buffers: never donate
+                    if not g._sym_spec[s].shape:
+                        continue  # XLA cannot alias 0-d inputs (warns, no-op)
                     if s in keep:
                         continue
                     if any(u > si for u in launch_use_segs.get(s, ())):
@@ -660,7 +664,8 @@ class GraphExec:
             jax.block_until_ready(live_vals)
         return GraphResult(fetches, reads)
 
-    def replay(self, feeds: "dict | None" = None, sync: str = "ready") -> "Future[GraphResult]":
+    def replay(self, feeds: "dict | None" = None, sync: str = "ready",
+               stream=None) -> "Future[GraphResult]":
         """Execute the whole graph and resolve **one** ``Future``
         (``cudaGraphLaunch`` analogue).
 
@@ -676,12 +681,36 @@ class GraphExec:
         ``WriteNode`` handle or by the target ``Buffer``.  ``sync="ready"``
         resolves at device completion of all kept values (CUDA-event
         semantics); ``sync="dispatch"`` resolves once results are
-        submitted (the queue is released immediately)."""
+        submitted (the queue is released immediately).
+
+        ``stream`` replays a single-segment graph on a caller-chosen
+        stream of the route device instead of its default lane
+        (``cudaGraphLaunch(exec, stream)``): the replay is then FIFO with
+        that stream's other work and overlaps the device's other lanes —
+        the serving engine feeds micro-batches this way so H2D token
+        writes and decode replays ride an engine-owned lane, concurrent
+        with default-lane traffic.  Multi-segment graphs resolve their
+        lanes at instantiate (chain -> stream, §11) and refuse the
+        override."""
         block = sync == "ready"
+        if stream is not None and self._fanout:
+            raise ValueError(
+                f"GraphExec '{self.graph.name}' is a fan-out plan ({len(self._segments)} "
+                "segments): its lanes were resolved at instantiate (one stream per "
+                "chain) and cannot be overridden per replay — stream= applies to "
+                "single-segment graphs only"
+            )
         if self._fanout:
             return self._replay_fanout(feeds, block)
+        queue = self._queue if stream is None else stream._lane_for(self._route_dev)
 
-        def _execute(pre) -> GraphResult:
+        def _execute(pre, prev_gate=None) -> GraphResult:
+            if prev_gate is not None:
+                # A prior replay of this exec went down a DIFFERENT lane
+                # (stream override): park on it so buffer commits never
+                # race between replays.  Always earlier-submitted work, so
+                # the deadlock-freedom induction in __init__ still holds.
+                prev_gate.wait()
             env, adopted = self._stage_env(feeds, pre)
             for seg in self._segments:
                 xs = [env[s] for s in seg.in_syms]
@@ -705,12 +734,14 @@ class GraphExec:
             prev = self._last_replay
             for s, buf in self.graph._extern.items():
                 q = buf.device.ops_queue
-                if q is not self._queue:
+                if q is not queue:
                     pre[s] = q.submit(
                         _extern_read(buf, self._prod_dev[s].jax_device, after=prev)
                     )
-            launched = self._queue.submit(_execute, pre)
+            gate = prev if self._last_replay_queue is not queue else None
+            launched = queue.submit(_execute, pre, gate)
             self._last_replay = launched
+            self._last_replay_queue = queue
         return launched
 
     def _replay_fanout(self, feeds, block: bool) -> "Future[GraphResult]":

@@ -148,7 +148,9 @@ def _enc(obj: Any, out: bytearray) -> None:
         arr = np.ascontiguousarray(obj)
         out += b"a"
         _put_str(out, arr.dtype.str)
-        _enc(tuple(int(d) for d in arr.shape), out)
+        # shape from the ORIGINAL: ascontiguousarray promotes 0-d to (1,)
+        # (same bytes, wrong rank) — a 0-d array must round-trip as 0-d.
+        _enc(tuple(int(d) for d in obj.shape), out)
         raw = arr.tobytes()
         _put_len(out, len(raw))
         out += raw
@@ -534,6 +536,41 @@ class ActionServer:
         def _run():
             placed = jax.device_put(batch, dev.jax_device)
             return jax.tree_util.tree_map(np.asarray, fn(placed))
+
+        return dev.ops_queue.submit(_run).get()
+
+    def _do_apply_batched(self, payload: dict) -> list:
+        """Run a registry kernel ONCE over a stacked micro-batch assembled
+        from many requests, and reply with one result chunk per request
+        (the serving engine's cross-locality action, DESIGN.md §12).
+
+        ``batch`` is the padded, bucket-shaped pytree (all leaves share a
+        leading row axis); ``rows`` lists each member request's row count
+        in order.  One parcel carries the whole micro-batch out, and the
+        reply ships only the real rows back — padding never crosses the
+        wire twice."""
+        import jax
+
+        dev = self._device(payload.get("device"))
+        fn = resolve_kernel(payload["kernel"])
+        batch = payload["batch"]
+        rows = [int(r) for r in payload["rows"]]
+
+        def _run():
+            placed = jax.tree_util.tree_map(
+                lambda a: jax.device_put(a, dev.jax_device), batch
+            )
+            out = jax.tree_util.tree_map(np.asarray, fn(placed))
+            chunks, off = [], 0
+            for r in rows:
+                chunks.append(jax.tree_util.tree_map(
+                    # 0-d output leaves are shared, not row-sliced (same
+                    # rule as the engine's local slice path)
+                    lambda a, o=off, n=r: a[o : o + n] if getattr(a, "ndim", 0) >= 1 else a,
+                    out,
+                ))
+                off += r
+            return chunks
 
         return dev.ops_queue.submit(_run).get()
 

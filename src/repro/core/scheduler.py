@@ -137,6 +137,18 @@ class PlacementPolicy:
     def select(self, devices: Sequence, args: Sequence = (), program=None):
         raise NotImplementedError
 
+    def select_batch(self, devices: Sequence, batch_args: "Sequence[Sequence]" = (),
+                     program=None):
+        """Place one *micro-batch* of requests as a unit (the serving
+        engine's hook, DESIGN.md §12): ``batch_args`` is one arg sequence
+        per member request.  The default flattens every member's args into
+        a single scoring set, so ``affinity``/``percolation`` weigh the
+        whole batch's resident bytes (a batch is placed where MOST of its
+        KV bytes already live) and load policies see one decision, not N.
+        Policies with batch-specific knowledge can override."""
+        flat = [a for args in batch_args for a in args]
+        return self.select(devices, args=flat, program=program)
+
 
 class StaticPolicy(PlacementPolicy):
     """Everything on one device (HPXCL's hand-placement, as a policy)."""
@@ -302,7 +314,7 @@ class Scheduler:
             raise RuntimeError("Scheduler has no devices to place on")
         return devs
 
-    def select(self, args: Sequence = (), program=None):
+    def _live(self) -> list:
         devs = self.devices()
         # Heartbeat exclusion: a locality whose worker died takes no new
         # placements — its devices report alive() False until recovery.
@@ -312,10 +324,24 @@ class Scheduler:
                 "Scheduler has no live devices: every locality in the fleet "
                 "is dead (missed heartbeat or worker exit)"
             )
-        dev = self.policy.select(live, args=args, program=program)
+        return live
+
+    def _record(self, dev):
         with self._lock:
             self._placements[dev.key] = self._placements.get(dev.key, 0) + 1
         return dev
+
+    def select(self, args: Sequence = (), program=None):
+        return self._record(self.policy.select(self._live(), args=args, program=program))
+
+    def select_batch(self, batch_args: "Sequence[Sequence]" = (), program=None):
+        """One placement decision for a whole micro-batch of requests
+        (``PlacementPolicy.select_batch``): the engine hands every member
+        request's argument leaves, the policy scores them as a unit, and
+        the decision is logged once in ``stats()``."""
+        return self._record(
+            self.policy.select_batch(self._live(), batch_args=batch_args, program=program)
+        )
 
     def stats(self) -> "dict[str, int]":
         """Placement counts per device key (decision log, not queue state)."""

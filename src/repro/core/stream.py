@@ -168,6 +168,25 @@ class Stream:
         with ``stream=self``)."""
         return program.run(args, kernel, grid=grid, block=block, out=out, sync=sync, stream=self)
 
+    def replay(self, exe, feeds: "dict | None" = None, sync: str = "ready") -> Future:
+        """Replay an instantiated single-segment ``GraphExec`` on THIS
+        stream (``cudaGraphLaunch(exec, stream)``): the whole fused replay
+        — feed writes, launches, fetches — runs FIFO with this stream's
+        other work and concurrently with the device's other lanes.  The
+        serving engine drives its decode micro-batches through this, one
+        engine-owned stream per device, so token feeds overlap default-
+        lane compute.  Equivalent to ``exe.replay(feeds, sync, stream=self)``.
+
+        The replay future is noted as a stream completion (the same
+        contract as ``Program.run(stream=...)``): a later ``record()`` /
+        ``query()`` / ``synchronize()`` covers the replayed graph's
+        device completion under the default ``sync="ready"``.  As with
+        launches, ``sync="dispatch"`` resolves — and records — at
+        dispatch; use ``"ready"`` where events must mean completion."""
+        fut = exe.replay(feeds=feeds, sync=sync, stream=self)
+        self._note_completion(fut)
+        return fut
+
     # -- events ----------------------------------------------------------------
 
     def _note_completion(self, fut: Future) -> None:

@@ -22,7 +22,14 @@ __all__ = ["Heartbeat", "StepMonitor", "StragglerEvent"]
 
 class Heartbeat:
     """Soft heartbeat: worker calls ``tick()``; ``check()`` (monitor side)
-    returns False once the deadline is missed."""
+    returns False once the deadline is missed.
+
+    The dead latch edge-triggers ``on_dead`` (once per death, not once per
+    ``check``) and CLEARS when the worker resumes ticking: a flapping
+    worker — dead, recovered, dead again — fires ``on_dead`` on every
+    dead transition.  Without the reset the latch stuck forever after the
+    first miss, so a recovered worker read alive from ``check()`` while a
+    second death could never re-arm the callback."""
 
     def __init__(self, timeout_s: float = 60.0, on_dead: "Optional[Callable]" = None):
         self.timeout_s = timeout_s
@@ -38,11 +45,17 @@ class Heartbeat:
     def check(self) -> bool:
         with self._lock:
             alive = (time.monotonic() - self._last) < self.timeout_s
+            fire = False
             if not alive and not self._dead:
                 self._dead = True
-                if self.on_dead:
-                    self.on_dead()
-            return alive
+                fire = bool(self.on_dead)
+            elif alive and self._dead:
+                # Recovery: the worker ticked again after missing its
+                # deadline — clear the latch so the next miss re-fires.
+                self._dead = False
+        if fire:
+            self.on_dead()
+        return alive
 
 
 @dataclass

@@ -135,7 +135,7 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False, mesh=None
             lowered = jax.jit(
                 serve,
                 in_shardings=(param_sh, cache_sh, batch_sh["tokens"], repl),
-                out_shardings=(None, cache_sh),
+                out_shardings=(None, None, cache_sh),
                 donate_argnums=(1,),
             ).lower(params_s, cache_s, tok_s, pos_s)
         fn_name = "serve_step"

@@ -1,0 +1,25 @@
+"""Serving layer: per-step decode/prefill builders, scheduler-routed
+fan-out, and the continuous-batching ``RequestEngine`` (DESIGN.md §12)."""
+from repro.serving.engine import EngineClosed, QueueFull, RequestEngine
+from repro.serving.serve_step import (
+    cache_to_rows,
+    make_prefill,
+    make_serve_engine,
+    make_serve_fanout,
+    make_serve_step,
+    rows_to_cache,
+    route_batches,
+)
+
+__all__ = [
+    "RequestEngine",
+    "QueueFull",
+    "EngineClosed",
+    "cache_to_rows",
+    "make_prefill",
+    "make_serve_engine",
+    "make_serve_fanout",
+    "make_serve_step",
+    "rows_to_cache",
+    "route_batches",
+]

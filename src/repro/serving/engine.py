@@ -1,0 +1,685 @@
+"""Continuous-batching request engine on the futurized runtime (DESIGN.md §12).
+
+The ROADMAP's north star — heavy traffic from many concurrent users — needs
+a front door: callers submit *individual* requests, but accelerators only
+stay utilized when those requests execute as batches.  ``RequestEngine`` is
+that multiplexing layer, built directly on the runtime's own primitives
+(futures, streams, the placement scheduler, graph replay, parcels) rather
+than bolted on above them:
+
+* **Admission queue + backpressure.**  ``submit`` enqueues one request and
+  returns a ``Future`` immediately.  The queue is bounded: a full queue
+  raises ``QueueFull`` at the call site (callers shed or retry — the
+  overload signal is explicit, never an unbounded pile-up).  Pending
+  requests can be ``cancel()``-ed through their future; cancelled entries
+  are dropped at batch assembly.
+
+* **Micro-batching.**  A batcher thread groups compatible requests —
+  same kind, same pytree structure, same per-row leaf shapes/dtypes, equal
+  broadcast (0-d) leaves — into micro-batches, bounded by ``max_batch``
+  rows and a ``max_delay_s`` deadline from the oldest member's arrival.
+  Batches are padded up to *bucketed* row counts (powers of two up to
+  ``max_batch``), so the ``Program``/jit executable cache hits a handful
+  of shapes instead of recompiling per occupancy.
+
+* **Placement.**  Each micro-batch is routed through the placement
+  scheduler as ONE decision (``Scheduler.select_batch``): the policy
+  scores the union of every member's argument leaves, so ``affinity`` /
+  ``percolation`` place the batch where most of its resident bytes (KV
+  cache rows) already live, and the fleet may span local devices and
+  cross-process localities (a cluster parcelport's scheduler).
+
+* **Execution.**  On a local device the step runs as a captured
+  ``TaskGraph`` replayed with feeds on an engine-owned stream
+  (``exe.replay(feeds=..., stream=s)``): the whole H2D-feed → fused step
+  sequence rides one dedicated lane, overlapping the device's default-lane
+  traffic, and replays hit the instantiate-time compiled executable.  On a
+  cross-process locality the batch ships as ONE ``apply_batched`` parcel
+  (kernel referenced by name; the reply carries only real rows back).
+  In-process proxies and untraceable steps fall back to a direct
+  queue-submitted call — same results, no fused replay.
+
+* **Per-request results.**  The batched output's leading axis is sliced
+  back per member: every caller's future resolves with exactly its rows
+  (host ``np.ndarray`` leaves, like ``enqueue_read``), bit-equal to
+  running that request alone through the same step.
+
+* **Metrics.**  ``metrics()`` snapshots request counts, batch/row/padding
+  totals, queue depth + high water, latency p50/p99 and requests/s.
+
+The engine serves any row-independent step function over a pytree whose
+array leaves share a leading row axis — a greedy-decode step
+(``make_serve_engine``), a prefill, or a plain kernel.  Correctness
+contract: the step must be *row-independent* along the leading axis
+(each request's rows computed independently), which is exactly what a
+batched decode/prefill step is.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+from typing import Any, Callable, Sequence
+
+import jax
+import numpy as np
+
+from repro.core.futures import Future, Promise
+
+__all__ = ["RequestEngine", "QueueFull", "EngineClosed"]
+
+
+class QueueFull(RuntimeError):
+    """Backpressure: the admission queue is at capacity — shed or retry."""
+
+
+class EngineClosed(RuntimeError):
+    """The engine no longer accepts (or will never run) this request."""
+
+
+def _now() -> float:
+    return time.monotonic()
+
+
+class _Request:
+    __slots__ = ("kind", "payload", "leaves", "treedef", "rows", "key",
+                 "promise", "arrived")
+
+    def __init__(self, kind, payload, leaves, treedef, rows, key, promise, arrived):
+        self.kind = kind
+        self.payload = payload
+        self.leaves = leaves
+        self.treedef = treedef
+        self.rows = rows
+        self.key = key
+        self.promise = promise
+        self.arrived = arrived
+
+    @property
+    def future(self) -> Future:
+        return self.promise.get_future()
+
+
+def _classify(kind: str, payload) -> "tuple[list, Any, int, tuple]":
+    """(leaves, treedef, rows, batch key) of one request payload.
+
+    Array leaves with ndim >= 1 are *row* leaves: they share a leading
+    row axis (usually 1) that the engine concatenates over.  0-d and
+    scalar leaves are *broadcast* leaves — shared by every row — and two
+    requests only share a micro-batch when their broadcast values are
+    bit-equal (the decode ``pos`` scalar is the canonical example: only
+    same-position steps batch together).
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(payload)
+    rows: "int | None" = None
+    metas = []
+    for a in leaves:
+        if hasattr(a, "shape") and getattr(a, "ndim", 0) >= 1:
+            lead = int(a.shape[0])
+            if rows is None:
+                rows = lead
+            elif lead != rows:
+                raise ValueError(
+                    f"request row leaves disagree on the leading axis: {lead} vs {rows}"
+                )
+            metas.append(("row", tuple(int(d) for d in a.shape[1:]), np.dtype(a.dtype).str))
+        else:
+            v = np.asarray(a)
+            metas.append(("bcast", v.dtype.str, v.tobytes()))
+    if rows is None:
+        raise ValueError(
+            "request payload has no array leaf with a leading row axis — "
+            "the engine batches over axis 0"
+        )
+    if rows <= 0:
+        raise ValueError("request payload has zero rows")
+    return leaves, treedef, rows, (kind, treedef, tuple(metas))
+
+
+class _GraphEntry:
+    """One compiled replay route: (device, batch key, bucket) -> GraphExec."""
+
+    __slots__ = ("exe", "wnodes", "lnode", "out_treedef", "n_out")
+
+    def __init__(self, exe, wnodes, lnode, out_treedef, n_out):
+        self.exe = exe
+        self.wnodes = wnodes  # list of (leaf index, WriteNode)
+        self.lnode = lnode
+        self.out_treedef = out_treedef
+        self.n_out = n_out
+
+
+class RequestEngine:
+    """Admission queue -> micro-batches -> scheduler-placed batched steps.
+
+    Parameters
+    ----------
+    fn:
+        The step, per request *kind*: a callable (local execution), a
+        registered **kernel name** (str — required for placement on
+        cross-process localities, exactly as ``route_batches``), or a
+        ``{kind: callable|str}`` dict serving several request kinds (e.g.
+        ``{"decode": ..., "prefill": ...}``) from one queue.
+    max_batch:
+        Micro-batch row bound (also the largest padding bucket).
+    max_delay_s:
+        Deadline: a batch dispatches when full OR this long after its
+        oldest member arrived — the latency/throughput knob.
+    max_queue:
+        Admission bound; ``submit`` beyond it raises ``QueueFull``.
+    scheduler / cluster:
+        Placement, precedence as in ``route_batches``: explicit scheduler,
+        else ``cluster.scheduler()`` (the localities × devices grid), else
+        the process default.
+    graph:
+        Replay local batches as captured ``TaskGraph``s on an engine-owned
+        stream (default).  ``False`` forces the direct jit path — the
+        right choice when the step closes over large parameters (a fused
+        graph would bake them into the executable as constants).
+    """
+
+    def __init__(
+        self,
+        fn: "Callable | str | dict",
+        *,
+        max_batch: int = 8,
+        max_delay_s: float = 0.002,
+        max_queue: int = 256,
+        scheduler=None,
+        cluster=None,
+        graph: bool = True,
+        buckets: "Sequence[int] | None" = None,
+        name: str = "engine",
+    ):
+        from repro.core.parcel import resolve_kernel
+
+        if not isinstance(fn, dict):
+            fn = {fn if isinstance(fn, str) else "step": fn}
+        self._fns: "dict[str, Callable]" = {}
+        self._kernel_names: "dict[str, str | None]" = {}
+        for kind, f in fn.items():
+            if isinstance(f, str):
+                self._fns[kind] = resolve_kernel(f)
+                self._kernel_names[kind] = f
+            else:
+                self._fns[kind] = f
+                self._kernel_names[kind] = None
+        self.name = name
+        self.max_batch = int(max_batch)
+        self.max_delay_s = float(max_delay_s)
+        self.max_queue = int(max_queue)
+        self._scheduler = scheduler
+        self._cluster = cluster
+        self._graph_enabled = bool(graph)
+        if buckets is None:
+            b, buckets = 1, []
+            while b < self.max_batch:
+                buckets.append(b)
+                b *= 2
+            buckets.append(self.max_batch)
+        self._buckets = sorted(set(int(b) for b in buckets))
+        if self._buckets[-1] != self.max_batch:
+            raise ValueError("largest bucket must equal max_batch")
+
+        self._cv = threading.Condition()
+        self._queue: "deque[_Request]" = deque()
+        self._closed = False
+        self._inflight = 0
+
+        # Execution routes, built lazily per (device, key[, bucket]).
+        self._route_lock = threading.Lock()
+        self._graphs: "dict[tuple, _GraphEntry | None]" = {}  # None = don't graph
+        self._streams: "dict[str, Any]" = {}
+
+        # Metrics (one lock; hot counters only).
+        self._m_lock = threading.Lock()
+        self._started = _now()
+        self._submitted = 0
+        self._completed = 0
+        self._failed = 0
+        self._cancelled = 0
+        self._batches = 0
+        self._rows = 0
+        self._padded_rows = 0
+        self._queue_hwm = 0
+        self._latencies: "deque[float]" = deque(maxlen=4096)
+        self._queue_waits: "deque[float]" = deque(maxlen=4096)
+
+        self._thread = threading.Thread(
+            target=self._loop, name=f"engine:{name}", daemon=True
+        )
+        self._thread.start()
+
+    # -- submission surface --------------------------------------------------
+
+    def submit(self, payload, kind: "str | None" = None) -> Future:
+        """Enqueue one request; future of its slice of the batched result
+        (host ``np.ndarray`` leaves).  Raises ``QueueFull`` when the
+        admission queue is at capacity and ``EngineClosed`` after
+        ``close()``.  The future supports ``cancel()`` until its batch
+        dispatches."""
+        if kind is None:
+            if len(self._fns) != 1:
+                raise ValueError(f"engine serves kinds {sorted(self._fns)}; pass kind=")
+            kind = next(iter(self._fns))
+        elif kind not in self._fns:
+            raise KeyError(f"engine {self.name!r} serves no kind {kind!r}")
+        leaves, treedef, rows, key = _classify(kind, payload)
+        if rows > self.max_batch:
+            # An oversize request could never be taken into any group —
+            # admitting it would wedge the queue behind it forever.
+            raise ValueError(
+                f"request has {rows} rows but max_batch is {self.max_batch}: "
+                "split it, or raise max_batch"
+            )
+        promise: Promise = Promise(name=f"{self.name}:{kind}")
+        req = _Request(kind, payload, leaves, treedef, rows, key, promise, _now())
+        with self._cv:
+            if self._closed:
+                raise EngineClosed(f"engine {self.name!r} is closed")
+            if len(self._queue) >= self.max_queue:
+                raise QueueFull(
+                    f"engine {self.name!r} admission queue is full "
+                    f"({self.max_queue} requests) — backpressure: shed or retry"
+                )
+            self._queue.append(req)
+            depth = len(self._queue)
+            self._cv.notify_all()
+        with self._m_lock:
+            self._submitted += 1
+            if depth > self._queue_hwm:
+                self._queue_hwm = depth
+        return req.future
+
+    def __enter__(self) -> "RequestEngine":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def close(self, cancel_pending: bool = False) -> None:
+        """Stop admitting; drain.  Queued requests still execute (their
+        callers hold futures) unless ``cancel_pending`` fails them fast
+        with ``EngineClosed``.  Blocks until in-flight batches resolve."""
+        with self._cv:
+            if self._closed:
+                dropped = []
+            else:
+                self._closed = True
+                dropped = list(self._queue) if cancel_pending else []
+                if cancel_pending:
+                    self._queue.clear()
+            self._cv.notify_all()
+        for req in dropped:
+            req.promise.set_exception(
+                EngineClosed(f"engine {self.name!r} closed before this request ran")
+            )
+        self._thread.join(timeout=60)
+        with self._cv:
+            while self._inflight:
+                self._cv.wait(timeout=0.1)
+
+    def drain(self) -> None:
+        """Block until the queue is empty and no batch is in flight."""
+        with self._cv:
+            while self._queue or self._inflight:
+                self._cv.wait(timeout=0.05)
+
+    # -- metrics -------------------------------------------------------------
+
+    def metrics(self) -> dict:
+        """Snapshot of serving counters and latency percentiles (seconds)."""
+        with self._m_lock:
+            lats = sorted(self._latencies)
+            waits = sorted(self._queue_waits)
+            m = {
+                "requests_submitted": self._submitted,
+                "requests_completed": self._completed,
+                "requests_failed": self._failed,
+                "requests_cancelled": self._cancelled,
+                "batches": self._batches,
+                "rows": self._rows,
+                "padded_rows": self._padded_rows,
+                "queue_high_water": self._queue_hwm,
+                "mean_batch_rows": (self._rows / self._batches) if self._batches else 0.0,
+            }
+        with self._cv:
+            m["queue_depth"] = len(self._queue)
+            m["inflight_batches"] = self._inflight
+        elapsed = max(_now() - self._started, 1e-9)
+        m["elapsed_s"] = elapsed
+        m["requests_per_s"] = m["requests_completed"] / elapsed
+        if lats:
+            m["latency_p50_s"] = lats[int(0.50 * (len(lats) - 1))]
+            m["latency_p99_s"] = lats[int(0.99 * (len(lats) - 1))]
+        if waits:
+            m["queue_wait_p50_s"] = waits[int(0.50 * (len(waits) - 1))]
+            m["queue_wait_p99_s"] = waits[int(0.99 * (len(waits) - 1))]
+        return m
+
+    # -- batcher -------------------------------------------------------------
+
+    def _bucket(self, rows: int) -> int:
+        for b in self._buckets:
+            if rows <= b:
+                return b
+        return self._buckets[-1]
+
+    def _compatible_rows(self, key) -> int:
+        rows = 0
+        for r in self._queue:
+            if r.key == key:
+                rows += r.rows
+                if rows >= self.max_batch:
+                    break
+        return rows
+
+    def _take_group(self, key) -> "list[_Request]":
+        """Pop the head-compatible requests (in order, skipping cancelled
+        entries) up to ``max_batch`` rows; incompatible requests keep
+        their queue position."""
+        group: "list[_Request]" = []
+        rows = 0
+        kept: "deque[_Request]" = deque()
+        cancelled = 0
+        while self._queue:
+            r = self._queue.popleft()
+            if r.future.cancelled():
+                cancelled += 1
+                continue
+            if r.key == key and rows + r.rows <= self.max_batch:
+                group.append(r)
+                rows += r.rows
+            else:
+                kept.append(r)
+        self._queue.extend(kept)
+        if cancelled:
+            with self._m_lock:
+                self._cancelled += cancelled
+        return group
+
+    def _loop(self) -> None:
+        while True:
+            with self._cv:
+                while not self._queue and not self._closed:
+                    self._cv.wait()
+                if not self._queue:
+                    return  # closed and drained
+                head = self._queue[0]
+                deadline = head.arrived + self.max_delay_s
+                while (
+                    not self._closed
+                    and self._compatible_rows(head.key) < self.max_batch
+                    and _now() < deadline
+                ):
+                    self._cv.wait(timeout=max(deadline - _now(), 0.0) or 0.0005)
+                group = self._take_group(head.key)
+                if group:
+                    self._inflight += 1
+            if group:
+                try:
+                    self._dispatch(group)
+                except BaseException as e:  # noqa: BLE001 - engine must not die
+                    self._finish(group, None, e)
+
+    # -- dispatch ------------------------------------------------------------
+
+    def _scheduler_for(self):
+        if self._scheduler is not None:
+            return self._scheduler
+        if self._cluster is not None:
+            return self._cluster.scheduler()
+        from repro.core.scheduler import get_scheduler
+
+        return get_scheduler()
+
+    @staticmethod
+    def _concat_rows(group: "list[_Request]", i: int, meta, pad: int):
+        """One row leaf, concatenated over members and zero-padded to the
+        bucket (the single copy of the padding rule — stacking and graph
+        feeds both go through here)."""
+        arrs = [np.asarray(r.leaves[i]) for r in group]
+        if pad:
+            arrs.append(np.zeros((pad,) + meta[1], dtype=np.dtype(meta[2])))
+        return np.concatenate(arrs, axis=0) if len(arrs) > 1 else arrs[0]
+
+    def _stack(self, group: "list[_Request]", bucket: int):
+        """Concatenate member leaves over axis 0 and pad to the bucket;
+        broadcast leaves pass through from the first member (equal across
+        the group by key construction).  Returns (np pytree, total rows)."""
+        kind, treedef, metas = group[0].key
+        total = sum(r.rows for r in group)
+        pad = bucket - total
+        out_leaves = []
+        for i, meta in enumerate(metas):
+            if meta[0] == "row":
+                out_leaves.append(self._concat_rows(group, i, meta, pad))
+            else:
+                out_leaves.append(np.asarray(group[0].leaves[i]))
+        return jax.tree_util.tree_unflatten(treedef, out_leaves), total
+
+    def _dispatch(self, group: "list[_Request]") -> None:
+        kind = group[0].kind
+        dispatched = _now()
+        with self._m_lock:
+            for r in group:
+                self._queue_waits.append(dispatched - r.arrived)
+        try:
+            dev = self._scheduler_for().select_batch([r.leaves for r in group])
+        except BaseException as e:  # noqa: BLE001 - dead fleet fails the batch
+            self._finish(group, None, e)
+            return
+        bucket = self._bucket(sum(r.rows for r in group))
+
+        from repro.core.executor import get_runtime
+
+        pool = get_runtime().pool
+        cross_process = getattr(dev, "is_remote_proxy", False) and not dev._port.in_process
+        if cross_process:
+            kernel = self._kernel_names.get(kind)
+            if kernel is None:
+                self._finish(group, None, ValueError(
+                    f"engine placed a micro-batch on {dev.key}, a cross-process "
+                    "locality, but its step is a closure: construct the engine "
+                    "with a registered kernel name (str) so batches can travel "
+                    "as apply_batched parcels"
+                ))
+                return
+            batch, _total = self._stack(group, bucket)
+            fut = dev._call(
+                "apply_batched",
+                kernel=kernel,
+                batch=jax.tree_util.tree_map(np.asarray, batch),
+                rows=[r.rows for r in group],
+            )
+            pool.submit(self._join_chunks, fut, group, bucket)
+            return
+
+        entry = self._graph_route(dev, group[0].key, bucket) if self._graph_enabled else None
+        if entry is not None:
+            metas = group[0].key[2]
+            pad = bucket - sum(r.rows for r in group)
+            feeds = {}
+            for i, w in entry.wnodes:
+                if metas[i][0] == "row":
+                    feeds[w] = self._concat_rows(group, i, metas[i], pad)
+                else:
+                    # Broadcast leaves are write-fed 0-d buffers, NOT baked
+                    # constants: one compiled route serves every value (a
+                    # decode `pos` must not compile per token).
+                    feeds[w] = np.asarray(group[0].leaves[i])
+            fut = entry.exe.replay(feeds=feeds, stream=self._stream_for(dev))
+            pool.submit(self._join_graph, fut, entry, group, bucket)
+            return
+
+        # Direct path: loopback proxies, graph=False, or untraceable steps.
+        batch, _total = self._stack(group, bucket)
+        fn = self._fns[kind]
+
+        def _run(batch=batch, dev=dev, fn=fn):
+            placed = jax.device_put(batch, dev.jax_device)
+            return fn(placed)
+
+        q = dev.ops_queue
+        if not getattr(dev, "is_remote_proxy", False):
+            q = self._stream_for(dev).lane
+        fut = q.submit(_run)
+        pool.submit(self._join_direct, fut, group, bucket)
+
+    # -- execution routes ----------------------------------------------------
+
+    def _stream_for(self, dev):
+        """The engine's dedicated stream on ``dev`` (created on first use):
+        micro-batch feeds and steps ride one lane, ordered among
+        themselves, concurrent with the device's other streams."""
+        with self._route_lock:
+            s = self._streams.get(dev.key)
+            if s is None:
+                s = self._streams[dev.key] = dev.create_stream(f"engine.{self.name}")
+            return s
+
+    @staticmethod
+    def _route_key(key) -> tuple:
+        """Batch key with broadcast VALUES erased (dtype kept): the batch
+        key gates which requests share a micro-batch (bit-equal broadcast
+        leaves), but compiled routes are value-independent — broadcast
+        leaves are fed at replay, so a decode ``pos`` that increments
+        every token reuses ONE executable instead of compiling per value."""
+        kind, treedef, metas = key
+        return (kind, treedef, tuple(m if m[0] == "row" else ("bcast", m[1]) for m in metas))
+
+    def _graph_route(self, dev, key, bucket) -> "_GraphEntry | None":
+        """Captured-replay route for (device, route key, bucket), built
+        once.  Returns None (and remembers the refusal) when the device is
+        a proxy or the step cannot be traced into a fused executable."""
+        if getattr(dev, "is_remote_proxy", False):
+            return None
+        cache_key = (dev.key, self._route_key(key), bucket)
+        with self._route_lock:
+            if cache_key in self._graphs:
+                return self._graphs[cache_key]
+        entry = None
+        try:
+            entry = self._build_graph(dev, key, bucket)
+        except Exception:  # noqa: BLE001 - untraceable step: direct path
+            entry = None
+        with self._route_lock:
+            entry = self._graphs.setdefault(cache_key, entry)
+        return entry
+
+    def _build_graph(self, dev, key, bucket) -> _GraphEntry:
+        from repro.core.graph import TaskGraph
+        from repro.core.program import Program
+
+        kind, treedef, metas = key
+        fn = self._fns[kind]
+
+        def flat(*leaves):
+            batch = jax.tree_util.tree_unflatten(treedef, list(leaves))
+            return tuple(jax.tree_util.tree_leaves(fn(batch)))
+
+        # Shape-infer the step's output structure (and fail fast on
+        # steps that cannot trace with traced broadcast leaves — e.g. a
+        # value read as a static bound — falling back to the direct path,
+        # which passes the concrete values).
+        specs = []
+        for meta in metas:
+            if meta[0] == "row":
+                specs.append(jax.ShapeDtypeStruct((bucket,) + meta[1], np.dtype(meta[2])))
+            else:
+                specs.append(jax.ShapeDtypeStruct((), np.dtype(meta[1])))
+        out_shape = jax.eval_shape(fn, jax.tree_util.tree_unflatten(treedef, list(specs)))
+        out_leaves, out_treedef = jax.tree_util.tree_flatten(out_shape)
+
+        prog = Program(dev, {kind: flat}, name=f"{self.name}:{kind}")
+        g = TaskGraph(f"{self.name}:{kind}:b{bucket}")
+        args, wnodes = [], []
+        for i, meta in enumerate(metas):
+            # EVERY leaf is a write-fed buffer — row leaves bucket-shaped,
+            # broadcast leaves 0-d — so one compiled route serves every
+            # broadcast value (fed per replay, never baked as a constant).
+            if meta[0] == "row":
+                shape, dt = (bucket,) + meta[1], np.dtype(meta[2])
+            else:
+                shape, dt = (), np.dtype(meta[1])
+            buf = dev.create_buffer(shape, dt).get()
+            wnodes.append((i, g.write(buf, None)))
+            args.append(buf)
+        lnode = g.run(prog, args, kind)
+        exe = g.instantiate()
+        return _GraphEntry(exe, wnodes, lnode, out_treedef, len(out_leaves))
+
+    # -- joins (pool tasks: block on the batch future, slice, resolve) --------
+
+    def _join_graph(self, fut, entry: _GraphEntry, group, bucket) -> None:
+        try:
+            res = fut.get()
+            vals = res[entry.lnode]
+            leaves = [vals] if entry.n_out == 1 else list(vals)
+            out = jax.tree_util.tree_unflatten(
+                entry.out_treedef, [np.asarray(v) for v in leaves]
+            )
+        except BaseException as e:  # noqa: BLE001 - errors fan to every member
+            self._finish(group, None, e, bucket)
+            return
+        self._finish(group, out, None, bucket)
+
+    def _join_direct(self, fut, group, bucket) -> None:
+        try:
+            out = jax.tree_util.tree_map(np.asarray, fut.get())
+        except BaseException as e:  # noqa: BLE001
+            self._finish(group, None, e, bucket)
+            return
+        self._finish(group, out, None, bucket)
+
+    def _join_chunks(self, fut, group, bucket) -> None:
+        """Cross-locality reply: one pre-sliced chunk per member request."""
+        try:
+            chunks = fut.get()
+        except BaseException as e:  # noqa: BLE001
+            self._finish(group, None, e, bucket)
+            return
+        done = _now()
+        for req, chunk in zip(group, chunks):
+            req.promise.set_value(chunk)
+        self._note_done(group, done, bucket, failed=False)
+
+    def _finish(self, group, out, exc, bucket: "int | None" = None) -> None:
+        done = _now()
+        if exc is not None:
+            for req in group:
+                req.promise.set_exception(exc)
+        else:
+            off = 0
+            for req in group:
+                sl = jax.tree_util.tree_map(
+                    lambda a, o=off, n=req.rows: a[o : o + n] if getattr(a, "ndim", 0) >= 1 else a,
+                    out,
+                )
+                req.promise.set_value(sl)
+                off += req.rows
+        self._note_done(group, done, bucket, failed=exc is not None)
+
+    def _note_done(self, group, done, bucket, failed: bool) -> None:
+        rows = sum(r.rows for r in group)
+        with self._m_lock:
+            self._batches += 1
+            self._rows += rows
+            if bucket is not None:
+                self._padded_rows += max(bucket - rows, 0)
+            if failed:
+                self._failed += len(group)
+            else:
+                self._completed += len(group)
+                for r in group:
+                    self._latencies.append(done - r.arrived)
+        with self._cv:
+            self._inflight -= 1
+            self._cv.notify_all()
+
+    def __repr__(self) -> str:
+        m = self.metrics()
+        return (
+            f"RequestEngine({self.name}: {m['requests_completed']}/{m['requests_submitted']} "
+            f"served, {m['batches']} batches, depth={m['queue_depth']})"
+        )

@@ -8,6 +8,12 @@ through the placement scheduler — ``route_batches`` asks the policy for a
 device per batch (load for ``least_loaded``, resident bytes for
 ``affinity``), percolates the batch there, and runs it on that device's
 ops queue.  ``make_serve_fanout`` specializes this to decode steps.
+
+Continuous batching (DESIGN.md §12): ``route_batches`` fans out batches
+the *caller* already assembled; ``make_serve_engine`` builds the
+``repro.serving.engine.RequestEngine`` that assembles them — individual
+decode requests are admitted, micro-batched, placed and resolved per
+caller.
 """
 from __future__ import annotations
 
@@ -19,13 +25,17 @@ from repro.models import get_model
 
 def make_serve_step(cfg, plan=None):
     """Returns ``serve_step(params, cache, tokens, pos) -> (next_tokens,
-    logits, cache)`` — greedy decode of one token."""
+    logits, cache)`` — greedy decode of one token.
+
+    All three documented values are returned: the greedy token, the raw
+    logits (callers sample / compute logprobs from them), and the updated
+    KV cache."""
     m = get_model(cfg)
 
     def serve_step(params, cache, tokens, pos):
         logits, cache = m.decode_step(cfg, params, cache, tokens, pos)
         nxt = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
-        return nxt, cache
+        return nxt, logits, cache
 
     return serve_step
 
@@ -99,11 +109,61 @@ def route_batches(fn, batches, scheduler=None, percolate: bool = True, cluster=N
     return futs
 
 
+def cache_to_rows(cache, batch_axis: int = 1):
+    """Model-layout KV cache -> engine request layout (batch axis moved to
+    the FRONT of every leaf, where ``RequestEngine`` concatenates)."""
+    return jax.tree_util.tree_map(lambda a: jnp.moveaxis(a, batch_axis, 0), cache)
+
+
+def rows_to_cache(cache, batch_axis: int = 1):
+    """Inverse of ``cache_to_rows``."""
+    return jax.tree_util.tree_map(lambda a: jnp.moveaxis(a, 0, batch_axis), cache)
+
+
+def make_serve_engine(cfg, params, plan=None, cache_batch_axis: int = 1, **engine_kwargs):
+    """A continuous-batching ``RequestEngine`` serving decode requests for
+    one model (DESIGN.md §12).
+
+    Each request is ``{"cache": cache_to_rows(kv), "tokens": (b, 1)
+    int32, "pos": 0-d int32}`` — the per-sequence slice of
+    ``serve_step``'s state (``b`` is usually 1).  Model caches batch
+    along ``cache_batch_axis`` (axis 1 in this repo's layer-major
+    layouts), so requests carry them through ``cache_to_rows`` — the
+    engine batches over the leading axis of every leaf.  The engine
+    concatenates compatible requests (``pos`` is a broadcast leaf, so
+    only same-position steps share a micro-batch), pads to a bucket,
+    runs ONE jitted decode step, and resolves every caller's future with
+    its slice of ``{"next", "logits", "cache"}`` (cache in request
+    layout — feed it straight into the next ``submit``).
+
+    ``params`` stay host-side shared state (closed over, passed as a jit
+    argument per step), so the graph path is disabled by default — a
+    fused replay would bake the weights into the executable as constants.
+    """
+    from repro.serving.engine import RequestEngine
+
+    step = jax.jit(make_serve_step(cfg, plan))
+
+    def decode(batch):
+        cache = rows_to_cache(batch["cache"], cache_batch_axis)
+        nxt, logits, cache = step(params, cache, batch["tokens"], batch["pos"])
+        return {
+            "next": nxt,
+            "logits": logits,
+            "cache": cache_to_rows(cache, cache_batch_axis),
+        }
+
+    engine_kwargs.setdefault("graph", False)
+    engine_kwargs.setdefault("name", f"serve:{getattr(cfg, 'name', 'model')}")
+    return RequestEngine({"decode": decode}, **engine_kwargs)
+
+
 def make_serve_fanout(cfg, plan=None):
     """Scheduler-routed decode: returns ``fanout(requests, scheduler=None)``
     where each request is a ``(params, cache, tokens, pos)`` tuple; every
     request decodes one token on the device the policy places it on.
-    Returns one future per request (value: ``(next_tokens, cache)``)."""
+    Returns one future per request (value: ``(next_tokens, logits,
+    cache)`` — the full ``serve_step`` contract)."""
     step = jax.jit(make_serve_step(cfg, plan))
 
     def fanout(requests, scheduler=None):

@@ -1,0 +1,595 @@
+"""Continuous-batching ``RequestEngine`` (DESIGN.md §12): admission /
+backpressure / cancellation, micro-batch assembly with bucketed padding,
+batch-aware scheduler placement, captured-graph replay on an engine
+stream, per-request slice resolution (bit-equal to unbatched execution),
+loopback + 2-process-cluster fan-out, and the forced-8-device spread."""
+import os
+import subprocess
+import sys
+import textwrap
+import time
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import Scheduler, get_all_devices, wait_all
+from repro.core.executor import QueueLoad
+from repro.serving import EngineClosed, QueueFull, RequestEngine
+
+# Linear elementwise step: jit-fused, per-op eager and remote-eager all
+# produce the SAME bits, so one reference covers every execution route.
+def _linear_step(x):
+    return x * 2.0 + 1.0
+
+
+def _linear_ref(p):
+    return np.asarray(p, np.float32) * 2.0 + 1.0
+
+
+@pytest.fixture(scope="module")
+def device():
+    return get_all_devices(1, 0).get()[0]
+
+
+@pytest.fixture()
+def engine(device):
+    eng = RequestEngine(
+        _linear_step,
+        max_batch=4,
+        max_delay_s=0.005,
+        scheduler=Scheduler([device], policy="least_loaded"),
+        name="t-linear",
+    )
+    yield eng
+    eng.close()
+
+
+# ---------------------------------------------------------------------------
+# admission surface
+# ---------------------------------------------------------------------------
+
+
+def test_submit_rejects_rowless_and_ragged_payloads(engine):
+    with pytest.raises(ValueError, match="leading row axis"):
+        engine.submit(np.float32(3.0))
+    with pytest.raises(ValueError, match="disagree"):
+        engine.submit({"a": np.ones((1, 4), np.float32), "b": np.ones((2, 4), np.float32)})
+    with pytest.raises(KeyError, match="no kind"):
+        engine.submit(np.ones((1, 2), np.float32), kind="nope")
+    # oversize requests are refused at admission — queued, they could
+    # never join any group and would wedge the queue behind them forever
+    with pytest.raises(ValueError, match="max_batch"):
+        engine.submit(np.ones((5, 4), np.float32))  # engine max_batch=4
+
+
+def test_requests_batch_and_resolve_bit_equal_slices(engine):
+    rng = np.random.default_rng(0)
+    payloads = [rng.normal(size=(1, 16)).astype(np.float32) for _ in range(10)]
+    futs = [engine.submit(p) for p in payloads]
+    for p, f in zip(payloads, futs):
+        got = f.get(timeout=60)
+        want = _linear_ref(p)
+        assert isinstance(got, np.ndarray) and got.shape == p.shape
+        assert got.dtype == want.dtype and np.array_equal(got, want)
+    m = engine.metrics()
+    assert m["requests_completed"] >= 10
+    assert m["batches"] < 10  # continuous batching actually batched
+    assert m["mean_batch_rows"] > 1.0
+
+
+def test_multi_row_requests_slice_correctly(engine):
+    rng = np.random.default_rng(1)
+    p2 = rng.normal(size=(2, 16)).astype(np.float32)
+    p3 = rng.normal(size=(3, 16)).astype(np.float32)
+    f2, f3 = engine.submit(p2), engine.submit(p3)
+    assert np.array_equal(f2.get(timeout=60), _linear_ref(p2))
+    assert np.array_equal(f3.get(timeout=60), _linear_ref(p3))
+
+
+def test_broadcast_leaves_gate_batch_compatibility(device):
+    eng = RequestEngine(
+        lambda b: {"y": b["x"] * b["scale"]},
+        max_batch=8,
+        max_delay_s=0.02,
+        scheduler=Scheduler([device], policy="least_loaded"),
+        name="t-bcast",
+    )
+    try:
+        futs = [
+            eng.submit({"x": np.full((1, 4), float(i), np.float32),
+                        "scale": np.float32(2.0 if i % 2 == 0 else 3.0)})
+            for i in range(6)
+        ]
+        for i, f in enumerate(futs):
+            scale = 2.0 if i % 2 == 0 else 3.0
+            np.testing.assert_array_equal(f.get(timeout=60)["y"], np.full((1, 4), scale * i, np.float32))
+        # two distinct broadcast values can never share a micro-batch
+        assert eng.metrics()["batches"] >= 2
+    finally:
+        eng.close()
+
+
+def test_backpressure_queue_full_and_cancellation(device):
+    eng = RequestEngine(
+        _linear_step,
+        max_batch=2,
+        max_delay_s=10.0,  # deadline never fires during the test
+        max_queue=3,
+        scheduler=Scheduler([device], policy="least_loaded"),
+        name="t-bp",
+    )
+    try:
+        eng.submit(np.ones((2, 4), np.float32)).get(timeout=60)  # warm the route
+        time.sleep(0.05)
+        futs = [eng.submit(np.ones((1, 4), np.float32)) for _ in range(3)]
+        with pytest.raises(QueueFull, match="backpressure"):
+            eng.submit(np.ones((1, 4), np.float32))
+        assert futs[2].cancel()  # pending: cancellable
+        assert futs[2].cancelled()
+    finally:
+        eng.close()  # drains the two live requests
+    assert np.array_equal(futs[0].get(), _linear_ref(np.ones((1, 4), np.float32)))
+    assert np.array_equal(futs[1].get(), _linear_ref(np.ones((1, 4), np.float32)))
+    assert eng.metrics()["requests_cancelled"] == 1
+
+
+def test_close_cancel_pending_fails_fast(device):
+    eng = RequestEngine(
+        _linear_step,
+        max_batch=8,
+        max_delay_s=10.0,
+        scheduler=Scheduler([device], policy="least_loaded"),
+        name="t-close",
+    )
+    f = eng.submit(np.ones((1, 4), np.float32))
+    eng.close(cancel_pending=True)
+    with pytest.raises(EngineClosed):
+        f.get(timeout=10)
+    with pytest.raises(EngineClosed):
+        eng.submit(np.ones((1, 4), np.float32))
+
+
+def test_failing_step_fails_every_member_future(device):
+    def boom(x):
+        raise RuntimeError("step exploded")
+
+    eng = RequestEngine(
+        boom, max_batch=4, max_delay_s=0.005,
+        scheduler=Scheduler([device], policy="least_loaded"), name="t-boom",
+    )
+    try:
+        futs = [eng.submit(np.ones((1, 2), np.float32)) for _ in range(3)]
+        for f in futs:
+            with pytest.raises(RuntimeError, match="step exploded"):
+                f.get(timeout=60)
+        assert eng.metrics()["requests_failed"] == 3
+    finally:
+        eng.close()
+
+
+def test_metrics_latency_and_throughput(engine):
+    futs = [engine.submit(np.ones((1, 8), np.float32)) for _ in range(6)]
+    wait_all(futs)
+    engine.drain()
+    m = engine.metrics()
+    assert m["requests_completed"] >= 6
+    assert 0.0 < m["latency_p50_s"] <= m["latency_p99_s"]
+    assert m["requests_per_s"] > 0.0
+    assert m["queue_high_water"] >= 1
+
+
+# ---------------------------------------------------------------------------
+# padding buckets: the executable cache must hit a handful of shapes
+# ---------------------------------------------------------------------------
+
+
+def test_bucketed_padding_reuses_compiled_routes(device):
+    eng = RequestEngine(
+        _linear_step, max_batch=8, max_delay_s=0.004,
+        scheduler=Scheduler([device], policy="least_loaded"), name="t-bucket",
+    )
+    try:
+        rng = np.random.default_rng(3)
+        payloads = [rng.normal(size=(1, 8)).astype(np.float32) for _ in range(30)]
+        futs = [eng.submit(p) for p in payloads]
+        for p, f in zip(payloads, futs):
+            assert np.array_equal(f.get(timeout=60), _linear_ref(p))
+        # every compiled graph route is bucket-shaped — occupancy varied
+        # over 30 requests, compiled shapes must not
+        buckets = {k[2] for k in eng._graphs}
+        assert buckets.issubset({1, 2, 4, 8})
+        m = eng.metrics()
+        assert m["padded_rows"] >= 0 and m["rows"] == 30
+    finally:
+        eng.close()
+
+
+def test_broadcast_values_share_one_compiled_route(device):
+    """A decode ``pos`` that changes every step must REUSE the compiled
+    graph route (fed at replay), not compile one executable per value."""
+    eng = RequestEngine(
+        lambda b: {"y": b["x"] + b["pos"].astype(np.float32)},
+        max_batch=2,
+        max_delay_s=0.002,
+        scheduler=Scheduler([device], policy="least_loaded"),
+        name="t-routekey",
+    )
+    try:
+        for pos in range(6):  # six distinct broadcast values, same shapes
+            got = eng.submit(
+                {"x": np.zeros((1, 4), np.float32), "pos": np.int32(pos)}
+            ).get(timeout=60)
+            np.testing.assert_array_equal(got["y"], np.full((1, 4), float(pos), np.float32))
+        routes = [k for k, v in eng._graphs.items() if v is not None]
+        assert routes, "graph route was never built"
+        assert len({k[1] for k in routes}) == 1  # ONE route key across all pos
+        assert len(routes) <= 2  # at most one per bucket actually used
+    finally:
+        eng.close()
+
+
+# ---------------------------------------------------------------------------
+# graph replay route: engine stream + replay-with-feeds
+# ---------------------------------------------------------------------------
+
+
+def test_engine_uses_graph_replay_on_engine_stream(engine, device):
+    futs = [engine.submit(np.ones((1, 16), np.float32)) for _ in range(4)]
+    wait_all(futs)
+    assert engine._graphs, "no captured graph route was built"
+    entry = next(iter(engine._graphs.values()))
+    assert entry is not None and not entry.exe._fanout
+    # the engine owns a dedicated stream on the device it placed on
+    s = engine._streams[device.key]
+    assert s.device is device and s is not device.default_stream
+
+
+def test_graph_disabled_falls_back_to_direct(device):
+    eng = RequestEngine(
+        _linear_step, max_batch=4, max_delay_s=0.005, graph=False,
+        scheduler=Scheduler([device], policy="least_loaded"), name="t-direct",
+    )
+    try:
+        p = np.random.default_rng(4).normal(size=(1, 8)).astype(np.float32)
+        assert np.array_equal(eng.submit(p).get(timeout=60), _linear_ref(p))
+        assert not eng._graphs
+    finally:
+        eng.close()
+
+
+def test_replay_stream_override_matches_default_lane(device):
+    """GraphExec.replay(stream=...) — the engine's feed path — is bit-equal
+    to a default-lane replay, and fan-out plans refuse the override."""
+    from repro.core import capture
+
+    prog = device.create_program({"k": _linear_step}, "rp").get()
+    buf = device.create_buffer((4,), np.float32).get()
+    with capture("stream-replay") as g:
+        w = buf.enqueue_write(0, np.zeros(4, np.float32))
+        node = prog.run([buf], "k")
+    exe = g.instantiate()
+    x = np.arange(4, dtype=np.float32)
+    base = exe.replay(feeds={w: x}).get()[node]
+    s = device.create_stream("replay-override")
+    alt = s.replay(exe, feeds={w: x})
+    # the replay future is a stream completion: events recorded after it
+    # cover the replayed graph's device completion (Program.run contract)
+    with s._lock:
+        assert alt in s._completions
+    ev = s.record()
+    ev.wait()
+    assert alt.done()
+    np.testing.assert_array_equal(np.asarray(alt.get()[node]), np.asarray(base))
+
+    # a fan-out exec resolved its lanes at instantiate: stream= refused
+    b2 = device.create_buffer((4,), np.float32).get()
+    o1 = device.create_buffer((4,), np.float32).get()
+    o2 = device.create_buffer((4,), np.float32).get()
+    with capture("fan") as g2:
+        w2 = b2.enqueue_write(0, x)
+        prog.run([b2], "k", out=[o1])  # independent chains -> fan-out
+        prog.run([b2], "k", out=[o2])
+    exe2 = g2.instantiate()
+    if exe2._fanout:
+        with pytest.raises(ValueError, match="fan-out"):
+            exe2.replay(feeds={w2: x}, stream=s)
+
+
+# ---------------------------------------------------------------------------
+# batch-aware scheduler hook
+# ---------------------------------------------------------------------------
+
+
+class _FakeQueue:
+    def __init__(self, depth=0):
+        self.depth = depth
+
+    def load(self):
+        return QueueLoad(self.depth, 0, 0.0, 0.0, self.depth, 0)
+
+
+class _FakeDevice:
+    def __init__(self, key, depth=0):
+        self.key = key
+        self.ops_queue = _FakeQueue(depth)
+
+
+class _FakeBuf:
+    def __init__(self, device, nbytes):
+        self.device, self.nbytes = device, nbytes
+
+
+def test_select_batch_scores_the_union_of_member_args():
+    d0, d1 = _FakeDevice("cpu:0"), _FakeDevice("cpu:1")
+    sched = Scheduler([d0, d1], policy="affinity")
+    # three requests: 2 small on d0, 1 large on d1 — the UNION wins for d0
+    batch = [
+        [_FakeBuf(d0, 600)],
+        [_FakeBuf(d0, 600)],
+        [_FakeBuf(d1, 1000)],
+    ]
+    assert sched.select_batch(batch).key == "cpu:0"
+    assert sched.stats() == {"cpu:0": 1}  # one decision for the whole batch
+    # flipped weights: the batch follows the bytes
+    batch2 = [[_FakeBuf(d1, 5000)], [_FakeBuf(d0, 600)]]
+    assert sched.select_batch(batch2).key == "cpu:1"
+
+
+# ---------------------------------------------------------------------------
+# route_batches failure-path coverage (ISSUE satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_route_batches_closure_on_cross_process_locality_raises():
+    from repro.serving.serve_step import route_batches
+
+    class _Port:
+        in_process = False
+
+    class _Remote:
+        is_remote_proxy = True
+        key = "L9/cpu:0"
+        _port = _Port()
+        ops_queue = _FakeQueue()
+
+    sched = Scheduler([_Remote()], policy="static")
+    with pytest.raises(ValueError, match="kernel name"):
+        route_batches(lambda b: b, [np.ones(4, np.float32)], scheduler=sched)
+
+
+def test_route_batches_percolate_false_skips_device_put(device):
+    from repro.serving.serve_step import route_batches
+
+    sched = Scheduler([device], policy="static")
+    marker = np.ones(4, np.float32)
+    # percolate=False hands the batch through UNTOUCHED (identity), while
+    # the default device_put stages a fresh jax.Array
+    [kept] = route_batches(lambda b: b is marker, [marker], scheduler=sched, percolate=False)
+    assert kept.get() is True
+    [placed] = route_batches(lambda b: b, [marker], scheduler=sched)
+    out = placed.get()
+    assert out is not marker and isinstance(out, jax.Array)
+
+
+def test_route_batches_kernel_name_local_matches_loopback():
+    from repro.core import LoopbackParcelport
+    from repro.serving.serve_step import route_batches
+
+    x = np.random.default_rng(6).normal(size=(64,)).astype(np.float32)
+    dev = get_all_devices().get()[0]
+    [local] = route_batches("partition_map_ref", [x], scheduler=Scheduler([dev], policy="static"))
+    local_val = np.asarray(local.get())
+    port = LoopbackParcelport(n_localities=1)
+    try:
+        [remote] = route_batches(
+            "partition_map_ref", [x], scheduler=Scheduler(port.devices(), policy="static")
+        )
+        remote_val = np.asarray(remote.get())
+    finally:
+        port.shutdown()
+    assert remote_val.dtype == local_val.dtype
+    np.testing.assert_array_equal(remote_val, local_val)
+
+
+# ---------------------------------------------------------------------------
+# serve-engine decode: micro-batched decode == per-request decode
+# ---------------------------------------------------------------------------
+
+
+def test_make_serve_engine_batched_decode_matches_per_request(device):
+    from repro.configs import get_config, smoke
+    from repro.models import get_model
+    from repro.serving import cache_to_rows, make_serve_engine
+    from repro.serving.serve_step import make_serve_step
+
+    cfg = smoke(get_config("olmo-1b"))
+    m = get_model(cfg)
+    params = m.init(cfg, jax.random.key(0))
+    step = jax.jit(make_serve_step(cfg))
+
+    eng = make_serve_engine(
+        cfg, params, max_batch=4, max_delay_s=0.02,
+        scheduler=Scheduler([device], policy="least_loaded"),
+    )
+    try:
+        rng = np.random.default_rng(0)
+        reqs = []
+        for _ in range(3):
+            cache = m.init_cache(cfg, 1, 8, dtype=jnp.float32)
+            tok = jnp.asarray(rng.integers(0, cfg.vocab_size, size=(1, 1)), jnp.int32)
+            reqs.append({"cache": cache_to_rows(cache), "tokens": tok, "pos": np.int32(0)})
+        futs = [eng.submit(r, kind="decode") for r in reqs]
+        for r, f in zip(reqs, futs):
+            got = f.get(timeout=300)
+            from repro.serving import rows_to_cache
+
+            nxt, logits, cache = step(
+                params, rows_to_cache(r["cache"]), r["tokens"], r["pos"]
+            )
+            assert got["next"].shape == (1, 1)
+            np.testing.assert_array_equal(got["next"], np.asarray(nxt))
+            np.testing.assert_allclose(got["logits"], np.asarray(logits), rtol=2e-5, atol=2e-5)
+            ref_leaves = jax.tree_util.tree_leaves(cache_to_rows(cache))
+            got_leaves = jax.tree_util.tree_leaves(got["cache"])
+            for a, b in zip(got_leaves, ref_leaves):
+                np.testing.assert_allclose(a, np.asarray(b), rtol=2e-5, atol=2e-5)
+    finally:
+        eng.close()
+
+
+# ---------------------------------------------------------------------------
+# loopback fan-out: in-process localities through the parcel codec
+# ---------------------------------------------------------------------------
+
+
+def test_engine_spreads_micro_batches_over_loopback_localities():
+    from repro.core import LoopbackParcelport
+
+    port = LoopbackParcelport(n_localities=2)
+    try:
+        sched = Scheduler(port.devices(), policy="round_robin")
+        eng = RequestEngine(
+            "partition_map_ref", max_batch=2, max_delay_s=0.005,
+            scheduler=sched, name="t-loop",
+        )
+        try:
+            futs = [eng.submit(np.full((1, 8), float(i), np.float32)) for i in range(8)]
+            for f in futs:
+                np.testing.assert_allclose(f.get(timeout=60), np.ones((1, 8)), rtol=1e-6)
+            assert len(sched.stats()) == 2  # both simulated localities took batches
+            assert eng.metrics()["batches"] >= 2
+        finally:
+            eng.close()
+    finally:
+        port.shutdown()
+
+
+def test_apply_batched_action_slices_rows_per_request():
+    from repro.core import LoopbackParcelport, register_kernel
+
+    port = LoopbackParcelport(n_localities=1)
+    try:
+        lid = port.localities()[0].process_index
+        batch = np.arange(12, dtype=np.float32).reshape(4, 3)  # 3 real + 1 pad row
+        chunks = port.call(
+            lid, "apply_batched",
+            {"kernel": "partition_map_ref", "batch": batch, "rows": [1, 2]},
+        ).get()
+        assert len(chunks) == 2
+        assert chunks[0].shape == (1, 3) and chunks[1].shape == (2, 3)
+        np.testing.assert_allclose(np.concatenate(chunks), np.ones((3, 3)), rtol=1e-6)
+
+        # a 0-d output leaf is shared per request, not row-sliced (the
+        # same rule as the engine's local slice path)
+        register_kernel(
+            "t_engine_scalar_out",
+            lambda b: {"rows": b * 2.0, "norm": jnp.float32(b.sum())},
+        )
+        chunks = port.call(
+            lid, "apply_batched",
+            {"kernel": "t_engine_scalar_out", "batch": batch, "rows": [2, 2]},
+        ).get()
+        assert chunks[0]["rows"].shape == (2, 3)
+        assert chunks[0]["norm"].shape == () and chunks[1]["norm"] == chunks[0]["norm"]
+    finally:
+        port.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# 2-process cluster: batched apply parcels end-to-end (acceptance)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_engine_serves_over_2_process_cluster_bit_equal():
+    from repro.core import LocalClusterParcelport
+    from repro.kernels.partition_map.ref import partition_map_ref
+
+    port = LocalClusterParcelport(n_workers=2, heartbeat_timeout=60.0)
+    try:
+        sched = Scheduler(port.devices(), policy="round_robin")
+        eng = RequestEngine(
+            "partition_map_ref", max_batch=4, max_delay_s=0.01,
+            scheduler=sched, name="t-cluster",
+        )
+        try:
+            rng = np.random.default_rng(5)
+            payloads = [rng.normal(size=(1, 16)).astype(np.float32) for _ in range(8)]
+            futs = [eng.submit(p) for p in payloads]
+            for p, f in zip(payloads, futs):
+                got = f.get(timeout=300)
+                # the worker executes the registry kernel eagerly over the
+                # padded batch; rows are independent, so each request's
+                # slice is bit-equal to unbatched eager execution
+                want = np.asarray(partition_map_ref(p))
+                assert got.dtype == want.dtype and np.array_equal(got, want)
+            assert len(sched.stats()) == 2  # both worker processes served
+            m = eng.metrics()
+            assert m["requests_completed"] == 8 and m["batches"] < 8
+        finally:
+            eng.close()
+    finally:
+        port.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# forced-8-device integration (re-exec pattern, see test_scheduler.py)
+# ---------------------------------------------------------------------------
+
+_CHILD = textwrap.dedent(
+    """
+    import os, time
+    os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=8 "
+                               "--xla_cpu_multi_thread_eigen=false "
+                               + os.environ.get("XLA_FLAGS", ""))
+    import numpy as np
+    import jax
+    from repro.core import Scheduler, get_all_devices, wait_all
+    from repro.serving import RequestEngine
+
+    devices = get_all_devices(1, 0).get()
+    assert len(devices) == 8, devices
+
+    def step(x):
+        return x * 2.0 + 1.0
+
+    sched = Scheduler(devices, policy="least_loaded")
+    eng = RequestEngine(step, max_batch=4, max_delay_s=0.002,
+                        scheduler=sched, name="fleet")
+    rng = np.random.default_rng(0)
+    payloads = [rng.normal(size=(1, 256)).astype(np.float32) for _ in range(64)]
+    futs = [eng.submit(p) for p in payloads]
+    wait_all(futs)
+    for p, f in zip(payloads, futs):
+        got = f.get()
+        want = np.asarray(p) * 2.0 + 1.0
+        assert got.dtype == want.dtype and np.array_equal(got, want)
+    m = eng.metrics()
+    spread = sched.stats()
+    print("SPREAD", len(spread), "BATCHES", m["batches"])
+    assert m["requests_completed"] == 64
+    assert m["batches"] < 64                       # batching happened
+    assert len(spread) >= 2, spread                # fleet took batches
+    eng.close()
+    print("OK")
+    """
+)
+
+
+@pytest.mark.slow
+def test_engine_integration_8_host_devices():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src:" + env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, "-c", _CHILD],
+        capture_output=True,
+        text=True,
+        env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        timeout=900,
+    )
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert "OK" in proc.stdout, proc.stdout

@@ -140,3 +140,82 @@ def test_work_queue_survives_task_exception():
     with pytest.raises(ZeroDivisionError):
         bad.get()
     assert good.get() == "ok"
+
+
+# ---------------------------------------------------------------------------
+# cancellation (serving-engine backpressure contract)
+# ---------------------------------------------------------------------------
+
+
+def test_cancel_pending_future_and_promise_discards_late_result():
+    import concurrent.futures as cf
+
+    p = Promise(name="cancel-me")
+    f = p.get_future()
+    assert f.cancel() and f.cancelled()
+    assert f.cancel()  # idempotent (stdlib semantics: still cancelled)
+    with pytest.raises(cf.CancelledError):
+        f.get()
+    assert isinstance(f.exception(), cf.CancelledError)
+    assert f.state is FutureState.FAILED
+    p.set_value(42)  # late result is discarded, never raised
+    p.set_exception(RuntimeError("late error too"))
+
+
+def test_cancel_completed_future_returns_false():
+    assert not make_ready_future(1).cancel()
+    p = Promise()
+    p.set_value(2)
+    assert not p.get_future().cancel()
+
+
+def test_then_attached_before_cancel_fails_with_cancelled_error():
+    import concurrent.futures as cf
+
+    p = Promise(name="parent")
+    f = p.get_future()
+    g = f.then(lambda v: v + 1)  # pending path: callback registered
+    assert f.cancel()
+    with pytest.raises(cf.CancelledError):
+        g.get(timeout=10)  # must resolve, not hang forever
+
+
+def test_cancel_racing_inflight_resolver_discards_result():
+    import concurrent.futures as cf
+
+    started = threading.Event()
+
+    def slow_resolver():
+        started.set()
+        time.sleep(0.2)
+        return 42
+
+    f = Future(resolver=slow_resolver, name="slow")
+    outcome = []
+
+    def consume():
+        try:
+            outcome.append(("value", f.get()))
+        except cf.CancelledError:
+            outcome.append(("cancelled", None))
+        except BaseException as e:  # noqa: BLE001
+            outcome.append(("error", e))
+
+    t = threading.Thread(target=consume)
+    t.start()
+    started.wait(10)  # the consumer claimed the resolver and is producing
+    assert f.cancel()
+    t.join(10)
+    # the produced value is discarded; the consumer sees CancelledError,
+    # never InvalidStateError
+    assert outcome == [("cancelled", None)]
+
+
+def test_when_all_propagates_cancellation():
+    import concurrent.futures as cf
+
+    p1, p2 = Promise(), Promise()
+    joined = when_all([p1.get_future(), p2.get_future()])
+    p1.get_future().cancel()
+    p2.set_value(1)
+    assert isinstance(joined.exception(timeout=10), cf.CancelledError)

@@ -73,6 +73,14 @@ def test_codec_rejects_object_dtype_and_unknown_types():
         dumps(lambda: None)  # no code on the wire, ever
 
 
+def test_codec_zero_dim_arrays_keep_rank():
+    # np.ascontiguousarray silently promotes 0-d to (1,); the codec must
+    # not (apply_batched replies carry 0-d output leaves)
+    for v in (np.zeros((), np.float32), np.array(7, np.int64)):
+        out = loads(dumps(v))
+        assert out.shape == () and out.dtype == v.dtype and out == v
+
+
 def test_codec_noncontiguous_arrays_roundtrip():
     a = np.arange(24, dtype=np.float32).reshape(4, 6)[:, ::2]  # strided view
     out = loads(dumps(a))

@@ -56,6 +56,24 @@ def test_heartbeat_detects_death():
     assert died == [1]
 
 
+def test_heartbeat_flap_fires_on_dead_per_death():
+    # dead -> tick (recovery) -> dead again: the latch must CLEAR on
+    # recovery so the second death fires on_dead again (it used to stick
+    # forever after the first miss)
+    died = []
+    hb = Heartbeat(timeout_s=0.05, on_dead=lambda: died.append(1))
+    hb.tick()
+    time.sleep(0.08)
+    assert not hb.check()
+    assert not hb.check()  # still dead: edge-triggered, no re-fire
+    assert died == [1]
+    hb.tick()  # worker resumes
+    assert hb.check()  # recovery reads alive AND re-arms the latch
+    time.sleep(0.08)
+    assert not hb.check()
+    assert died == [1, 1]  # second death fired again
+
+
 def test_step_monitor_flags_stragglers():
     mon = StepMonitor(alpha=0.5, threshold=2.0, warmup=2)
     for i in range(5):

@@ -6,6 +6,11 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # minimal container: seeded fallback sweeps
+    from _hypothesis_compat import given, settings, strategies as st
+
 from repro.core import Dim3, get_all_devices, registry, wait_all
 
 
@@ -44,6 +49,57 @@ def test_buffer_offset_window_write_read(device):
     )
     window = buf.enqueue_read_sync(offset=3, count=3)
     np.testing.assert_array_equal(window, [7, 8, 9])
+
+
+def test_buffer_window_bounds_raise_value_error(device):
+    buf = get_buf = device.create_buffer(8, np.int32).get()
+    for offset, count in [(-1, 2), (0, 9), (7, 2), (9, 0), (0, -1), (-3, None)]:
+        with pytest.raises(ValueError, match="out of range"):
+            buf.enqueue_read(offset, count)
+    with pytest.raises(ValueError, match="out of range"):
+        buf.enqueue_write(-1, np.zeros(2, np.int32))
+    with pytest.raises(ValueError, match="out of range"):
+        buf.enqueue_write(6, np.zeros(4, np.int32))  # 6 + 4 > 8
+    with pytest.raises(ValueError, match="out of range"):
+        buf.enqueue_write(0, np.zeros(4, np.int32), count=9)
+    with pytest.raises(ValueError, match="exceeds"):
+        # in-range window, but the data cannot cover it: the write would
+        # silently land fewer elements than validated
+        buf.enqueue_write(0, np.zeros(4, np.int32), count=6)
+    # in-range windows (including the exact tail) still work
+    buf.enqueue_write(6, np.array([5, 6], np.int32)).get()
+    np.testing.assert_array_equal(buf.enqueue_read_sync(6, 2), [5, 6])
+    assert get_buf.enqueue_read_sync(8, 0).size == 0  # empty tail window
+
+
+def test_buffer_window_bounds_property(device):
+    """Property sweep: any (offset, count) window is either fully inside
+    the buffer — and round-trips exactly — or raises ValueError; it is
+    never silently clamped to the wrong elements."""
+    size = 16
+    buf = device.create_buffer(size, np.int32).get()
+    base = np.arange(size, dtype=np.int32)
+    buf.enqueue_write(0, base).get()
+
+    @settings(max_examples=30, deadline=None)
+    @given(
+        offset=st.integers(min_value=-3, max_value=size + 3),
+        count=st.integers(min_value=-2, max_value=size + 3),
+    )
+    def check(offset, count):
+        in_range = 0 <= offset and 0 <= count and offset + count <= size
+        if in_range:
+            out = buf.enqueue_read_sync(offset, count)
+            np.testing.assert_array_equal(out, base[offset : offset + count])
+            buf.enqueue_write(offset, base[offset : offset + count], count=count).get()
+            np.testing.assert_array_equal(buf.enqueue_read_sync(), base)
+        else:
+            with pytest.raises(ValueError, match="out of range"):
+                buf.enqueue_read(offset, count)
+            with pytest.raises(ValueError, match="out of range"):
+                buf.enqueue_write(offset, np.zeros(max(count, 0), np.int32), count=count)
+
+    check()
 
 
 def test_buffer_async_writes_are_ordered(device):
