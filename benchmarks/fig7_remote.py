@@ -32,6 +32,19 @@ def _time_launch(prog, x, iters: int) -> float:
     return timeit(launch, iters=iters)
 
 
+def _time_launch_inflight(prog, x, iters: int, depth: int) -> float:
+    """Mean per-launch time with ``depth`` launches in flight at once —
+    the pipelined channel ships later parcels while earlier ones are
+    still executing remotely, so the wire hop amortizes away."""
+    def burst():
+        futs = [prog.run([x], _KERNEL) for _ in range(depth)]
+        for f in futs:
+            f.get()
+
+    burst()
+    return timeit(burst, iters=iters) / depth
+
+
 def run(quick: bool = False):
     from repro.core import LocalClusterParcelport, LoopbackParcelport, Program, get_all_devices
     from repro.core.parcel import resolve_kernel
@@ -72,6 +85,39 @@ def run(quick: bool = False):
             "name": f"fig7/cluster_launch_n{n}", "s": t_cluster,
             "derived": f"transport=cluster;x_local={t_cluster / t_local:.2f}",
         })
+        # Pipelined depth-8: per-launch time with 8 parcels in flight —
+        # the channel stages+flushes without blocking on replies, so the
+        # round trips overlap remote execution (serial launch = depth 1).
+        t_pipe = _time_launch_inflight(cprog, x, iters, depth=8)
+        rows.append({
+            "name": f"fig7/cluster_pipelined8_n{n}", "s": t_pipe,
+            "derived": f"transport=cluster;x_serial={t_pipe / t_cluster:.2f}",
+        })
     finally:
         port.shutdown()
+
+    # Shared-memory array lane at a size where it pays (1 MB payload:
+    # the pipe's per-byte cost dominates its fixed cost) — the same
+    # launch with the lane forced off isolates the transfer tax.
+    n_big = 1 << 18
+    big = np.random.default_rng(1).normal(size=(n_big,)).astype(np.float32)
+    for label, shm in (("shm", True), ("inline", False)):
+        try:
+            sport = LocalClusterParcelport(n_workers=1, heartbeat_timeout=120.0, shm=shm)
+        except Exception as e:  # noqa: BLE001 - no-subprocess environments
+            rows.append({
+                "name": "fig7/FAILED", "s": -1.0,
+                "derived": f"cluster spawn failed: {e}"[:200].replace(",", ";"),
+            })
+            return rows
+        try:
+            sprog = sport.localities()[0].devices[0].create_program([_KERNEL], name=f"fig7-{label}").get()
+            t = _time_launch(sprog, big, iters)
+            rows.append({"name": f"fig7/cluster_{label}_launch_n{n_big}", "s": t,
+                         "derived": f"transport=cluster+{label}"})
+        finally:
+            sport.shutdown()
+    t_shm = next(r["s"] for r in rows if "cluster_shm_" in r["name"])
+    t_inl = next(r["s"] for r in rows if "cluster_inline_" in r["name"])
+    rows[-2]["derived"] += f";x_inline={t_shm / t_inl:.2f}"
     return rows

@@ -57,24 +57,31 @@ def run(quick: bool = False):
 
     # --- chain of 3 launches: the task-DAG case graphs are built for.
     # Eager pays 3 queue hops + 3 futures + 3 separate executables; the
-    # captured graph replays as ONE fused executable + one hop + one future.
-    tmp1 = dev.create_buffer(n, np.float32).get()
-    tmp2 = dev.create_buffer(n, np.float32).get()
-    cout = dev.create_buffer(n, np.float32).get()
+    # pre-bound graph replays as one lane enqueue + one future.  The DAG
+    # rows run at their own size: at the headline n the transcendental
+    # kernel swamps the dispatch tax these rows exist to measure (the
+    # per-launch runtime cost is size-independent, the compute is not),
+    # so 2^14 keeps compute real but the dispatch difference visible.
+    n_dag = 2**14
+    dhost = host[:n_dag]
+    dbuf = dev.create_buffer_from(dhost).get()
+    tmp1 = dev.create_buffer(n_dag, np.float32).get()
+    tmp2 = dev.create_buffer(n_dag, np.float32).get()
+    cout = dev.create_buffer(n_dag, np.float32).get()
 
     def futurized_chain3():
-        prog.run([buf], "k", grid=Dim3(1), block=Dim3(256), out=[tmp1]).get()
+        prog.run([dbuf], "k", grid=Dim3(1), block=Dim3(256), out=[tmp1]).get()
         prog.run([tmp1], "k", grid=Dim3(1), block=Dim3(256), out=[tmp2]).get()
         prog.run([tmp2], "k", grid=Dim3(1), block=Dim3(256), out=[cout]).get()
 
     futurized_chain3()  # warm (same geometry -> same executable cache entry)
     t_chain = timeit(futurized_chain3)
 
-    gt1 = dev.create_buffer(n, np.float32).get()
-    gt2 = dev.create_buffer(n, np.float32).get()
-    gout = dev.create_buffer(n, np.float32).get()
+    gt1 = dev.create_buffer(n_dag, np.float32).get()
+    gt2 = dev.create_buffer(n_dag, np.float32).get()
+    gout = dev.create_buffer(n_dag, np.float32).get()
     g = TaskGraph("bench-replay")
-    g.run(prog, [buf], "k", grid=Dim3(1), block=Dim3(256), out=[gt1])
+    g.run(prog, [dbuf], "k", grid=Dim3(1), block=Dim3(256), out=[gt1])
     g.run(prog, [gt1], "k", grid=Dim3(1), block=Dim3(256), out=[gt2])
     g.run(prog, [gt2], "k", grid=Dim3(1), block=Dim3(256), out=[gout])
     exe = g.instantiate()
@@ -84,6 +91,38 @@ def run(quick: bool = False):
         exe.replay().get()
 
     t_graph = timeit(graph_replay)
+
+    # --- same chain, ONE coalesced submission scope: the three eager
+    # launches stage thread-locally and enter the queue as a single put
+    # (same-queue FIFO keeps the dependency order); only the last future
+    # is consumed.  Isolates the per-hop scheduling tax the graph path
+    # also amortizes, without capture/instantiate.
+    from repro.core import coalesce
+
+    def coalesced_chain3():
+        with coalesce():
+            prog.run([dbuf], "k", grid=Dim3(1), block=Dim3(256), out=[tmp1])
+            prog.run([tmp1], "k", grid=Dim3(1), block=Dim3(256), out=[tmp2])
+            f = prog.run([tmp2], "k", grid=Dim3(1), block=Dim3(256), out=[cout])
+        f.get()
+
+    coalesced_chain3()
+    t_cchain = timeit(coalesced_chain3)
+
+    # --- pre-bound replay dispatch: a tiny single-node graph makes the
+    # compute negligible, leaving the replay machinery itself — flat
+    # pre-bound plan, one lane enqueue, one future (DESIGN.md §13).
+    sbuf = dev.create_buffer_from(host[:256]).get()
+    sout = dev.create_buffer(256, np.float32).get()
+    sg = TaskGraph("bench-dispatch")
+    sg.run(prog, [sbuf], "k", grid=Dim3(1), block=Dim3(256), out=[sout])
+    sexe = sg.instantiate()
+    sexe.replay().get()
+
+    def replay_dispatch():
+        sexe.replay().get()
+
+    t_rdisp = timeit(replay_dispatch)
 
     # --- layer-only cost: submit a no-op through the whole future chain
     noop = dev.create_program({"id": lambda x: x}, "noop").get()
@@ -126,9 +165,13 @@ def run(quick: bool = False):
     return [
         {"name": "overhead/native_dispatch", "s": t_native, "derived": f"n={n}"},
         {"name": "overhead/futurized", "s": t_fut, "derived": f"overhead={ovh:+.1f}%"},
-        {"name": "overhead/futurized_chain3", "s": t_chain, "derived": "3 eager launches"},
+        {"name": "overhead/futurized_chain3", "s": t_chain, "derived": f"3 eager launches; n={n_dag}"},
         {"name": "overhead/graph_replay", "s": t_graph,
          "derived": f"same chain fused; vs_futurized_chain={(t_graph - t_chain) / t_chain * 100:+.1f}%"},
+        {"name": "overhead/coalesced_chain3", "s": t_cchain,
+         "derived": f"one staged hop; vs_eager_chain={(t_cchain - t_chain) / t_chain * 100:+.1f}%"},
+        {"name": "overhead/replay_dispatch", "s": t_rdisp,
+         "derived": "pre-bound single-hop replay; n=256"},
         {"name": "overhead/layer_noop", "s": t_layer, "derived": "future+queue+launch path"},
         {"name": "overhead/prim_future_ready", "s": t_fready, "derived": "no-alloc ready future"},
         {"name": "overhead/prim_queue_hop", "s": t_hop, "derived": "1 submit -> 1 put"},

@@ -49,6 +49,8 @@ from repro.core.executor import (
     QueueLoad,
     Runtime,
     WorkQueue,
+    coalesce,
+    flush_coalesced,
     get_runtime,
     reset_runtime,
 )
@@ -115,6 +117,8 @@ __all__ = [
     "QueueLoad",
     "get_runtime",
     "reset_runtime",
+    "coalesce",
+    "flush_coalesced",
     "Stream",
     "Event",
     "PlacementPolicy",

@@ -404,9 +404,18 @@ class RemoteDevice:
     def _call(self, action: str, lane=None, **payload) -> "Future":
         """Send one action parcel, ordered through this device's default
         channel — or, when ``lane`` is given, through that stream's own
-        parcel channel (same-stream parcels keep submission order; the
-        per-channel worker blocks on each reply, so the next parcel of
-        the channel is only sent once the previous one has executed)."""
+        parcel channel (same-stream parcels keep submission order).
+
+        On a non-pipelined port the channel worker blocks on each reply,
+        so the next parcel of the channel is only sent once the previous
+        one has executed.  On a pipelined port the channel task only
+        *stages and flushes* the parcel — the reply resolves the returned
+        future asynchronously, and the channel is free to ship the next
+        parcel immediately (same-channel order still holds end-to-end:
+        staging order is wire order is the worker's execution order).
+        NOTE: with pipelining, a drained lane proves dispatch, not remote
+        completion — completion fences go through ``synchronize()`` (a
+        ``barrier`` parcel) or the returned future itself."""
         payload.setdefault("device", self.remote_key)
         port, loc = self._port, self.locality_id
         if not port.alive(loc):
@@ -415,6 +424,17 @@ class RemoteDevice:
                 "(missed heartbeat or worker exit) and is excluded from placement"
             ))
         q = self.ops_queue if lane is None else lane
+        if getattr(port, "pipelined", False):
+            from repro.core.futures import Promise, forward_failure
+
+            promise: "Promise" = Promise(name=f"parcel:{action}:L{loc}")
+
+            def _ship():
+                port.stage(loc, action, payload, promise)
+                port.flush(loc)
+
+            forward_failure(q.submit(_ship), promise)
+            return promise.get_future()
         return q.submit(lambda: port.call_sync(loc, action, payload))
 
     # -- factory surface -----------------------------------------------------
@@ -452,10 +472,16 @@ class RemoteDevice:
 
     def synchronize(self) -> None:
         """Drain EVERY parcel channel of this device (all streams, not
-        just the default one) plus the compile queue."""
+        just the default one) plus the compile queue.  On a pipelined
+        port a drained lane only proves every parcel was *shipped*, so a
+        ``barrier`` parcel (executed on the worker's action pool, in
+        arrival order, after everything shipped before it) closes the gap
+        to remote completion."""
         for s in self.streams():
             s.lane.drain()
         self.compile_queue.drain()
+        if getattr(self._port, "pipelined", False) and self._port.alive(self.locality_id):
+            self._call("barrier").get()
 
     def __repr__(self) -> str:
         state = "alive" if self.alive() else "DEAD"
@@ -511,8 +537,13 @@ class RemoteBuffer:
                 "read as extern inputs)"
             )
         lane = None if stream is None else stream._lane_for(self.device)
-        return self.device._call("enqueue_write", lane=lane, gid=self.gid, offset=offset,
-                                 data=np.asarray(data), count=count)
+        fut = self.device._call("enqueue_write", lane=lane, gid=self.gid, offset=offset,
+                                data=np.asarray(data), count=count)
+        if stream is not None:
+            # Pipelined ports resolve the reply AFTER the lane task ends —
+            # note it so record()/synchronize() mean remote completion.
+            stream._note_completion(fut)
+        return fut
 
     def enqueue_read(self, offset: int = 0, count: "int | None" = None,
                      stream=None) -> "Future":
@@ -522,8 +553,11 @@ class RemoteBuffer:
         if g is not None:
             return g.read(self, offset=offset, count=count)
         lane = None if stream is None else stream._lane_for(self.device)
-        return self.device._call("enqueue_read", lane=lane, gid=self.gid,
-                                 offset=offset, count=count)
+        fut = self.device._call("enqueue_read", lane=lane, gid=self.gid,
+                                offset=offset, count=count)
+        if stream is not None:
+            stream._note_completion(fut)
+        return fut
 
     def enqueue_read_sync(self, offset: int = 0, count: "int | None" = None, stream=None):
         from repro.core.graph import current_graph

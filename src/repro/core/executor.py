@@ -49,6 +49,8 @@ from typing import Callable, Optional
 
 from collections import deque
 
+from contextlib import contextmanager
+
 from repro.core.futures import Future
 
 __all__ = [
@@ -59,7 +61,106 @@ __all__ = [
     "Runtime",
     "get_runtime",
     "reset_runtime",
+    "coalesce",
+    "flush_coalesced",
 ]
+
+
+# ---------------------------------------------------------------------------
+# submission coalescing (DESIGN.md §13)
+#
+# A queue hop costs two thread wakeups (worker kick + result wakeup); a
+# batched enqueue pays them once for N tasks (the submit_many row in
+# BENCH_overhead).  ``coalesce()`` makes that batching the *default* for
+# any code that submits several tasks before blocking: inside the scope,
+# ``submit``/``submit_many`` on any Lane or WorkQueue stage their items in
+# a thread-local buffer instead of waking a worker, and the whole window
+# flushes as ONE enqueue per touched queue.  The window adapts to the
+# caller's natural batch boundary: it closes at scope exit, and *any*
+# blocking operation — ``Future.get``/``exception``, ``drain``,
+# ``barrier`` — flushes first, so a task whose result is awaited inside
+# the scope can never deadlock behind its own staged submission.
+#
+# Load honesty (DESIGN.md §9): staged items bump their queue's submitted
+# counter at STAGE time, so ``load().depth`` sees a coalesced batch the
+# moment it is placed — coalescing must not blind the least_loaded signal.
+# ---------------------------------------------------------------------------
+
+_coalesce_tls = threading.local()
+
+_COALESCE_ENABLED = os.environ.get("REPRO_COALESCE", "auto").lower() != "off"
+# Safety valve: a pathologically large window degrades to eager flushes
+# (bounded staging memory; the batch is already big enough to amortize).
+_COALESCE_CAP = int(os.environ.get("REPRO_COALESCE_CAP", "256"))
+
+
+class _CoalesceScope:
+    __slots__ = ("targets", "depth")
+
+    def __init__(self):
+        # id(queue) -> (queue, staged item list); insertion-ordered so
+        # flush preserves cross-queue submission order.
+        self.targets: "dict[int, tuple[Any, list]]" = {}
+        self.depth = 1
+
+    def stage(self, q, items: list) -> None:
+        entry = self.targets.get(id(q))
+        if entry is None:
+            self.targets[id(q)] = (q, list(items))
+        else:
+            entry[1].extend(items)
+            if len(entry[1]) >= _COALESCE_CAP:
+                del self.targets[id(q)]
+                q._flush_items(entry[1])
+
+    def flush(self) -> None:
+        targets, self.targets = self.targets, {}
+        for q, items in targets.values():
+            q._flush_items(items)
+
+
+def _current_scope() -> "_CoalesceScope | None":
+    return getattr(_coalesce_tls, "scope", None)
+
+
+def flush_coalesced() -> None:
+    """Flush this thread's staged submissions (if any) without closing the
+    scope.  Called automatically by every blocking primitive; safe and
+    near-free (one TLS read) when nothing is staged."""
+    scope = getattr(_coalesce_tls, "scope", None)
+    if scope is not None and scope.targets:
+        scope.flush()
+
+
+@contextmanager
+def coalesce():
+    """Batch every ``submit`` in this scope into one enqueue per queue.
+
+    Same-queue FIFO order is exactly preserved (the staged batch occupies
+    one queue slot and runs uninterleaved, the ``submit_many`` contract);
+    results are identical to unscoped submission — only the number of
+    worker wakeups changes.  Nesting is flattened into the outermost
+    scope.  Blocking inside the scope (``Future.get``, ``drain``,
+    ``barrier``) flushes staged work first, so awaiting a staged task's
+    result is always safe.  ``REPRO_COALESCE=off`` disables staging
+    (the scope becomes a no-op)."""
+    if not _COALESCE_ENABLED:
+        yield
+        return
+    scope = getattr(_coalesce_tls, "scope", None)
+    if scope is not None:
+        scope.depth += 1
+        try:
+            yield
+        finally:
+            scope.depth -= 1
+        return
+    scope = _coalesce_tls.scope = _CoalesceScope()
+    try:
+        yield
+    finally:
+        _coalesce_tls.scope = None
+        scope.flush()
 
 
 @dataclass(frozen=True)
@@ -137,8 +238,26 @@ class WorkQueue:
         fut: Future = Future(name=f"{self.name}:{getattr(fn, '__name__', 'task')}")
         with self._count_lock:
             self._submitted += 1
-        self._q.put((fut, fn, args, kwargs))
+        item = (fut, fn, args, kwargs)
+        scope = _current_scope()
+        if scope is not None:
+            scope.stage(self, [item])
+        else:
+            self._q.put(item)
         return fut
+
+    def _flush_items(self, items: list) -> None:
+        """Enqueue staged items as one batch (counters already bumped at
+        stage time — see ``coalesce``)."""
+        if self._shutdown.is_set():
+            err = RuntimeError(f"WorkQueue {self.name} shut down with staged submissions")
+            for fut, _, _, _ in items:
+                try:
+                    fut._cf.set_exception(err)
+                except Exception:  # noqa: BLE001 - already resolved/cancelled
+                    pass
+            return
+        self._q.put(items if len(items) > 1 else items[0])
 
     def submit_many(self, calls) -> "list[Future]":
         """Batched enqueue: one queue hop for N calls (DESIGN.md §8).
@@ -166,7 +285,11 @@ class WorkQueue:
         if batch:
             with self._count_lock:
                 self._submitted += len(batch)
-            self._q.put(batch)
+            scope = _current_scope()
+            if scope is not None:
+                scope.stage(self, batch)
+            else:
+                self._q.put(batch)
         return futs
 
     def load(self) -> QueueLoad:
@@ -232,8 +355,36 @@ class Lane:
         d = self.dispatcher
         if d._shutdown.is_set():
             raise RuntimeError(f"Lane {self.name} is shut down")
+        scope = _current_scope()
+        if scope is not None:
+            # Stage for one flush per lane; submitted is bumped NOW so the
+            # scheduler's depth signal sees the coalesced batch immediately.
+            with self._lock:
+                self._submitted += len(items)
+            scope.stage(self, items)
+            return
         with self._lock:
             self._submitted += len(items)
+            self._pending.extend(items)
+            kick = not self._active
+            if kick:
+                self._active = True
+        if kick:
+            d._pool.submit(self._run)
+
+    def _flush_items(self, items: list) -> None:
+        """Hand staged items to the lane as one batch (one pool kick at
+        most; counters were bumped at stage time)."""
+        d = self.dispatcher
+        if d._shutdown.is_set():
+            err = RuntimeError(f"Lane {self.name} shut down with staged submissions")
+            for fut, _, _, _ in items:
+                try:
+                    fut._cf.set_exception(err)
+                except Exception:  # noqa: BLE001 - already resolved/cancelled
+                    pass
+            return
+        with self._lock:
             self._pending.extend(items)
             kick = not self._active
             if kick:
@@ -385,7 +536,9 @@ class LaneDispatcher:
         go to every lane in parallel — a barrier never serializes lanes."""
         from repro.core.futures import when_all
 
+        flush_coalesced()  # staged work counts as "submitted before the call"
         markers = [ln.submit(lambda: None) for ln in self.lanes()]
+        flush_coalesced()  # the markers themselves must not linger staged
         return when_all(markers, name=f"barrier:{self.name}").then(
             lambda _: None, executor="inline"
         )
@@ -480,6 +633,7 @@ def reset_runtime() -> None:
     """
     import sys
 
+    flush_coalesced()  # staged submissions must not straddle the reset
     _parcel = sys.modules.get("repro.core.parcel")
     if _parcel is not None:  # never import the transport just to reset it
         _parcel._shutdown_all_ports()

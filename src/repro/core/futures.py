@@ -207,6 +207,12 @@ class Future(Generic[T]):
             if self._exc is not None:
                 raise self._exc
             return self._value
+        if not self._cf.done():
+            # About to block: flush this thread's coalesced submissions so a
+            # staged task's result can always be awaited (executor.coalesce).
+            from repro.core.executor import flush_coalesced
+
+            flush_coalesced()
         r = self._take_resolver()
         if r is not None:
             self._run_resolver_inline(r)
@@ -215,6 +221,10 @@ class Future(Generic[T]):
     def exception(self, timeout: "float | None" = None) -> "BaseException | None":
         if self._cf is None:
             return self._exc
+        if not self._cf.done():
+            from repro.core.executor import flush_coalesced
+
+            flush_coalesced()
         r = self._take_resolver()
         if r is not None:
             self._run_resolver_inline(r)
@@ -350,6 +360,34 @@ class Promise(Generic[T]):
         except _cf.InvalidStateError:
             if not self._future._cf.cancelled():
                 raise
+
+
+def forward_failure(src: Future, promise: Promise) -> None:
+    """If ``src`` fails, fail ``promise``; on success, do nothing.
+
+    Used by pipelined parcel dispatch: the reply promise is normally
+    resolved by the port's listener thread, but when the *dispatch task*
+    itself dies (lane shut down before it ran, send failed) nobody ever
+    stages the parcel — this hook keeps the reply future from pending
+    forever.  Races with a real resolution are benign: first writer wins,
+    the late failure is dropped."""
+    def _fail(exc: BaseException) -> None:
+        try:
+            promise.set_exception(exc)
+        except _cf.InvalidStateError:
+            pass
+    if src._cf is None:
+        if src._exc is not None:
+            _fail(src._exc)
+        return
+    src._spawn_resolver()
+
+    def _cb(parent: _cf.Future) -> None:
+        exc = _cf.CancelledError() if parent.cancelled() else parent.exception()
+        if exc is not None:
+            _fail(exc)
+
+    src._cf.add_done_callback(_cb)
 
 
 def make_ready_future(value: T) -> Future[T]:

@@ -61,7 +61,9 @@ replayed any number of times.
 """
 from __future__ import annotations
 
+import os
 import threading
+import time
 from contextlib import contextmanager
 from typing import Any, Callable, Optional, Sequence
 
@@ -309,7 +311,7 @@ class TaskGraph:
 
 class _Segment:
     __slots__ = ("device", "nodes", "chain", "queue", "in_syms", "out_syms", "compiled",
-                 "donated_ixs", "transfer_ixs")
+                 "donated_ixs", "transfer_ixs", "exec_mode")
 
     def __init__(self, device, nodes, chain: int = 0):
         self.device = device
@@ -321,6 +323,30 @@ class _Segment:
         self.compiled = None
         self.donated_ixs: "tuple[int, ...]" = ()
         self.transfer_ixs: "tuple[int, ...]" = ()  # input slots fed cross-device
+        self.exec_mode = "fused"  # fused | staged | remote (calibrated at bind)
+
+
+class _FastPlan:
+    """Flat pre-bound replay record for single-segment local graphs: the
+    lane, executable, staging order, commit decisions and fetch layout the
+    generic path derives per replay, resolved once at instantiate."""
+
+    __slots__ = ("exe", "in_syms", "out_syms", "externs", "extern_bufs", "writes",
+                 "commit_sets", "commit_invs", "keep_externs", "fetch_plan", "jd")
+
+    def __init__(self, *, exe, in_syms, out_syms, externs, extern_bufs, writes,
+                 commit_sets, commit_invs, keep_externs, fetch_plan, jd):
+        self.exe = exe
+        self.in_syms = in_syms
+        self.out_syms = out_syms
+        self.externs = externs  # ((sym, Buffer), ...)
+        self.extern_bufs = extern_bufs  # eligibility re-check in replay()
+        self.writes = writes
+        self.commit_sets = commit_sets  # ((Buffer, sym, planned producer), ...)
+        self.commit_invs = commit_invs
+        self.keep_externs = keep_externs
+        self.fetch_plan = fetch_plan
+        self.jd = jd
 
 
 class GraphExec:
@@ -360,6 +386,11 @@ class GraphExec:
         placements.update(b.device.jax_device for b in graph._extern.values())
         placements.update(n.buf.device.jax_device for n in self._writes)
         self._multi_device = len(placements) > 1
+        # Pre-bound replay record (ISSUE: close the dispatch tax at bind
+        # time).  For the common shape — one local segment, one device,
+        # default lane — everything replay() decides per call is decided
+        # HERE once, into flat tuples a single lane task walks.
+        self._fast = self._build_fast_plan()
         # NOTE: extern buffers may have pending eager ops on their own
         # queues, and those queues can CHANGE between replays (percolation
         # re-homes handles) — so both replay paths read each extern ON its
@@ -544,12 +575,14 @@ class GraphExec:
 
     def _compile_segments(self) -> None:
         g = self.graph
+        mode_env = os.environ.get("REPRO_SEGMENT_COMPILE", "auto").lower()
         for seg in self._segments:
             if getattr(seg.device, "is_remote_proxy", False):
                 # A segment living on a remote locality replays as ONE
                 # run_segment parcel: kernel-name plan + input arrays out,
                 # output arrays back (DESIGN.md §10).  No local jit.
                 seg.compiled = _remote_segment_executor(seg)
+                seg.exec_mode = "remote"
                 continue
             nodes, in_syms, out_syms = seg.nodes, tuple(seg.in_syms), tuple(seg.out_syms)
 
@@ -573,6 +606,199 @@ class GraphExec:
             specs = pin_specs([g._sym_spec[s] for s in in_syms], seg.device.jax_device)
             jitted = jax.jit(make_fused(), donate_argnums=seg.donated_ixs)
             seg.compiled = jitted.lower(*specs).compile()
+            seg.exec_mode = "fused"
+            # Bind-time calibration (StarPU performance-model style): a
+            # whole-segment XLA module is not always the fastest executor —
+            # on compute-bound transcendental chains the fused module can
+            # LOSE to the per-node staged pipeline eager launches use
+            # (fusion trades scheduling overhead for a different codegen,
+            # and the trade goes either way).  Since instantiate is the
+            # bind step, measure both ONCE here and freeze the winner;
+            # replay cost is then whichever executor actually wins on this
+            # backend.  REPRO_SEGMENT_COMPILE=fused|staged skips the
+            # trials and forces one side (auto = measure).
+            if len(nodes) < 2 or mode_env == "fused":
+                continue
+            staged = self._compile_staged(seg)
+            if staged is None:
+                continue
+            if mode_env == "staged":
+                seg.compiled = staged
+                seg.exec_mode = "staged"
+                continue
+            winner, mode = _calibrate_executors(seg, g, seg.compiled, staged)
+            seg.compiled = winner
+            seg.exec_mode = mode
+
+    def _compile_staged(self, seg: "_Segment"):
+        """Per-node staged pipeline for one segment: each launch compiled
+        alone (constants baked, SSA inputs as arguments), chained through a
+        plain dict env — the executor shape of three eager ``Program.run``
+        calls, minus their queue hops and futures.  Returns ``None`` when
+        any node resists compilation (the fused module then stands)."""
+        from repro.core.program import pin_specs
+
+        g = self.graph
+        jd = seg.device.jax_device
+        # Donation mirrors the fused module's plan: a sym dies at its LAST
+        # consuming node when it is either a donatable segment input (the
+        # positions ``donated_ixs`` already vetted: not extern, not kept,
+        # no later use) or a segment-internal intermediate that is not an
+        # out_sym — XLA then reuses its storage in place, the same win
+        # whole-segment compilation gets for free.
+        donatable = {seg.in_syms[pos] for pos in seg.donated_ixs}
+        produced: "set[int]" = set()
+        last_use: "dict[int, int]" = {}
+        for k, n in enumerate(seg.nodes):
+            for a in n.arg_refs:
+                if isinstance(a, _SymRef):
+                    last_use[a.sym] = k
+            produced.update(n.res_syms)
+        dead_after = set(seg.out_syms) | self._keep
+        for s in produced:
+            if (self._donate and s in last_use and s not in dead_after
+                    and g._sym_spec[s].shape):
+                donatable.add(s)
+
+        runners = []
+        for k, n in enumerate(seg.nodes):
+            sym_ix = tuple(i for i, a in enumerate(n.arg_refs) if isinstance(a, _SymRef))
+            specs = pin_specs([g._sym_spec[n.arg_refs[i].sym] for i in sym_ix], jd)
+            node_syms = [n.arg_refs[i].sym for i in sym_ix]
+            donate_ix = tuple(
+                j for j, s in enumerate(node_syms)
+                if s in donatable and last_use[s] == k and node_syms.count(s) == 1
+            )
+
+            def make_node(n=n, sym_ix=sym_ix):
+                refs = list(n.arg_refs)
+
+                def node_fn(*sym_vals):
+                    vals = list(refs)
+                    for i, v in zip(sym_ix, sym_vals):
+                        vals[i] = v
+                    res = n.bound(*vals)
+                    return res
+
+                return node_fn
+
+            try:
+                compiled = jax.jit(
+                    make_node(), donate_argnums=donate_ix
+                ).lower(*specs).compile()
+            except Exception:  # noqa: BLE001 — any uncompilable node: keep fused
+                return None
+            runners.append((n, sym_ix, compiled))
+        in_syms, out_syms = tuple(seg.in_syms), tuple(seg.out_syms)
+
+        def staged(*xs):
+            env = dict(zip(in_syms, xs))
+            for n, sym_ix, compiled in runners:
+                res = compiled(*[env[n.arg_refs[i].sym] for i in sym_ix])
+                rl = list(res) if isinstance(res, (tuple, list)) else [res]
+                for s, v in zip(n.res_syms, rl):
+                    env[s] = v
+            return tuple(env[s] for s in out_syms)
+
+        return staged
+
+    # -- pre-bound fast path ------------------------------------------------
+
+    def _build_fast_plan(self) -> "_FastPlan | None":
+        """Freeze the single-hop replay into a ``_FastPlan`` when the graph
+        qualifies: exactly one LOCAL segment on its device's default lane,
+        single-device placement, no remote extern inputs.  Everything the
+        generic path re-derives per replay — staging order, commit
+        decisions (set/invalidate/keep per buffer), fetch layout — becomes
+        flat tuples; ``_replay_fast`` then walks them in one lane task.
+        Per-replay eligibility (externs still homed on the route queue,
+        no stream override) is re-checked cheaply in ``replay()``."""
+        g = self.graph
+        if self._fanout or len(self._segments) != 1 or self._multi_device:
+            return None
+        seg = self._segments[0]
+        if getattr(seg.device, "is_remote_proxy", False) or seg.queue is not self._queue:
+            return None
+        if any(getattr(b, "is_remote_buffer", False) for b in g._extern.values()):
+            return None
+        jd = seg.device.jax_device
+        # Static env membership: externs + writes are always staged, the
+        # segment adds its out_syms.  Anything else was fused away.
+        env_syms = set(g._extern) | {n.sym for n in self._writes} | set(seg.out_syms)
+        commit_sets: list = []   # (buffer, sym, planned producer device)
+        commit_invs: list = []   # buffers whose final value did not survive
+        keep_externs: list = []  # extern syms kept live for block_until_ready
+        for bid, s in self._final_sym.items():
+            buf = g._buffers[bid]
+            if s in g._extern:
+                if s in self._keep:
+                    keep_externs.append(s)
+                continue
+            if s in env_syms and s not in self._donated_syms:
+                commit_sets.append((buf, s, self._prod_dev.get(s)))
+            else:
+                commit_invs.append(buf)
+        fetch_plan: list = []  # ("read", node, sym) | ("launch", node, res_syms)
+        for n in g._nodes:
+            if isinstance(n, ReadNode):
+                fetch_plan.append(("read", n, n.sym))
+            elif isinstance(n, LaunchNode) and n.out_bufs is None:
+                fetch_plan.append(("launch", n, tuple(n.res_syms)))
+        return _FastPlan(
+            exe=seg.compiled,
+            in_syms=tuple(seg.in_syms),
+            out_syms=tuple(seg.out_syms),
+            externs=tuple(g._extern.items()),
+            extern_bufs=tuple(g._extern.values()),
+            writes=tuple(self._writes),
+            commit_sets=tuple(commit_sets),
+            commit_invs=tuple(commit_invs),
+            keep_externs=tuple(keep_externs),
+            fetch_plan=tuple(fetch_plan),
+            jd=jd,
+        )
+
+    def _replay_fast(self, feeds, block: bool, gate: "Future | None") -> GraphResult:
+        """One pre-bound lane task: stage -> execute -> commit, all driven
+        by the flat ``_FastPlan`` tuples (no per-replay plan derivation)."""
+        if gate is not None:
+            gate.wait()  # prior replay went down a different lane
+        p = self._fast
+        jd = p.jd
+        env: "dict[int, Any]" = {}
+        for s, buf in p.externs:
+            arr = buf.array()
+            env[s] = arr if arr.devices() == {jd} else jax.device_put(arr, jd)
+        adopted: "set[int]" = set()
+        for n in p.writes:
+            env[n.sym], was_adopted = self._stage_write(n, feeds)
+            if was_adopted:
+                adopted.add(n.sym)
+        outs = p.exe(*[env[s] for s in p.in_syms])
+        for s, v in zip(p.out_syms, outs):
+            env[s] = v
+        live_vals = [env[s] for s in p.keep_externs]
+        for buf, s, prod in p.commit_sets:
+            buf._set_array(env[s], aliased=s in adopted)
+            if prod is not None and prod is not buf.device:
+                buf._rehome(prod)
+            live_vals.append(env[s])
+        for buf in p.commit_invs:
+            buf._invalidate()
+        fetches: dict = {}
+        reads: list = []
+        for kind, node, syms in p.fetch_plan:
+            if kind == "read":
+                val = np.asarray(env[syms])
+                fetches[node] = val
+                reads.append(val)
+            else:
+                vals = [env[s] for s in syms]
+                fetches[node] = vals[0] if len(vals) == 1 else vals
+                live_vals.extend(vals)
+        if block and live_vals:
+            jax.block_until_ready(live_vals)
+        return GraphResult(fetches, reads)
 
     # -- replay ------------------------------------------------------------
 
@@ -702,6 +928,21 @@ class GraphExec:
             )
         if self._fanout:
             return self._replay_fanout(feeds, block)
+        fast = self._fast
+        if fast is not None and stream is None and all(
+                b.device.ops_queue is self._queue for b in fast.extern_bufs):
+            # Pre-bound fast path: the plan is frozen, the externs are
+            # still homed on the route lane (no pre-reads needed — lane
+            # FIFO orders the replay after their pending eager ops), and
+            # no stream override.  Cost per replay: one lock-scoped lane
+            # enqueue + one Future.
+            with self._replay_lock:
+                prev = self._last_replay
+                gate = prev if self._last_replay_queue is not self._queue else None
+                launched = self._queue.submit(self._replay_fast, feeds, block, gate)
+                self._last_replay = launched
+                self._last_replay_queue = self._queue
+            return launched
         queue = self._queue if stream is None else stream._lane_for(self._route_dev)
 
         def _execute(pre, prev_gate=None) -> GraphResult:
@@ -852,10 +1093,15 @@ class GraphExec:
         nt = len(self._transfers)
         nlanes = len({id(s.queue) for s in self._segments})
         ne = len(self._event_edges)
-        mode = "fan-out" if self._fanout else "single-hop"
+        if self._fanout:
+            mode = "fan-out"
+        else:
+            mode = "pre-bound" if self._fast is not None else "single-hop"
+        comp = "+".join(sorted({s.exec_mode for s in self._segments})) or "empty"
         return (
             f"GraphExec({self.graph.name}: {nk} launches -> {nseg} fused segment(s) "
-            f"on {nlanes} stream(s), {nt} transfer(s), {ne} event edge(s), {mode})"
+            f"on {nlanes} stream(s), {nt} transfer(s), {ne} event edge(s), {mode}, "
+            f"compile={comp})"
         )
 
 
@@ -956,6 +1202,43 @@ def _segment_runner(seg: "_Segment"):
         return seg.compiled(*xs)
 
     return _run_segment
+
+
+_CAL_TRIALS = 3
+_CAL_MAX_BYTES = 256 << 20  # segments above this skip trials (alloc churn)
+_CAL_FUSED_EDGE = 1.05  # prefer fused within 5%: it elides intermediates
+
+
+def _calibrate_executors(seg: "_Segment", g: "TaskGraph", fused, staged):
+    """Time both segment executors on throwaway zero inputs and return the
+    winner.  Fresh inputs per trial (the fused module may donate its
+    arguments), built and synced before the clock starts; min-of-N is the
+    robust statistic for noise-prone hosts.  Ties go to fused — it elides
+    intermediate materializations.  Any trial failure keeps fused."""
+    specs = [g._sym_spec[s] for s in seg.in_syms]
+    if sum(int(np.prod(sp.shape)) * np.dtype(sp.dtype).itemsize for sp in specs) > _CAL_MAX_BYTES:
+        return fused, "fused"
+    jd = seg.device.jax_device
+
+    def timed(fn):
+        xs = [jax.device_put(jnp.zeros(sp.shape, sp.dtype), jd) for sp in specs]
+        jax.block_until_ready(xs)
+        t0 = time.perf_counter()
+        out = fn(*xs)
+        jax.block_until_ready(out)
+        return time.perf_counter() - t0
+
+    try:
+        timed(fused), timed(staged)  # warmup (staged eager fallbacks trace here)
+        tf, ts = [], []
+        for _ in range(_CAL_TRIALS):  # interleaved: drift hits both sides
+            tf.append(timed(fused))
+            ts.append(timed(staged))
+        if min(ts) * _CAL_FUSED_EDGE < min(tf):
+            return staged, "staged"
+    except Exception:  # noqa: BLE001 — calibration must never break instantiate
+        pass
+    return fused, "fused"
 
 
 def _prepare(buf: Buffer, data, jd):

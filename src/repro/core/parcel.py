@@ -37,9 +37,17 @@ localities, DESIGN.md §11):
 
 * **Parcel-channel FIFO** — parcels submitted through one channel (one
   ``RemoteDevice`` stream, including its default ``ops_queue`` channel)
-  execute on the owning locality strictly in submission order: the
-  channel's worker sends a parcel and blocks on its reply before sending
-  the next, so order holds end-to-end, not just at the sender.
+  execute on the owning locality strictly in submission order.  On a
+  non-pipelined port the channel's worker sends a parcel and blocks on
+  its reply before sending the next, so order holds end-to-end trivially.
+  On a pipelined ``LocalClusterParcelport`` (the default) the channel
+  *stages* each parcel (``stage``) and ships the backlog in one queue hop
+  (``flush``) without waiting for replies; FIFO still holds end-to-end
+  because staging order is flush order is wire order, and the worker
+  executes actions on a single pool thread in arrival order.  Large array
+  payloads (≥ ``REPRO_PARCEL_SHM_MIN`` bytes) cross via POSIX shared
+  memory instead of the pipe when ``REPRO_PARCEL_SHM`` permits — the
+  blob then carries only the segment name + dtype + shape.
 * **Cross-channel: none** — parcels of different channels (different
   streams, or different devices) may interleave arbitrarily on the
   owning locality; synchronization between them is explicit (an
@@ -98,6 +106,166 @@ _Q = struct.Struct("<Q")
 _q = struct.Struct("<q")
 _d = struct.Struct("<d")
 
+# -- shared-memory array lane (same-host localities) -------------------------
+#
+# Array payloads at/above _SHM_MIN bytes travel OUT-OF-BAND through a
+# POSIX shared-memory segment: the wire carries only a control header
+# (segment name + dtype + shape), so the pipe/queue hop stays constant-
+# size no matter how large the tensor.  Protocol: the SENDER creates and
+# fills the segment and immediately unregisters it from its own
+# resource_tracker (the tracker would otherwise unlink it at sender exit,
+# racing the receiver); the RECEIVER copies the payload out and unlinks —
+# sole owner of the segment's lifetime in normal operation.  Each side
+# additionally remembers the names it created in a ``_ShmTracker`` whose
+# ``purge()`` unlinks whatever a dead/never-started receiver left behind
+# (no leaked segments after ``reset_runtime``).
+# ``REPRO_PARCEL_SHM=off`` forces everything inline on the wire;
+# ``REPRO_PARCEL_SHM_MIN`` tunes the out-of-band threshold (bytes).
+
+_SHM_MODE = os.environ.get("REPRO_PARCEL_SHM", "auto").lower()
+# Default threshold: the segment's fixed cost (shm_open/ftruncate/mmap on
+# each side plus the unlink) runs a few hundred µs — measured against the
+# pipe's per-byte cost that only pays off from ~half a MB up.
+_SHM_MIN = int(os.environ.get("REPRO_PARCEL_SHM_MIN", str(512 << 10)))
+_shm_state: "dict[str, Any]" = {"ok": None}
+
+
+def _shm_untrack(seg) -> None:
+    """Drop a segment from THIS process's resource_tracker ledger (the
+    other side of the transfer owns the unlink)."""
+    try:
+        from multiprocessing import resource_tracker
+
+        resource_tracker.unregister(seg._name, "shared_memory")
+    except Exception:  # noqa: BLE001 - tracker bookkeeping is best-effort
+        pass
+
+
+def shm_available() -> bool:
+    """Can this process create shared-memory segments (and is the lane
+    enabled)?  Probed once; ``REPRO_PARCEL_SHM=off`` always answers False."""
+    if _SHM_MODE == "off":
+        return False
+    if _shm_state["ok"] is None:
+        try:
+            from multiprocessing import shared_memory
+
+            seg = shared_memory.SharedMemory(create=True, size=16)
+            seg.close()
+            seg.unlink()
+            _shm_state["ok"] = True
+        except Exception:  # noqa: BLE001 - no /dev/shm, sandboxed, etc.
+            _shm_state["ok"] = False
+    return bool(_shm_state["ok"])
+
+
+def _shm_export(arr: np.ndarray) -> "str | None":
+    """Copy ``arr`` into a fresh segment; returns its name (or None to
+    fall back to inline encoding)."""
+    try:
+        from multiprocessing import shared_memory
+
+        seg = shared_memory.SharedMemory(create=True, size=max(arr.nbytes, 1))
+    except Exception:  # noqa: BLE001 - creation failed: inline fallback
+        return None
+    try:
+        dst = np.frombuffer(seg.buf, dtype=arr.dtype, count=arr.size).reshape(arr.shape)
+        np.copyto(dst, arr)
+        del dst
+        name = seg.name
+        _shm_untrack(seg)
+        seg.close()
+        return name
+    except Exception:  # noqa: BLE001
+        try:
+            seg.close()
+            seg.unlink()
+        except Exception:  # noqa: BLE001
+            pass
+        return None
+
+
+def _shm_import(name: str, descr: str, shape) -> np.ndarray:
+    """Receiver half: attach, copy out, unlink (consuming the segment)."""
+    from multiprocessing import shared_memory
+
+    try:
+        seg = shared_memory.SharedMemory(name=name)
+    except FileNotFoundError:
+        raise RemoteError(
+            f"shared-memory parcel segment {name!r} vanished before it was "
+            "consumed (sender torn down mid-flight?)"
+        ) from None
+    try:
+        dt = np.dtype(descr)
+        count = 1
+        for d in shape:
+            count *= int(d)
+        arr = np.frombuffer(seg.buf, dtype=dt, count=count).reshape(shape).copy()
+    finally:
+        try:
+            seg.close()
+        except Exception:  # noqa: BLE001
+            pass
+        try:
+            seg.unlink()  # also unregisters from this process's tracker
+        except FileNotFoundError:
+            pass
+    return arr
+
+
+class _ShmTracker:
+    """Names of segments this process created that are still (possibly)
+    unconsumed.  ``sweep`` drops names the receiver has already unlinked;
+    ``purge`` unlinks the rest (receiver died / port shut down)."""
+
+    __slots__ = ("names", "lock")
+
+    def __init__(self):
+        self.names: "list[str]" = []
+        self.lock = threading.Lock()
+
+    def add(self, names) -> None:
+        with self.lock:
+            self.names.extend(names)
+            if len(self.names) > 64:
+                self._sweep_locked()
+
+    def sweep(self) -> None:
+        with self.lock:
+            self._sweep_locked()
+
+    def _sweep_locked(self) -> None:
+        from multiprocessing import shared_memory
+
+        keep = []
+        for nm in self.names:
+            try:
+                seg = shared_memory.SharedMemory(name=nm)
+            except Exception:  # noqa: BLE001 - gone: consumed by the receiver
+                continue
+            _shm_untrack(seg)
+            seg.close()
+            keep.append(nm)
+        self.names = keep
+
+    def purge(self) -> None:
+        """Unlink every still-existing tracked segment (terminal cleanup)."""
+        from multiprocessing import shared_memory
+
+        with self.lock:
+            names, self.names = self.names, []
+        for nm in names:
+            try:
+                seg = shared_memory.SharedMemory(name=nm)
+            except Exception:  # noqa: BLE001 - already consumed
+                continue
+            try:
+                seg.close()
+                seg.unlink()
+            except Exception:  # noqa: BLE001
+                pass
+
 
 def _put_len(out: bytearray, n: int) -> None:
     out += _Q.pack(n)
@@ -109,7 +277,7 @@ def _put_str(out: bytearray, s: str) -> None:
     out += b
 
 
-def _enc(obj: Any, out: bytearray) -> None:
+def _enc(obj: Any, out: bytearray, sink: "list | None" = None) -> None:
     if obj is None:
         out += b"N"
     elif obj is True:
@@ -146,6 +314,17 @@ def _enc(obj: Any, out: bytearray) -> None:
         if obj.dtype.hasobject:
             raise ValueError("object-dtype arrays are not parcel-encodable")
         arr = np.ascontiguousarray(obj)
+        if sink is not None and arr.nbytes >= _SHM_MIN:
+            # Out-of-band lane: payload bytes via shared memory, only the
+            # control header on the wire (falls back inline on failure).
+            name = _shm_export(arr)
+            if name is not None:
+                sink.append(name)
+                out += b"A"
+                _put_str(out, name)
+                _put_str(out, arr.dtype.str)
+                _enc(tuple(int(d) for d in obj.shape), out)
+                return
         out += b"a"
         _put_str(out, arr.dtype.str)
         # shape from the ORIGINAL: ascontiguousarray promotes 0-d to (1,)
@@ -158,13 +337,13 @@ def _enc(obj: Any, out: bytearray) -> None:
         out += b"l" if type(obj) is list else b"t"
         _put_len(out, len(obj))
         for v in obj:
-            _enc(v, out)
+            _enc(v, out, sink)
     elif isinstance(obj, dict):
         out += b"d"
         _put_len(out, len(obj))
         for k, v in obj.items():
-            _enc(k, out)
-            _enc(v, out)
+            _enc(k, out, sink)
+            _enc(v, out, sink)
     elif isinstance(obj, BaseException):
         out += b"e"
         cls = type(obj)
@@ -178,7 +357,7 @@ def _enc(obj: Any, out: bytearray) -> None:
                 args.append(a)
             except (ValueError, TypeError):
                 args.append(repr(a))
-        _enc(args, out)
+        _enc(args, out)  # exception args stay inline: no shm for error paths
         _put_str(out, str(obj))
     else:
         # Last chance: things that quack like arrays (jax.Array, memoryview).
@@ -188,13 +367,18 @@ def _enc(obj: Any, out: bytearray) -> None:
             raise ValueError(f"{type(obj).__name__} is not parcel-encodable") from None
         if arr.dtype.hasobject:
             raise ValueError(f"{type(obj).__name__} is not parcel-encodable")
-        _enc(arr, out)
+        _enc(arr, out, sink)
 
 
-def dumps(obj: Any) -> bytes:
-    """Serialize a payload value to bytes (see module docstring)."""
+def dumps(obj: Any, shm_sink: "list | None" = None) -> bytes:
+    """Serialize a payload value to bytes (see module docstring).
+
+    ``shm_sink``: a list enables the shared-memory lane — arrays of at
+    least ``REPRO_PARCEL_SHM_MIN`` bytes travel out-of-band and the names
+    of the segments created are appended to the list (the caller tracks
+    them for crash cleanup; the receiver unlinks on decode)."""
     out = bytearray()
-    _enc(obj, out)
+    _enc(obj, out, shm_sink)
     return bytes(out)
 
 
@@ -254,6 +438,11 @@ def _dec(buf: bytes, pos: int) -> "tuple[Any, int]":
         n, pos = _get_len(buf, pos)
         arr = np.frombuffer(buf[pos : pos + n], dtype=np.dtype(descr)).reshape(shape)
         return arr.copy(), pos + n  # writable, detached from the wire buffer
+    if tag == b"A":  # out-of-band array: payload in a shared-memory segment
+        name, pos = _get_str(buf, pos)
+        descr, pos = _get_str(buf, pos)
+        shape, pos = _dec(buf, pos)
+        return _shm_import(name, descr, shape), pos
     if tag in (b"l", b"t"):
         n, pos = _get_len(buf, pos)
         items = []
@@ -308,8 +497,8 @@ class Parcel:
     ok: bool = True
 
 
-def encode_parcel(p: Parcel) -> bytes:
-    return dumps((p.action, p.payload, p.pid, p.locality, p.ok))
+def encode_parcel(p: Parcel, shm_sink: "list | None" = None) -> bytes:
+    return dumps((p.action, p.payload, p.pid, p.locality, p.ok), shm_sink=shm_sink)
 
 
 def decode_parcel(buf: bytes) -> Parcel:
@@ -453,6 +642,13 @@ class ActionServer:
 
     def _do_ping(self, payload: dict) -> str:
         return "pong"
+
+    def _do_barrier(self, payload: dict) -> None:
+        # Completion fence for pipelined channels: unlike "ping" (answered
+        # inline by the worker's receive loop), "barrier" rides the worker's
+        # single-threaded action pool, so its reply proves every parcel
+        # staged before it has fully executed.
+        return None
 
     def _do_discover(self, payload: dict) -> list:
         from repro.core.device import get_all_devices
@@ -785,42 +981,65 @@ class LoopbackParcelport(Parcelport):
 # -- cluster transport -------------------------------------------------------
 
 
-def _cluster_worker_main(locality_id: int, inbox, outbox) -> None:
+def _cluster_worker_main(locality_id: int, rx, tx, shm_replies: bool = True) -> None:
     """Entry point of one spawned worker process: one remote locality.
 
     Owns its own JAX runtime, ``Runtime``/``WorkQueue``s and AGAS registry
     (GIDs minted under ``locality_id``).  The receive loop answers pings
     inline (process liveness, not business progress) and runs every other
     action on a single-thread executor, preserving arrival order while
-    keeping the heartbeat responsive during long launches.
+    keeping the heartbeat responsive during long launches.  A ``multi``
+    parcel (coalesced channel flush) is unpacked here and its sub-parcels
+    submitted in order — arrival-order execution, one wire hop.  Reply
+    arrays ride the shared-memory lane when available (``shm_replies``
+    mirrors the parent port's setting).
+
+    ``rx``/``tx`` are raw ``multiprocessing`` pipe connections carrying
+    already-encoded parcel blobs (``send_bytes``/``recv_bytes``: no
+    pickle layer, no ``mp.Queue`` feeder thread).  An empty message is
+    the hard-stop sentinel; a closed pipe (parent gone) ends the loop.
     """
     import concurrent.futures as _cf
 
     from repro.core import agas
 
+    txlock = threading.Lock()  # replies come from the pool AND the rx loop
+
+    def _send(blob: bytes) -> None:
+        with txlock:
+            tx.send_bytes(blob)
+
     agas.set_locality_id(locality_id)
-    server = ActionServer(locality_id)
     try:
+        server = ActionServer(locality_id)
         hello = Parcel("hello", {"devices": server.handle("discover", {}), "os_pid": os.getpid()}, 0, locality_id)
-        outbox.put(encode_parcel(hello))
+        _send(encode_parcel(hello))
     except BaseException as e:  # noqa: BLE001 - surface startup failure to parent
-        outbox.put(encode_parcel(Parcel("hello", {"error": e}, 0, locality_id, ok=False)))
+        _send(encode_parcel(Parcel("hello", {"error": e}, 0, locality_id, ok=False)))
         return
 
     pool = _cf.ThreadPoolExecutor(max_workers=1, thread_name_prefix=f"parcel-L{locality_id}")
+    use_shm = bool(shm_replies) and shm_available()
+    tracker = _ShmTracker() if use_shm else None
 
     def _reply(pid: int, value=None, error=None) -> None:
         if error is None:
             rep = Parcel("reply", {"value": value}, pid, locality_id)
         else:
             rep = Parcel("reply", {"error": error}, pid, locality_id, ok=False)
+        sink: "list | None" = [] if use_shm else None
         try:
-            blob = encode_parcel(rep)
+            blob = encode_parcel(rep, shm_sink=sink)
         except Exception as e:  # noqa: BLE001 - unencodable reply value
             blob = encode_parcel(
                 Parcel("reply", {"error": RemoteError(f"unencodable reply: {e}")}, pid, locality_id, ok=False)
             )
-        outbox.put(blob)
+        if sink:
+            tracker.add(sink)
+        try:
+            _send(blob)
+        except (BrokenPipeError, OSError):  # parent gone: nothing to reply to
+            pass
 
     def _work(req: Parcel) -> None:
         try:
@@ -828,43 +1047,83 @@ def _cluster_worker_main(locality_id: int, inbox, outbox) -> None:
         except BaseException as e:  # noqa: BLE001 - errors travel as parcels
             _reply(req.pid, error=e)
 
+    def _work_blob(blob: bytes) -> None:
+        try:
+            req = decode_parcel(blob)
+        except BaseException as e:  # noqa: BLE001 - no pid to reply to
+            del e
+            return
+        _work(req)
+
+    req: "Parcel | None" = None
     while True:
-        blob = inbox.get()
-        if blob is None:
+        try:
+            blob = rx.recv_bytes()
+        except (EOFError, OSError):  # parent closed its end / died
+            req = None
             break
-        req = decode_parcel(blob)
+        if not blob:  # empty message: hard-stop sentinel
+            req = None
+            break
+        try:
+            req = decode_parcel(blob)
+        except BaseException:  # noqa: BLE001 - undecodable: no pid to reply to
+            continue
         if req.action == "shutdown":
-            _reply(req.pid, value=None)
             break
         if req.action == "ping":
             _reply(req.pid, value="pong")  # answered inline: liveness signal
             continue
+        if req.action == "multi":
+            # One coalesced channel flush: sub-parcels keep their staging
+            # order (the pool is single-threaded), each replying alone.
+            # Sub-decode runs ON the pool: a shared-memory import must not
+            # stall the receive loop (heartbeat stays responsive).
+            for sub in req.payload["parcels"]:
+                pool.submit(_work_blob, sub)
+            continue
         pool.submit(_work, req)
-    pool.shutdown(wait=False)
+    # Orderly drain before the shutdown reply: queued work finishes (and
+    # its reply segments get consumed or tracked), THEN still-unconsumed
+    # reply segments are unlinked so nothing outlives the worker.
+    pool.shutdown(wait=True)
+    if req is not None and req.action == "shutdown":
+        _reply(req.pid, value=None)
     server.shutdown()
+    if tracker is not None:
+        tracker.purge()
 
 
 class _ClusterWorker:
-    __slots__ = ("locality_id", "proc", "inbox", "outbox", "heartbeat", "pending", "lock", "dead", "death_reason")
+    __slots__ = ("locality_id", "proc", "tx", "rx", "txlock", "heartbeat", "pending", "lock",
+                 "dead", "death_reason", "sendbuf", "sendlock", "shm_names")
 
-    def __init__(self, locality_id, proc, inbox, outbox, heartbeat):
+    def __init__(self, locality_id, proc, tx, rx, heartbeat):
         self.locality_id = locality_id
         self.proc = proc
-        self.inbox = inbox
-        self.outbox = outbox
+        self.tx = tx  # parent -> worker pipe connection (blobs out)
+        self.rx = rx  # worker -> parent pipe connection (replies in)
+        self.txlock = threading.Lock()
         self.heartbeat = heartbeat
         self.pending: "dict[int, tuple[str, Any]]" = {}
         self.lock = threading.Lock()
         self.dead = False
         self.death_reason = ""
+        self.sendbuf: "list[tuple[int, bytes]]" = []  # staged, awaiting flush
+        self.sendlock = threading.Lock()
+        self.shm_names = _ShmTracker()  # segments sent, maybe unconsumed
 
 
 class LocalClusterParcelport(Parcelport):
     """N worker processes, each a real remote locality (own interpreter,
     own JAX runtime, own ``Runtime``/``WorkQueue``s, own AGAS registry).
 
-    Transport is a pair of ``multiprocessing`` queues per worker carrying
-    encoded parcels.  Workers start via *spawn* (never fork: the parent's
+    Transport is a pair of one-way ``multiprocessing`` pipes per worker
+    carrying already-encoded parcel blobs (``send_bytes``/``recv_bytes``
+    — no pickle layer, no ``mp.Queue`` feeder threads; large arrays side-
+    step the pipe entirely through the shared-memory lane, the blob then
+    carrying only segment name + dtype + shape).  Workers start via
+    *spawn* (never fork: the parent's
     JAX/XLA threads must not be duplicated into a child).  A per-worker
     ``fault.monitor.Heartbeat`` is ticked by every reply; a monitor thread
     pings each worker and checks deadlines — a dead worker fails its
@@ -878,6 +1137,8 @@ class LocalClusterParcelport(Parcelport):
         heartbeat_timeout: float = 30.0,
         startup_timeout: float = 180.0,
         name: str = "cluster",
+        shm: "bool | None" = None,
+        pipeline: "bool | None" = None,
     ):
         super().__init__()
         import multiprocessing as mp
@@ -886,6 +1147,14 @@ class LocalClusterParcelport(Parcelport):
 
         self.name = name
         self.heartbeat_timeout = float(heartbeat_timeout)
+        # Shared-memory array lane: on when the host supports it (None =
+        # auto-probe; REPRO_PARCEL_SHM=off wins over an explicit True).
+        self._shm_ok = shm_available() if shm is None else (bool(shm) and shm_available())
+        # Pipelined channels: senders stage + flush without blocking on
+        # replies (arrival order at the worker preserves channel FIFO).
+        if pipeline is None:
+            pipeline = os.environ.get("REPRO_PARCEL_PIPELINE", "auto").lower() != "off"
+        self.pipelined = bool(pipeline)
         ctx = mp.get_context("spawn")
         self._workers: "dict[int, _ClusterWorker]" = {}
         self._pid = itertools.count(1)
@@ -893,17 +1162,24 @@ class LocalClusterParcelport(Parcelport):
         self._threads: "list[threading.Thread]" = []
         for _ in range(n_workers):
             lid = _next_locality_id()
-            inbox, outbox = ctx.Queue(), ctx.Queue()
+            # Two one-way pipes per worker: raw blob bytes, no mp.Queue
+            # feeder thread between send and wire (2 fewer threads per
+            # worker, roughly one third the round-trip latency).
+            c2w_rx, c2w_tx = ctx.Pipe(duplex=False)  # parent -> worker
+            w2p_rx, w2p_tx = ctx.Pipe(duplex=False)  # worker -> parent
             proc = ctx.Process(
                 target=_cluster_worker_main,
-                args=(lid, inbox, outbox),
+                args=(lid, c2w_rx, w2p_tx, self._shm_ok),
                 daemon=True,
                 name=f"parcel-worker-L{lid}",
             )
             proc.start()
+            # Close the child's ends here so EOF propagates when a side dies.
+            c2w_rx.close()
+            w2p_tx.close()
             hb = Heartbeat(timeout_s=self.heartbeat_timeout)
             hb.on_dead = self._make_on_dead(lid)
-            self._workers[lid] = _ClusterWorker(lid, proc, inbox, outbox, hb)
+            self._workers[lid] = _ClusterWorker(lid, proc, c2w_tx, w2p_rx, hb)
         try:
             import time as _time
 
@@ -911,8 +1187,10 @@ class LocalClusterParcelport(Parcelport):
                 deadline = _time.monotonic() + startup_timeout
                 while True:  # poll so a worker that dies during startup fails fast
                     try:
-                        hello = decode_parcel(w.outbox.get(timeout=0.5))
-                        break
+                        if w.rx.poll(0.5):
+                            hello = decode_parcel(w.rx.recv_bytes())
+                            break
+                        raise _queue.Empty
                     except _queue.Empty:
                         if not w.proc.is_alive():
                             raise RuntimeError(
@@ -963,6 +1241,8 @@ class LocalClusterParcelport(Parcelport):
                     "the locality is excluded from placement"
                 )
             )
+        # A dead worker will never consume its in-flight shm segments.
+        w.shm_names.purge()
 
     def alive(self, locality_id: int) -> bool:
         w = self._workers.get(locality_id)
@@ -973,11 +1253,11 @@ class LocalClusterParcelport(Parcelport):
     def _listen(self, w: _ClusterWorker) -> None:
         while not self._stop.is_set():
             try:
-                blob = w.outbox.get(timeout=0.25)
-            except _queue.Empty:
-                if w.dead:
-                    return
-                continue
+                if not w.rx.poll(0.25):
+                    if w.dead:
+                        return
+                    continue
+                blob = w.rx.recv_bytes()
             except (EOFError, OSError):
                 return
             w.heartbeat.tick()  # any reply is proof of life
@@ -1027,13 +1307,82 @@ class LocalClusterParcelport(Parcelport):
                     RuntimeError(f"parcel {action!r} to locality L{locality_id} failed fast: {w.death_reason}")
                 )
             w.pending[pid] = (action, promise)
+        sink: "list | None" = [] if self._shm_ok else None
         try:
-            w.inbox.put(encode_parcel(Parcel(action, payload, pid, locality_id)))
-        except BaseException as e:  # noqa: BLE001 - queue torn down under us
+            blob = encode_parcel(Parcel(action, payload, pid, locality_id), shm_sink=sink)
+            if sink:
+                w.shm_names.add(sink)
+            with w.txlock:
+                w.tx.send_bytes(blob)
+        except BaseException as e:  # noqa: BLE001 - pipe torn down under us
             with w.lock:
                 w.pending.pop(pid, None)
             return Future.failed(RuntimeError(f"parcel {action!r} to L{locality_id} could not be sent: {e}"))
         return promise.get_future()
+
+    def stage(self, locality_id: int, action: str, payload: dict, promise) -> None:
+        """Pipelined half-send: encode NOW (shared-memory exports included),
+        register the reply promise, and buffer the parcel for the next
+        ``flush``.  Unlike ``call``+``get``, a staged parcel never blocks
+        its channel on the reply — channel FIFO holds end-to-end because
+        staging order is flush order is worker arrival order (the worker
+        executes actions on one thread, in arrival order)."""
+        if self._shut:
+            promise.set_exception(
+                RuntimeError(f"parcelport {self.name!r} is shut down; parcel {action!r} dropped"))
+            return
+        w = self._workers.get(locality_id)
+        if w is None:
+            promise.set_exception(KeyError(f"no locality L{locality_id} on parcelport {self.name!r}"))
+            return
+        pid = next(self._pid)
+        with w.lock:
+            if w.dead:
+                promise.set_exception(
+                    RuntimeError(f"parcel {action!r} to locality L{locality_id} failed fast: {w.death_reason}"))
+                return
+            w.pending[pid] = (action, promise)
+        sink: "list | None" = [] if self._shm_ok else None
+        try:
+            blob = encode_parcel(Parcel(action, payload, pid, locality_id), shm_sink=sink)
+        except BaseException as e:  # noqa: BLE001 - unencodable payload
+            with w.lock:
+                w.pending.pop(pid, None)
+            promise.set_exception(e)
+            return
+        if sink:
+            w.shm_names.add(sink)
+        with w.sendlock:
+            w.sendbuf.append((pid, blob))
+
+    def flush(self, locality_id: int) -> None:
+        """Ship every parcel staged since the last flush as ONE queue hop:
+        a single parcel goes as itself, several go as one ``multi`` parcel
+        the worker unpacks in staging order (parcel coalescing)."""
+        w = self._workers.get(locality_id)
+        if w is None:
+            return
+        with w.sendlock:
+            if not w.sendbuf:
+                return  # an earlier flush already took them
+            batch, w.sendbuf = w.sendbuf, []
+        try:
+            if len(batch) == 1:
+                blob = batch[0][1]
+            else:
+                blob = encode_parcel(
+                    Parcel("multi", {"parcels": [b for _, b in batch]}, 0, locality_id))
+            with w.txlock:
+                w.tx.send_bytes(blob)
+        except BaseException as e:  # noqa: BLE001 - pipe torn down under us
+            entries = []
+            with w.lock:
+                for pid, _ in batch:
+                    entries.append(w.pending.pop(pid, None))
+            for entry in entries:
+                if entry is not None:
+                    entry[1].set_exception(
+                        RuntimeError(f"parcel {entry[0]!r} to L{locality_id} could not be sent: {e}"))
 
     # -- teardown ------------------------------------------------------------
 
@@ -1045,7 +1394,9 @@ class LocalClusterParcelport(Parcelport):
         for w in self._workers.values():
             if w.proc.is_alive():
                 try:
-                    w.inbox.put(encode_parcel(Parcel("shutdown", {}, next(self._pid), w.locality_id)))
+                    with w.txlock:
+                        w.tx.send_bytes(
+                            encode_parcel(Parcel("shutdown", {}, next(self._pid), w.locality_id)))
                 except Exception:  # noqa: BLE001
                     pass
         for w in self._workers.values():
@@ -1054,10 +1405,12 @@ class LocalClusterParcelport(Parcelport):
                 w.proc.terminate()
                 w.proc.join(timeout=2)
             self._mark_dead(w.locality_id, "parcelport shut down")
-            for q in (w.inbox, w.outbox):
+            for conn in (w.tx, w.rx):
                 try:
-                    q.close()
-                    q.cancel_join_thread()
+                    conn.close()
                 except Exception:  # noqa: BLE001
                     pass
+            # Worker has exited (joined above): anything it never consumed
+            # is ours to unlink; racing its decoder is no longer possible.
+            w.shm_names.purge()
         self._retire_proxies()

@@ -558,13 +558,7 @@ class RemoteProgram(Program):
         grid_n, block_n = _normalize_dim(grid), _normalize_dim(block)
         gid_f = self._remote_gid_f
 
-        def _send(*vals):
-            for i, v in zip(fetch_ix, vals):
-                descs[i] = ("val", np.asarray(v))
-            rep = port.call_sync(loc, "launch", {
-                "device": dev.remote_key, "program": gid_f.get(), "kernel": name,
-                "args": descs, "out": out_gids, "grid": grid_n, "block": block_n,
-            })
+        def _post(rep):
             if mode == "remote":
                 return list(out)
             if mode == "local":
@@ -572,6 +566,51 @@ class RemoteProgram(Program):
                     b._set_array(jax.device_put(np.asarray(v), b.device.jax_device))
                 return list(out)
             return rep
+
+        def _payload(vals):
+            for i, v in zip(fetch_ix, vals):
+                descs[i] = ("val", np.asarray(v))
+            return {
+                "device": dev.remote_key, "program": gid_f.get(), "kernel": name,
+                "args": descs, "out": out_gids, "grid": grid_n, "block": block_n,
+            }
+
+        # Pipelined port: the channel task stages+flushes the launch parcel
+        # and releases the lane immediately — the reply resolves the result
+        # future asynchronously, so back-to-back remote launches overlap on
+        # the wire instead of serializing on round trips.
+        if getattr(port, "pipelined", False):
+            from repro.core.executor import get_runtime
+            from repro.core.futures import Promise, forward_failure
+
+            inner: "Promise" = Promise(name=f"parcel:launch:L{loc}")
+
+            def _ship(*vals):
+                port.stage(loc, "launch", _payload(vals), inner)
+                port.flush(loc)
+
+            if not fetch_futs:
+                forward_failure(lane.submit(_ship), inner)
+            else:
+                forward_failure(dataflow(
+                    lambda *vals: lane.submit(lambda: _ship(*vals)).get(),
+                    *fetch_futs,
+                    executor=get_runtime().pool,
+                    name=f"remote-run:{name}",
+                ), inner)
+            # "local" mode writes device arrays — post-process on the host
+            # pool, never inline on the port's reply-listener thread.
+            result = inner.get_future().then(
+                _post,
+                executor="inline" if mode != "local" else get_runtime().pool,
+                name=f"remote-run:{name}",
+            )
+            if stream is not None:
+                stream._note_completion(result)
+            return result
+
+        def _send(*vals):
+            return _post(port.call_sync(loc, "launch", _payload(vals)))
 
         # Ordering: the launch parcel goes through the remote device's ops
         # queue, after any previously submitted writes there.  Pending host

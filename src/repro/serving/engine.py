@@ -64,6 +64,7 @@ from typing import Any, Callable, Sequence
 import jax
 import numpy as np
 
+from repro.core.executor import coalesce
 from repro.core.futures import Future, Promise
 
 __all__ = ["RequestEngine", "QueueFull", "EngineClosed"]
@@ -418,7 +419,13 @@ class RequestEngine:
                     self._inflight += 1
             if group:
                 try:
-                    self._dispatch(group)
+                    # One dispatch makes several submissions (stream lane
+                    # task, pool join, graph pre-reads): coalesce them so
+                    # each target queue sees ONE enqueue per micro-batch.
+                    # The scope closes before the loop re-enters cv.wait,
+                    # so nothing staged ever outlives a dispatch.
+                    with coalesce():
+                        self._dispatch(group)
                 except BaseException as e:  # noqa: BLE001 - engine must not die
                     self._finish(group, None, e)
 

@@ -215,6 +215,165 @@ def test_partial_write_rejected_under_capture(device):
 
 
 # ---------------------------------------------------------------------------
+# pre-bound replay fast path (DESIGN.md §13)
+# ---------------------------------------------------------------------------
+
+
+def test_prebound_fast_plan_replay_bit_equal_to_eager(device, prog):
+    n = 512
+    host = np.random.default_rng(11).normal(size=(n,)).astype(np.float32)
+
+    def eager(x):
+        ebuf = device.create_buffer_from(x).get()
+        et1, et2, eout = _bufs(device, n, 3)
+        prog.run([ebuf], "double", out=[et1]).get()
+        prog.run([et1], "inc", out=[et2]).get()
+        prog.run([et2], "double", out=[eout]).get()
+        return eout.enqueue_read_sync()
+
+    want = eager(host)
+
+    gbuf, gt1, gt2, gout = _bufs(device, n, 4)
+    g = TaskGraph("prebound")
+    w = g.write(gbuf, host)
+    g.run(prog, [gbuf], "double", out=[gt1])
+    g.run(prog, [gt1], "inc", out=[gt2])
+    g.run(prog, [gt2], "double", out=[gout])
+    r = g.read(gout)
+    exe = g.instantiate()
+    # one local segment, no fan-out -> the flat pre-bound plan exists and
+    # every replay dispatches through it as a single lane hop
+    assert exe._fast is not None
+    got = np.asarray(exe.replay().get()[r])
+    assert got.tobytes() == want.tobytes()  # bit-equal, not just allclose
+
+    # feed-override replays stay on the fast path and stay bit-equal
+    host2 = np.random.default_rng(12).normal(size=(n,)).astype(np.float32)
+    want2 = eager(host2)
+    got2 = np.asarray(exe.replay(feeds={w: host2}).get()[r])
+    assert got2.tobytes() == want2.tobytes()
+    # and the original payload replays unchanged afterwards
+    got3 = np.asarray(exe.replay().get()[r])
+    assert got3.tobytes() == want.tobytes()
+
+
+# ---------------------------------------------------------------------------
+# submission coalescing (DESIGN.md §13)
+# ---------------------------------------------------------------------------
+
+
+def test_coalesced_chain_matches_eager_bit_equal(device, prog):
+    from repro.core import coalesce
+
+    n = 256
+    host = np.random.default_rng(9).normal(size=(n,)).astype(np.float32)
+    buf = device.create_buffer_from(host).get()
+    t1, t2, out = _bufs(device, n, 3)
+    prog.run([buf], "double", out=[t1]).get()
+    prog.run([t1], "inc", out=[t2]).get()
+    prog.run([t2], "double", out=[out]).get()
+    want = out.enqueue_read_sync()
+
+    c1, c2, cout = _bufs(device, n, 3)
+    with coalesce():
+        prog.run([buf], "double", out=[c1])
+        prog.run([c1], "inc", out=[c2])
+        f = prog.run([c2], "double", out=[cout])
+    f.get()
+    assert cout.enqueue_read_sync().tobytes() == want.tobytes()
+
+
+def test_coalesce_preserves_per_queue_fifo_across_queues():
+    from repro.core import coalesce
+
+    rt = get_runtime()
+    qa, qb = rt.queue("coalesce-fifo-a"), rt.queue("coalesce-fifo-b")
+    seen_a, seen_b = [], []
+    with coalesce():
+        futs = []
+        for i in range(32):
+            futs.append(qa.submit(lambda i=i: seen_a.append(i)))
+            futs.append(qb.submit(lambda i=i: seen_b.append(i)))
+    wait_all(futs)
+    assert seen_a == list(range(32))
+    assert seen_b == list(range(32))
+
+
+def test_coalesce_random_mix_matches_unscoped():
+    """Property (seeded sweep): any random mix of submit/submit_many over
+    two queues, run inside one coalesce() window, yields the same
+    per-queue execution order and the same future results as unscoped
+    submission of the identical plan."""
+    from repro.core import coalesce
+
+    rt = get_runtime()
+    for seed in range(8):
+        rng = np.random.default_rng(seed)
+        # plan: (queue_ix, [values]) — len 1 = submit, else submit_many
+        plan = []
+        v = 0
+        for _ in range(rng.integers(1, 24)):
+            k = int(rng.integers(1, 4))
+            plan.append((int(rng.integers(0, 2)), list(range(v, v + k))))
+            v += k
+
+        def execute(tag, scoped):
+            qs = (rt.queue(f"coal-prop-{seed}-{tag}-0"), rt.queue(f"coal-prop-{seed}-{tag}-1"))
+            seen = ([], [])
+            futs = []
+
+            def run_plan():
+                for qi, vals in plan:
+                    rec = seen[qi]
+                    if len(vals) == 1:
+                        futs.append(qs[qi].submit(lambda v=vals[0], rec=rec: (rec.append(v), v)[1]))
+                    else:
+                        futs.extend(qs[qi].submit_many(
+                            [(lambda v=v, rec=rec: (rec.append(v), v)[1]) for v in vals]))
+
+            if scoped:
+                with coalesce():
+                    run_plan()
+            else:
+                run_plan()
+            wait_all(futs)
+            return seen, [f.get() for f in futs]
+
+        want = execute("eager", scoped=False)
+        got = execute("scoped", scoped=True)
+        assert got == want, f"seed {seed}: coalesced run diverged"
+
+
+def test_coalesce_blocking_get_inside_scope_flushes_first():
+    from repro.core import coalesce
+
+    q = get_runtime().queue("coalesce-block")
+    with coalesce():
+        f = q.submit(lambda: 41)
+        assert f.get() == 41  # .get() flushes the staged window: no deadlock
+
+
+def test_coalesce_staged_submissions_stay_visible_to_load():
+    """Load honesty: items staged in a coalesce window must already count
+    in load().depth — coalescing cannot blind the least_loaded signal."""
+    import threading
+
+    from repro.core import coalesce
+
+    q = get_runtime().queue("coalesce-load")
+    gate = threading.Event()
+    blocker = q.submit(gate.wait)  # hold the worker so nothing completes
+    try:
+        with coalesce():
+            futs = [q.submit(lambda: None) for _ in range(5)]
+            # staged thread-locally, not yet enqueued — depth sees them anyway
+            assert q.load().depth >= 6
+    finally:
+        gate.set()
+    wait_all(futs + [blocker])
+
+
+# ---------------------------------------------------------------------------
 # per-op fast paths
 # ---------------------------------------------------------------------------
 

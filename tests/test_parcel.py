@@ -483,6 +483,124 @@ def test_cluster_remote_resident_pipeline_keeps_bytes_remote(cluster):
 
 
 # ---------------------------------------------------------------------------
+# shared-memory lane + pipelined channel (DESIGN.md §13)
+# ---------------------------------------------------------------------------
+
+# 512 KB of float32: at the default REPRO_PARCEL_SHM_MIN threshold, so the
+# payload rides the shared-memory lane in BOTH directions on an shm port.
+_SHM_N = 1 << 17
+
+
+def _psm_segments():
+    import glob
+
+    return set(glob.glob("/dev/shm/psm_*"))
+
+
+def test_cluster_shm_lane_roundtrip_is_bit_exact():
+    from repro.core.parcel import shm_available
+
+    if not shm_available():
+        pytest.skip("no usable /dev/shm in this environment")
+    port = LocalClusterParcelport(n_workers=1, heartbeat_timeout=60.0, shm=True)
+    try:
+        assert port._shm_ok
+        rdev = port.localities()[0].devices[0]
+        x = np.random.default_rng(5).normal(size=(_SHM_N,)).astype(np.float32)
+        rbuf = rdev.create_buffer_from(x).get()  # parent -> worker via shm
+        back = rbuf.enqueue_read_sync()          # worker -> parent via shm
+        assert back.dtype == x.dtype and back.tobytes() == x.tobytes()
+        # a launch whose argument and reply both cross the lane stays
+        # bit-identical to the same launch on a local device
+        from repro.kernels.partition_map.ref import partition_map_ref
+
+        dev = get_all_devices().get()[0]
+        local = np.asarray(Program(dev, {"partition_map_ref": partition_map_ref}, "shm-l")
+                           .run([x], "partition_map_ref").get())
+        prog = rdev.create_program(["partition_map_ref"], name="shm").get()
+        res = np.asarray(prog.run([x], "partition_map_ref").get()[0])
+        assert res.tobytes() == local.tobytes()
+        rbuf.free().get()
+    finally:
+        port.shutdown()
+
+
+def test_cluster_shm_off_falls_back_to_inline_wire():
+    # shm=False must force every payload inline on the pipe — same results,
+    # no lane involvement, regardless of size.
+    port = LocalClusterParcelport(n_workers=1, heartbeat_timeout=60.0, shm=False)
+    try:
+        assert not port._shm_ok
+        rdev = port.localities()[0].devices[0]
+        x = np.random.default_rng(6).normal(size=(_SHM_N,)).astype(np.float32)
+        rbuf = rdev.create_buffer_from(x).get()
+        assert rbuf.enqueue_read_sync().tobytes() == x.tobytes()
+        rbuf.free().get()
+    finally:
+        port.shutdown()
+
+
+def test_cluster_shm_segments_do_not_leak_after_shutdown():
+    from repro.core.parcel import shm_available
+
+    if not shm_available():
+        pytest.skip("no usable /dev/shm in this environment")
+    before = _psm_segments()
+    port = LocalClusterParcelport(n_workers=1, heartbeat_timeout=60.0, shm=True)
+    try:
+        rdev = port.localities()[0].devices[0]
+        x = np.random.default_rng(7).normal(size=(_SHM_N,)).astype(np.float32)
+        for _ in range(3):  # several lane crossings, both directions
+            rbuf = rdev.create_buffer_from(x).get()
+            assert rbuf.enqueue_read_sync().tobytes() == x.tobytes()
+            rbuf.free().get()
+        rdev.synchronize()
+    finally:
+        port.shutdown()
+    leaked = _psm_segments() - before
+    assert not leaked, f"shm segments leaked past shutdown: {sorted(leaked)}"
+
+
+def test_cluster_pipelined_channel_orders_and_fences():
+    port = LocalClusterParcelport(n_workers=1, heartbeat_timeout=60.0)
+    try:
+        assert port.pipelined  # the default channel stages + flushes
+        rdev = port.localities()[0].devices[0]
+        rbuf = rdev.create_buffer_from(np.zeros(16, np.float32)).get()
+        futs = [rbuf.enqueue_write(0, np.full(16, float(i), np.float32)) for i in range(8)]
+        # synchronize() rides the "barrier" action through the worker's
+        # action pool, so its reply proves every staged parcel executed —
+        # a drained lane alone only proves dispatch.
+        rdev.synchronize()
+        # channel FIFO: staging order == execution order -> last write wins
+        np.testing.assert_array_equal(rbuf.enqueue_read_sync(), np.full(16, 7.0))
+        wait_all(futs)
+
+        prog = rdev.create_program(["partition_map_ref"], name="pipe").get()
+        x = np.random.default_rng(8).normal(size=(1024,)).astype(np.float32)
+        burst = [prog.run([x], "partition_map_ref") for _ in range(6)]  # in flight together
+        outs = [np.asarray(f.get()[0]) for f in burst]
+        assert all(o.tobytes() == outs[0].tobytes() for o in outs)
+        rbuf.free().get()
+    finally:
+        port.shutdown()
+
+
+def test_cluster_pipeline_off_uses_blocking_channel():
+    port = LocalClusterParcelport(n_workers=1, heartbeat_timeout=60.0, pipeline=False)
+    try:
+        assert not port.pipelined
+        rdev = port.localities()[0].devices[0]
+        prog = rdev.create_program(["partition_map_ref"], name="nopipe").get()
+        x = np.random.default_rng(9).normal(size=(256,)).astype(np.float32)
+        res = np.asarray(prog.run([x], "partition_map_ref").get()[0])
+        np.testing.assert_allclose(res, np.ones(256), rtol=1e-5)
+        rdev.synchronize()  # no-op fence on a blocking channel
+    finally:
+        port.shutdown()
+
+
+# ---------------------------------------------------------------------------
 # fault satellite: heartbeat exclusion + fail-fast; reset satellite last
 # (reset_runtime tears down every live port, including module fixtures)
 # ---------------------------------------------------------------------------
