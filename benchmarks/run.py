@@ -37,6 +37,26 @@ MODULES = [
 ]
 
 
+def _fig6_speedups(rows) -> None:
+    """Append ``speedup_vs_dev1`` to every fig6 partition row's derived
+    field (the scaling trajectory CI gates on), computed against the
+    same-size dev1 row."""
+    base = {}
+    for r in rows:
+        name = str(r.get("name", ""))
+        if name.startswith("fig6/partition_n") and name.endswith("_dev1") and r["s"] > 0:
+            base[name[: -len("_dev1")]] = r["s"]
+    for r in rows:
+        name = str(r.get("name", ""))
+        stem, sep, _ = name.rpartition("_dev")
+        if not (sep and name.startswith("fig6/partition_n")):
+            continue
+        b = base.get(stem)
+        if b and r["s"] > 0:
+            d = str(r.get("derived", ""))
+            r["derived"] = f"{d};speedup_vs_dev1={b / r['s']:.2f}" if d else f"speedup_vs_dev1={b / r['s']:.2f}"
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true", help="reduced sizes/iterations")
@@ -52,6 +72,8 @@ def main() -> None:
         try:
             mod = importlib.import_module(modname)
             rows = mod.run(quick=args.quick)
+            if tag == "fig6":
+                _fig6_speedups(rows)
             # Subprocess-based modules report breakage as a */FAILED data
             # row; that must fail the driver (and CI), not pass silently.
             if any(str(r.get("name", "")).endswith("/FAILED") for r in rows):

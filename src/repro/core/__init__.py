@@ -33,7 +33,7 @@ Cluster-wide launches (DESIGN.md §10) drop the explicit *locality*:
     port = LocalClusterParcelport(n_workers=2)        # or LoopbackParcelport
     prog.run_on_any([buf], "sum", cluster=port).get() # hpx::async(locality, action)
 """
-from repro.core.agas import GID, Placement, Registry, locality_of, registry, set_locality_id
+from repro.core.agas import GID, HOST_KEY, Placement, Registry, locality_of, registry, set_locality_id
 from repro.core.buffer import Buffer
 from repro.core.device import (
     Device,
@@ -92,6 +92,7 @@ from repro.core.scheduler import (
 
 __all__ = [
     "GID",
+    "HOST_KEY",
     "Placement",
     "Registry",
     "registry",

@@ -23,6 +23,12 @@ per-device resident-bytes counter (fed by ``nbytes`` registration
 metadata).  The ``affinity`` placement policy scores candidate devices
 from these records in O(args) instead of scanning every registration —
 the AGAS placement data is the percolation-avoidance signal.
+
+Spill residency (DESIGN.md §14): a buffer evicted to host memory moves
+its placement record to the pseudo-device ``HOST_KEY`` — the bytes leave
+the device's resident total (placement veto sees the truth) and
+``resident_bytes(HOST_KEY)`` reports the spilled pool.  The GID never
+changes; refetch moves the record back.
 """
 from __future__ import annotations
 
@@ -34,6 +40,7 @@ from typing import Any, Optional
 
 __all__ = [
     "GID",
+    "HOST_KEY",
     "Placement",
     "Registry",
     "registry",
@@ -43,6 +50,11 @@ __all__ = [
 ]
 
 GID = int
+
+# Placement key for data spilled out of device memory into host RAM.  Not a
+# schedulable device: policies never place work on it, but the reverse index
+# and byte accounting treat it like any other location.
+HOST_KEY = "host"
 
 # Locality scoping: GID = (locality_id << _LOC_SHIFT) | sequence.  The
 # parent process is locality 0 (seed-compatible: its GIDs are unchanged);
@@ -237,6 +249,10 @@ class Registry:
     def resident_bytes_by_device(self) -> "dict[str, int]":
         with self._lock:
             return dict(self._bytes)
+
+    def spilled_bytes(self) -> int:
+        """Total bytes currently evicted to host RAM (``HOST_KEY`` pool)."""
+        return self.resident_bytes(HOST_KEY)
 
     def __len__(self) -> int:
         with self._lock:

@@ -24,6 +24,7 @@ raise until it is written again (CUDA Graphs' ownership rule).
 from __future__ import annotations
 
 import threading
+import time
 import weakref
 from functools import partial
 from typing import Any, Optional
@@ -87,6 +88,13 @@ class Buffer:
         self._free_future: "Future | None" = None
         self.gid: agas.GID = 0
         self._finalizer: "weakref.finalize | None" = None
+        # Spill state (DESIGN.md §14): when device storage is evicted the
+        # contents live in _spilled_host and the AGAS record moves to
+        # HOST_KEY; the next array() refetches transparently.  _last_use is
+        # the LRU signal the memory-aware scheduler evicts by.
+        self._spilled_host: "np.ndarray | None" = None
+        self._spill_lock = threading.Lock()
+        self._last_use: float = time.monotonic()
 
     def _register(self, device) -> None:
         """AGAS registration with resident-bytes accounting and a GC-safe
@@ -161,6 +169,7 @@ class Buffer:
             return g.write(self, data, offset=offset, count=count)
 
         def _write():
+            self._last_use = time.monotonic()
             if offset == 0 and count is None:
                 # Fast path: adopt a matching jax.Array outright, or
                 # device_put a matching ndarray without flatten/astype.
@@ -173,12 +182,14 @@ class Buffer:
                     self._array = arr
                     self._aliased = adopted  # caller still owns this storage
                     self._donated = False
+                    self._discard_spill()
                     return None
                 src = np.asarray(data)
                 if src.shape == self.shape and src.dtype == self.dtype:
                     self._array = jax.device_put(src, self.device.jax_device)
                     self._aliased = False
                     self._donated = False
+                    self._discard_spill()
                     return None
             else:
                 src = np.asarray(data)
@@ -189,6 +200,7 @@ class Buffer:
                 self._array = jax.device_put(
                     src.reshape(self.shape).astype(self.dtype), self.device.jax_device
                 )
+                self._discard_spill()
             else:
                 staged = jax.device_put(src, self.device.jax_device)
                 cur = self.array()
@@ -316,6 +328,7 @@ class Buffer:
                 self._finalizer = None
             agas.registry.unregister(self.gid)
             self._array = None
+            self._spilled_host = None
             self._aliased = False
 
         with _free_lock:
@@ -335,37 +348,109 @@ class Buffer:
         if device is self.device:
             return
         self.device = device
-        if not self._freed:
+        if self._freed:
+            return
+        with self._spill_lock:
+            if self._spilled_host is not None:
+                # Data lives in host RAM, not on either device: the record
+                # stays on HOST_KEY and follows the eventual refetch.
+                return
+        agas.registry.update_placement(
+            self.gid, agas.Placement(device.key, device.jax_device.process_index)
+        )
+
+    # -- spill / refetch (DESIGN.md §14) --------------------------------------
+
+    def spill(self) -> Future:
+        """Evict device storage to a host-RAM copy; future of True when
+        storage was actually released (False: nothing to spill — already
+        spilled, freed, or donated).
+
+        The AGAS record moves to ``agas.HOST_KEY`` so the device's
+        resident-bytes total drops immediately; the next ``array()`` call
+        refetches transparently and moves the record back.  Runs on the
+        default stream, so same-stream work already enqueued completes
+        against live storage first (same gating as ``free``)."""
+        return self.device.ops_queue.submit(self._spill_now)
+
+    def _spill_now(self) -> bool:
+        with self._spill_lock:
+            if self._freed or self._donated or self._array is None or self._spilled_host is not None:
+                return False
+            self._spilled_host = np.asarray(self._array)
+            self._array = None
+            self._aliased = False
             agas.registry.update_placement(
-                self.gid, agas.Placement(device.key, device.jax_device.process_index)
+                self.gid, agas.Placement(agas.HOST_KEY, self.device.jax_device.process_index)
             )
+            return True
+
+    def _refetch(self) -> "jax.Array | None":
+        with self._spill_lock:
+            if self._spilled_host is None:
+                return self._array  # lost the race to another refetcher
+            arr = jax.device_put(self._spilled_host, self.device.jax_device)
+            self._array = arr
+            self._spilled_host = None
+            self._aliased = False
+            self._donated = False
+            if not self._freed:
+                agas.registry.update_placement(
+                    self.gid, agas.Placement(self.device.key, self.device.jax_device.process_index)
+                )
+            return arr
+
+    def _discard_spill(self) -> None:
+        """Drop the host spill copy after a full overwrite made it dead,
+        restoring the placement record to the owning device."""
+        if self._spilled_host is None:
+            return
+        with self._spill_lock:
+            if self._spilled_host is None:
+                return
+            self._spilled_host = None
+            if not self._freed:
+                agas.registry.update_placement(
+                    self.gid, agas.Placement(self.device.key, self.device.jax_device.process_index)
+                )
 
     # -- kernel-facing view ---------------------------------------------------
 
     def array(self) -> "jax.Array":
         """Current device-resident value (async; usable as a kernel arg).
 
-        Raises if the buffer was freed, or if its storage was donated to a
-        fused graph executable (graph.replay with donation) and not
-        rewritten since.
+        A spilled buffer is refetched from its host copy transparently
+        (and its AGAS record moves back to the device).  Raises if the
+        buffer was freed, or if its storage was donated to a fused graph
+        executable (graph.replay with donation) and not rewritten since.
         """
         if self._freed:
             raise RuntimeError(f"Buffer gid={self.gid} was freed; its storage is released.")
-        if self._array is None and self._donated:
-            raise RuntimeError(
-                f"Buffer gid={self.gid} was donated to a fused graph replay; "
-                "its contents are gone (XLA reused the memory). Write to it "
-                "before reading again."
-            )
-        return self._array
+        self._last_use = time.monotonic()
+        arr = self._array
+        if arr is None:
+            if self._spilled_host is not None:
+                arr = self._refetch()
+                if arr is not None:
+                    return arr
+            if self._donated:
+                raise RuntimeError(
+                    f"Buffer gid={self.gid} was donated to a fused graph replay; "
+                    "its contents are gone (XLA reused the memory). Write to it "
+                    "before reading again."
+                )
+        return arr
 
     def _set_array(self, arr: "jax.Array", aliased: bool = False) -> None:
         self._array = arr
         self._aliased = aliased
         self._donated = False
+        self._last_use = time.monotonic()
+        self._discard_spill()
 
     def _invalidate(self) -> None:
         """Mark storage as consumed by a donating executable (graph replay)."""
+        self._discard_spill()  # a stale host copy must not resurrect donated storage
         self._array = None
         self._donated = True
 

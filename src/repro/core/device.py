@@ -37,6 +37,7 @@ policies read for local devices.
 """
 from __future__ import annotations
 
+import os
 import threading
 import weakref
 from typing import Any, Callable, Optional
@@ -74,6 +75,17 @@ def capability_of(jax_device: "jax.Device") -> "tuple[int, int]":
     return _PLATFORM_CAPABILITY.get(jax_device.platform, (1, 0))
 
 
+def _default_memory_limit() -> int:
+    """Per-device resident-bytes threshold for memory-aware placement
+    (DESIGN.md §14).  0 means unlimited — the veto and LRU spill are off.
+    The env default seeds every device; the attribute is plain and
+    per-device, so a heterogeneous fleet can set different ceilings."""
+    try:
+        return int(os.environ.get("REPRO_SPILL_BYTES", "0") or 0)
+    except ValueError:
+        return 0
+
+
 class Device:
     """Location-transparent handle to one accelerator."""
 
@@ -93,6 +105,8 @@ class Device:
         # stream-less submission order is unchanged.
         self.ops_queue = self._default_stream.lane
         self.compile_queue: WorkQueue = rt.queue(f"compile:{self.key}")
+        # Memory-aware placement threshold (DESIGN.md §14); 0 = unlimited.
+        self.memory_limit: int = _default_memory_limit()
         self.gid: agas.GID = agas.registry.register(
             self, agas.Placement(self.key, jax_device.process_index), kind="device"
         )
@@ -326,6 +340,9 @@ class RemoteDevice:
         # in flight concurrently (DESIGN.md §11).
         self._stream_lock = threading.Lock()
         self._streams: "list[Stream]" = [Stream(self, self.ops_queue, name=f"{self.key}/default")]
+        # Same memory-aware threshold as local devices: the veto reads the
+        # proxied AGAS byte total for this locality's device key.
+        self.memory_limit: int = _default_memory_limit()
         self.gid: agas.GID = agas.registry.register(
             self, agas.Placement(self.key, locality_id), kind="device"
         )
@@ -390,6 +407,7 @@ class RemoteDevice:
             busy_time=sum(l.busy_time for l in loads),
             submitted=sum(l.submitted for l in loads),
             completed=sum(l.completed for l in loads),
+            busy_ewma=sum(l.busy_ewma for l in loads),
         )
 
     def resident_bytes(self) -> int:

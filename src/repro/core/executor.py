@@ -93,6 +93,32 @@ _COALESCE_ENABLED = os.environ.get("REPRO_COALESCE", "auto").lower() != "off"
 # (bounded staging memory; the batch is already big enough to amortize).
 _COALESCE_CAP = int(os.environ.get("REPRO_COALESCE_CAP", "256"))
 
+# Load-signal decay (DESIGN.md §14): completed busy-time folds into an
+# exponentially decayed accumulator so ``least_loaded`` scores *recent*
+# occupancy instead of a lifetime total (which never forgets) or the
+# instantaneous depth (which is stale by the time a batch lands).
+# REPRO_LOAD_HALFLIFE is the half-life in seconds: work done one half-life
+# ago counts half as much as work finishing now.
+_LOAD_HALFLIFE = float(os.environ.get("REPRO_LOAD_HALFLIFE", "0.25") or 0.25)
+_LN2 = 0.6931471805599453
+
+
+def _fold_busy(decayed: float, stamp: float, duration: float, now: float) -> float:
+    """Decay the busy accumulator to ``now`` and fold in a finished task."""
+    return decayed * 2.0 ** (-(now - stamp) / _LOAD_HALFLIFE) + duration
+
+
+def _busy_ewma(decayed: float, stamp: float, busy_for: float, now: float) -> float:
+    """Utilization-like occupancy score from the decayed accumulator.
+
+    Normalized by the decay time-constant tau = halflife/ln2: a worker that
+    has been continuously busy scores ~1.0, an idle one decays toward 0.
+    The currently-running task contributes its elapsed time (capped at tau)
+    so long tasks register before they complete.
+    """
+    tau = _LOAD_HALFLIFE / _LN2
+    return (decayed * 2.0 ** (-(now - stamp) / _LOAD_HALFLIFE) + min(busy_for, tau)) / tau
+
 
 class _CoalesceScope:
     __slots__ = ("targets", "depth")
@@ -171,6 +197,9 @@ class QueueLoad:
     ``inflight`` is 1 while the worker is inside a task; ``busy_for`` is
     how long the current task has been running (0.0 when idle) and
     ``busy_time`` the lifetime total of task execution seconds.
+    ``busy_ewma`` is the exponentially-decayed recent occupancy normalized
+    to ~[0, 1] per worker (DESIGN.md §14) — the half of the honest load
+    signal that survives between depth samples.
     """
 
     depth: int
@@ -179,6 +208,7 @@ class QueueLoad:
     busy_time: float
     submitted: int
     completed: int
+    busy_ewma: float = 0.0
 
 
 class WorkQueue:
@@ -200,6 +230,9 @@ class WorkQueue:
         self._completed = 0
         self._busy_time = 0.0
         self._busy_since: "float | None" = None
+        # Decayed occupancy (single writer: the worker thread).
+        self._decayed_busy = 0.0
+        self._decay_stamp = time.monotonic()
         self._thread = threading.Thread(target=self._loop, name=f"wq:{name}", daemon=True)
         self._thread.start()
 
@@ -229,7 +262,10 @@ class WorkQueue:
                     fut._cf.set_exception(e)
         finally:
             t0, self._busy_since = self._busy_since, None
-            self._busy_time += time.monotonic() - t0
+            now = time.monotonic()
+            self._busy_time += now - t0
+            self._decayed_busy = _fold_busy(self._decayed_busy, self._decay_stamp, now - t0, now)
+            self._decay_stamp = now
             self._completed += 1
 
     def submit(self, fn: Callable, *args, **kwargs) -> Future:
@@ -305,6 +341,7 @@ class WorkQueue:
             busy_time=self._busy_time,
             submitted=submitted,
             completed=completed,
+            busy_ewma=_busy_ewma(self._decayed_busy, self._decay_stamp, busy_for, now),
         )
 
     def drain(self) -> None:
@@ -350,6 +387,8 @@ class Lane:
         self._completed = 0
         self._busy_time = 0.0
         self._busy_since: "float | None" = None
+        self._decayed_busy = 0.0
+        self._decay_stamp = time.monotonic()
 
     def _put(self, items: list) -> None:
         d = self.dispatcher
@@ -438,14 +477,18 @@ class Lane:
                     fut._cf.set_exception(e)
         finally:
             t0, self._busy_since = self._busy_since, None
-            self._busy_time += time.monotonic() - t0
+            now = time.monotonic()
+            self._busy_time += now - t0
+            self._decayed_busy = _fold_busy(self._decayed_busy, self._decay_stamp, now - t0, now)
+            self._decay_stamp = now
             self._completed += 1
 
     def load(self) -> QueueLoad:
         """Advisory backlog snapshot (same contract as ``WorkQueue.load``)."""
         submitted, completed = self._submitted, self._completed
         since = self._busy_since
-        busy_for = (time.monotonic() - since) if since is not None else 0.0
+        now = time.monotonic()
+        busy_for = (now - since) if since is not None else 0.0
         return QueueLoad(
             depth=max(0, submitted - completed),
             inflight=1 if since is not None else 0,
@@ -453,6 +496,7 @@ class Lane:
             busy_time=self._busy_time,
             submitted=submitted,
             completed=completed,
+            busy_ewma=_busy_ewma(self._decayed_busy, self._decay_stamp, busy_for, now),
         )
 
     def drain(self) -> None:
@@ -517,7 +561,7 @@ class LaneDispatcher:
         the scheduler's load signal counts every lane, so a device busy on
         three streams is three deep, not one)."""
         depth = inflight = submitted = completed = 0
-        busy_for = busy_time = 0.0
+        busy_for = busy_time = busy_ewma = 0.0
         for ln in self.lanes():
             l = ln.load()
             depth += l.depth
@@ -526,7 +570,8 @@ class LaneDispatcher:
             busy_time += l.busy_time
             submitted += l.submitted
             completed += l.completed
-        return QueueLoad(depth, inflight, busy_for, busy_time, submitted, completed)
+            busy_ewma += l.busy_ewma
+        return QueueLoad(depth, inflight, busy_for, busy_time, submitted, completed, busy_ewma)
 
     # -- synchronization ------------------------------------------------------
 

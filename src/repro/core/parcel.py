@@ -681,6 +681,16 @@ class ActionServer:
         buf = self._buffer(payload["gid"])
         return np.asarray(buf.enqueue_read(payload.get("offset", 0), payload.get("count")).get())
 
+    def _do_steal_fetch(self, payload: dict) -> "list[np.ndarray]":
+        """Batched re-home read for work stealing (DESIGN.md §14): one
+        parcel returns the full contents of every requested buffer, so a
+        thief re-binding a stolen launch pays one round-trip instead of
+        one per argument.  Reads are submitted to the owning queues first
+        and gathered after, overlapping the device-side D2H copies; large
+        replies ride the shm lane like any other array payload."""
+        futs = [self._buffer(gid).enqueue_read() for gid in payload["gids"]]
+        return [np.asarray(f.get()) for f in futs]
+
     def _do_free(self, payload: dict) -> None:
         buf = self._objects.pop(payload["gid"], None)
         if buf is not None:
@@ -1244,6 +1254,21 @@ class LocalClusterParcelport(Parcelport):
         # A dead worker will never consume its in-flight shm segments.
         w.shm_names.purge()
 
+    def _mark_recovered(self, w: "_ClusterWorker") -> None:
+        """Re-admit a heartbeat-flapped locality: the dead latch cleared
+        (the worker ticked again), so lift the fail-fast gate too —
+        ``alive()`` turns true and the scheduler re-includes the locality
+        in placement on its next decision (it re-reads liveness every
+        time; there is no exclusion set to clear).  PR 5 cleared only the
+        ``Heartbeat`` latch; without this the port-level ``dead`` flag
+        stayed latched and a recovered worker took no new work forever.
+        Process-exit deaths never reach here (the process is gone)."""
+        with w.lock:
+            if not w.dead:
+                return
+            w.dead = False
+            w.death_reason = ""
+
     def alive(self, locality_id: int) -> bool:
         w = self._workers.get(locality_id)
         return w is not None and not w.dead and not self._shut
@@ -1254,7 +1279,10 @@ class LocalClusterParcelport(Parcelport):
         while not self._stop.is_set():
             try:
                 if not w.rx.poll(0.25):
-                    if w.dead:
+                    if w.dead and not w.proc.is_alive():
+                        # Process gone: no more replies, ever.  A worker
+                        # that is merely heartbeat-dead keeps its listener
+                        # — a late reply is the recovery signal.
                         return
                     continue
                 blob = w.rx.recv_bytes()
@@ -1272,11 +1300,32 @@ class LocalClusterParcelport(Parcelport):
             else:
                 promise.set_exception(rep.payload["error"])
 
+    def _probe(self, w: "_ClusterWorker") -> None:
+        """Recovery ping that bypasses the dead-worker fail-fast gate: no
+        pending entry is registered (the reply's heartbeat tick IS the
+        signal; the unmatched pid is dropped by ``_listen``)."""
+        try:
+            blob = encode_parcel(Parcel("ping", {}, next(self._pid), w.locality_id))
+            with w.txlock:
+                w.tx.send_bytes(blob)
+        except Exception:  # noqa: BLE001 - pipe gone; the exit path handles it
+            pass
+
     def _monitor(self) -> None:
         interval = min(2.0, max(0.05, self.heartbeat_timeout / 4.0))
         while not self._stop.wait(interval):
             for w in list(self._workers.values()):
                 if w.dead:
+                    if not w.proc.is_alive():
+                        continue  # permanent: the process exited
+                    # Heartbeat deaths are a latch on a LIVE process — a
+                    # stalled worker that resumes should flow work again.
+                    # Probe past the fail-fast gate; once a reply ticks
+                    # the heartbeat, check() clears the latch and the
+                    # locality is re-admitted.
+                    self._probe(w)
+                    if w.heartbeat.check():
+                        self._mark_recovered(w)
                     continue
                 if not w.proc.is_alive():
                     self._mark_dead(

@@ -416,6 +416,7 @@ class Program:
         (``percolation`` cost model by default), and a remote pick routes
         the launch through a ``RemoteProgram`` sibling as parcels.
         """
+        from repro.core.graph import current_graph
         from repro.core.scheduler import get_scheduler
 
         if scheduler is not None:
@@ -424,6 +425,13 @@ class Program:
             sched = cluster.scheduler()
         else:
             sched = get_scheduler()
+        # Rebalancing path (DESIGN.md §14): with stealing enabled and more
+        # than one device to balance, the launch parks in the scheduler's
+        # steal pool so an idle sibling can take it if the placed device
+        # falls behind.  Graph capture keeps the direct path — a recorded
+        # node must bind its device at capture time.
+        if current_graph() is None and getattr(sched, "steals", False):
+            return sched.submit(self, args, name, grid=grid, block=block, out=out, sync=sync)
         dev = sched.select(args=args, program=self)
         return self.for_device(dev).run(args, name, grid=grid, block=block, out=out, sync=sync)
 

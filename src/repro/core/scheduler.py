@@ -41,10 +41,38 @@ serve-path fan-out can score raw arrays.
 (``get_scheduler()``); serving fan-out (``repro.serving``) and the fig6
 benchmark use the same object, so one placement decision layer sees all
 traffic.
+
+Continuous rebalancing (DESIGN.md §14): placement used to be one-shot —
+a decision made at submit time was never revisited, so one slow lane
+stranded its queue while siblings idled (the negative-scaling fig6).
+The scheduler now keeps a per-device *pending deque* in front of the
+device lanes and runs one *pump* per device on the host pool.  A pump
+drains its own deque head-first (FIFO for the owner); when it runs dry
+it STEALS from the tail of the deepest sibling backlog,
+dask-distributed-style — tail-stealing preserves the victim's head-of-
+queue FIFO order, and eligibility is gated on the task's argument bytes
+versus the migration cost (``REPRO_STEAL_MAX_BYTES``, divided by the
+cross-locality cost factor when the steal crosses a parcel boundary).
+A stolen launch re-binds to the thief through the same per-device
+sibling-program mechanism ``run_on_any`` uses; its buffers re-home
+through the existing percolation machinery, and cross-locality steals
+batch their argument fetches into one ``steal_fetch`` parcel (shm lane
+for large arrays).  ``REPRO_STEAL=off`` restores one-shot placement.
+
+Memory-aware placement (also §14): devices whose AGAS resident-bytes
+would exceed their threshold (``Device.memory_limit`` /
+``REPRO_SPILL_BYTES``) are vetoed as placement candidates; when every
+candidate is over threshold the pick goes through anyway and the
+least-recently-used buffers on the chosen device are spilled to host
+RAM (``Buffer.spill``; refetch on next use is transparent).
 """
 from __future__ import annotations
 
+import os
 import threading
+import time as _time
+from collections import deque
+from dataclasses import replace as _dc_replace
 from typing import Any, Callable, Optional, Sequence
 
 __all__ = [
@@ -124,9 +152,41 @@ def _device_load(device):
     return device.ops_queue.load()
 
 
-def _load_score(device) -> "tuple[int, float]":
+def _occupancy(device) -> float:
+    """The honest load score (DESIGN.md §14): backlog depth plus the
+    exponentially-decayed recent busy time (``QueueLoad.busy_ewma``).
+    Depth alone is stale by the time a batch lands — a device that just
+    finished a long task and one that sat idle both report depth 0; the
+    decayed busy term separates them without the never-forgets bias of
+    the lifetime ``busy_time`` total."""
     l = _device_load(device)
-    return (l.depth, l.busy_time)
+    return l.depth + getattr(l, "busy_ewma", 0.0)
+
+
+def _load_score(device) -> float:
+    # Quantized to half-tau steps so NEAR-equal devices compare EQUAL
+    # and the tie-rotation can see the tie.  The busy-ewma term is
+    # *history*: scoring sub-half-tau deltas would pile a whole
+    # depth-blind submit burst (launches that enqueue only after their
+    # percolation copies resolve) onto whichever device was momentarily
+    # idlest — and that device's now-elevated history shifts the NEXT
+    # burst wholesale onto a sibling, oscillating forever.  A device
+    # must have been busy for >25% of the decay window to lose a tie;
+    # depth is integral, so real backlog differences always survive.
+    return round(_occupancy(device) * 2.0) / 2.0
+
+
+def _rotate_pick(policy, devices, scores):
+    """Min-score pick with ROTATING tie-break: equal-score devices take
+    turns (per-policy counter) instead of resolving by ``min()``'s
+    stable-first order, which pins every cold-start/coalesced-window tie
+    to device 0."""
+    lo = min(scores)
+    tied = [i for i, s in enumerate(scores) if s == lo]
+    with policy._lock:
+        pick = tied[policy._rr % len(tied)]
+        policy._rr += 1
+    return devices[pick]
 
 
 class PlacementPolicy:
@@ -179,13 +239,18 @@ class RoundRobinPolicy(PlacementPolicy):
 
 
 class LeastLoadedPolicy(PlacementPolicy):
-    """Smallest device backlog wins — summed across every stream lane of
-    the device (``Device.load()``, DESIGN.md §11), so a device running
-    three concurrent streams counts three deep; ties ROTATE through the tied
-    devices (stateful counter), so when the depth signal is blind — e.g.
-    percolating launches enqueue only after their copies resolve — the
-    policy degrades to round-robin spread, never to piling everything on
-    one historically-favored device."""
+    """Smallest device occupancy wins: backlog depth summed across every
+    stream lane of the device (``Device.load()``, DESIGN.md §11) PLUS the
+    exponentially-decayed recent busy time (DESIGN.md §14) — so a device
+    that just spent 200ms inside a launch scores above one that sat idle,
+    even though both report depth 0 between batches.  Ties ROTATE through
+    the tied devices (stateful counter), so when the whole signal is
+    blind — e.g. percolating launches enqueue only after their copies
+    resolve — the policy degrades to round-robin spread, never to piling
+    everything on one historically-favored device.  Before rotating, a
+    tie is narrowed by data locality: if some tied device already holds
+    argument bytes, placing anywhere else buys nothing (same load) and
+    costs a percolation copy, so the launch stays with its bytes."""
 
     name = "least_loaded"
 
@@ -194,9 +259,20 @@ class LeastLoadedPolicy(PlacementPolicy):
         self._lock = threading.Lock()
 
     def select(self, devices, args=(), program=None):
-        depths = [_device_load(d).depth for d in devices]
-        lo = min(depths)
-        tied = [i for i, depth in enumerate(depths) if depth == lo]
+        scores = [_load_score(d) for d in devices]
+        lo = min(scores)
+        tied = [i for i, s in enumerate(scores) if s == lo]
+        if len(tied) > 1 and args:
+            bytes_at: "dict[str, int]" = {}
+            for a in args:
+                key, nb = _arg_home(a)
+                if key is not None and nb:
+                    bytes_at[key] = bytes_at.get(key, 0) + nb
+            best = max((bytes_at.get(getattr(devices[i], "key", None), 0)
+                        for i in tied), default=0)
+            if best > 0:
+                tied = [i for i in tied
+                        if bytes_at.get(getattr(devices[i], "key", None), 0) == best]
         with self._lock:
             pick = tied[self._rr % len(tied)]
             self._rr += 1
@@ -212,6 +288,8 @@ class AffinityPolicy(PlacementPolicy):
 
     def __init__(self):
         self._fallback = LeastLoadedPolicy()
+        self._rr = 0
+        self._lock = threading.Lock()
 
     def select(self, devices, args=(), program=None):
         # Resolve every arg's placement ONCE (one AGAS lookup per arg),
@@ -223,12 +301,8 @@ class AffinityPolicy(PlacementPolicy):
                 resident[key] = resident.get(key, 0) + nb
         if not resident:
             return self._fallback.select(devices, args=args, program=program)
-
-        def score(dev):
-            depth, busy = _load_score(dev)
-            return (-resident.get(dev.key, 0), depth, busy)
-
-        return min(devices, key=score)
+        scores = [(-resident.get(d.key, 0), _load_score(d)) for d in devices]
+        return _rotate_pick(self, devices, scores)
 
 
 class PercolationPolicy(PlacementPolicy):
@@ -247,6 +321,8 @@ class PercolationPolicy(PlacementPolicy):
     def __init__(self, cross_locality_cost: float = 8.0):
         self.cross_locality_cost = float(cross_locality_cost)
         self._fallback = LeastLoadedPolicy()
+        self._rr = 0
+        self._lock = threading.Lock()
 
     def select(self, devices, args=(), program=None):
         homes: "list[tuple[str, int, int]]" = []
@@ -264,10 +340,9 @@ class PercolationPolicy(PlacementPolicy):
                 if key == dev.key:
                     continue
                 cost += nb * (self.cross_locality_cost if loc != dev_loc else 1.0)
-            depth, busy = _load_score(dev)
-            return (cost, depth, busy)
+            return (cost, _load_score(dev))
 
-        return min(devices, key=score)
+        return _rotate_pick(self, devices, [score(d) for d in devices])
 
 
 POLICIES: "dict[str, Callable[[], PlacementPolicy]]" = {
@@ -288,6 +363,67 @@ def make_policy(policy: "str | PlacementPolicy") -> PlacementPolicy:
         raise ValueError(f"unknown placement policy {policy!r}; have {sorted(POLICIES)}") from None
 
 
+class _LoadView:
+    """Policy-facing device view that charges the device for work THIS
+    scheduler knows about but the lanes may not show yet: the steal-pool
+    pending backlog, plus the decayed recent-placement count (a launch
+    placed a moment ago enqueues only after its percolation copies
+    resolve — dask's assigned-but-not-started occupancy).  A launch that
+    HAS reached a lane is in both its depth and the recency counter, so
+    the two signals combine as ``max(depth + pending, recent)`` — a
+    floor on outstanding work, never a double charge.  Everything else
+    forwards to the wrapped device."""
+
+    __slots__ = ("_dev", "_pending", "_recent")
+
+    def __init__(self, dev, pending: int = 0, recent: float = 0.0):
+        self._dev = dev
+        self._pending = pending
+        self._recent = recent
+
+    def load(self):
+        l = _device_load(self._dev)
+        extra = self._pending + max(0.0, self._recent - (l.depth + self._pending))
+        if not extra:
+            return l
+        try:
+            return _dc_replace(l, depth=l.depth + extra,
+                               submitted=l.submitted + extra)
+        except TypeError:  # duck-typed fake load object
+            return l
+
+    def __getattr__(self, name):
+        return getattr(self._dev, name)
+
+    def __repr__(self) -> str:
+        return f"_LoadView({self._dev!r}, +{self._pending}, ~{self._recent:.2f})"
+
+
+def _unwrap(dev):
+    return dev._dev if isinstance(dev, _LoadView) else dev
+
+
+class _PendingLaunch:
+    """One launch parked in the steal pool (``Scheduler.submit``)."""
+
+    __slots__ = ("program", "args", "kernel", "grid", "block", "out", "sync",
+                 "promise", "nbytes", "home_key", "stolen")
+
+    def __init__(self, program, args, kernel, grid, block, out, sync, promise,
+                 nbytes, home_key):
+        self.program = program
+        self.args = args
+        self.kernel = kernel
+        self.grid = grid
+        self.block = block
+        self.out = out
+        self.sync = sync
+        self.promise = promise
+        self.nbytes = nbytes
+        self.home_key = home_key
+        self.stolen = False
+
+
 class Scheduler:
     """Placement decisions over a device fleet.
 
@@ -296,13 +432,46 @@ class Scheduler:
     setup.  ``select`` returns the chosen ``Device`` and records the
     decision in per-device placement counters (``stats()``), which the
     integration tests and fig6 use to verify spread.
+
+    With stealing enabled (the default; ``REPRO_STEAL=off`` or
+    ``steal=False`` disables) ``submit`` parks launches in per-device
+    pending deques drained by one pump per device — see the module
+    docstring for the rebalancing protocol.  ``spill_bytes`` (or
+    ``REPRO_SPILL_BYTES`` via ``Device.memory_limit``) arms the
+    memory-aware veto + LRU spill.
     """
 
-    def __init__(self, devices: "Sequence | None" = None, policy: "str | PlacementPolicy" = "least_loaded"):
+    def __init__(self, devices: "Sequence | None" = None,
+                 policy: "str | PlacementPolicy" = "least_loaded",
+                 steal: "bool | None" = None,
+                 spill_bytes: "int | None" = None,
+                 steal_max_bytes: "int | None" = None):
         self.policy = make_policy(policy)
         self._devices: "list | None" = list(devices) if devices is not None else None
         self._placements: "dict[str, int]" = {}
         self._lock = threading.Lock()
+        if steal is None:
+            steal = os.environ.get("REPRO_STEAL", "auto").lower() != "off"
+        self._steal = bool(steal)
+        if steal_max_bytes is None:
+            steal_max_bytes = int(os.environ.get("REPRO_STEAL_MAX_BYTES", str(32 << 20)))
+        self._steal_max_bytes = int(steal_max_bytes)
+        self._spill_bytes = spill_bytes  # None -> per-device memory_limit
+        self._cross_penalty = 8  # migration-cost multiple of a parcel-pair move
+        # Steal pool: device key -> deque of _PendingLaunch; one pump flag
+        # per device.  One lock covers both (operations are O(fleet)).
+        self._pump_lock = threading.Lock()
+        self._pending: "dict[str, deque]" = {}
+        self._pumping: "set[str]" = set()
+        self._steals = 0
+        self._cross_steals = 0
+        # Decayed recent-placement counters (device key -> (count, stamp)):
+        # a launch placed a moment ago may not show in the device's lane
+        # depth yet (percolating launches enqueue only after their copies
+        # resolve), so the load views charge each device for what THIS
+        # scheduler just sent it — dask's assigned-but-not-started
+        # occupancy.  Decays with the busy-signal half-life.
+        self._recent: "dict[str, tuple[float, float]]" = {}
 
     def devices(self) -> list:
         devs = self._devices
@@ -317,7 +486,9 @@ class Scheduler:
     def _live(self) -> list:
         devs = self.devices()
         # Heartbeat exclusion: a locality whose worker died takes no new
-        # placements — its devices report alive() False until recovery.
+        # placements — its devices report alive() False until recovery,
+        # and alive() is re-read on EVERY decision, so a recovered
+        # (un-latched) locality re-enters the fleet immediately.
         live = [d for d in devs if _is_alive(d)]
         if not live:
             raise RuntimeError(
@@ -327,26 +498,312 @@ class Scheduler:
         return live
 
     def _record(self, dev):
+        from repro.core import executor
+
+        now = _time.monotonic()
+        hl = executor._LOAD_HALFLIFE
         with self._lock:
             self._placements[dev.key] = self._placements.get(dev.key, 0) + 1
+            count, stamp = self._recent.get(dev.key, (0.0, now))
+            self._recent[dev.key] = (count * 2.0 ** (-(now - stamp) / hl) + 1.0, now)
         return dev
 
+    def _recent_extras(self) -> "dict[str, float]":
+        from repro.core import executor
+
+        now = _time.monotonic()
+        hl = executor._LOAD_HALFLIFE
+        out = {}
+        with self._lock:
+            for key, (count, stamp) in self._recent.items():
+                c = count * 2.0 ** (-(now - stamp) / hl)
+                if c > 0.05:
+                    out[key] = c
+        return out
+
+    # -- memory-aware placement (DESIGN.md §14) ------------------------------
+
+    def _limit_of(self, dev) -> int:
+        if self._spill_bytes is not None:
+            return int(self._spill_bytes)
+        return int(getattr(dev, "memory_limit", 0) or 0)
+
+    @staticmethod
+    def _resident_of(dev) -> int:
+        rb = getattr(dev, "resident_bytes", None)
+        if callable(rb):
+            try:
+                return int(rb())
+            except Exception:  # noqa: BLE001 - advisory signal only
+                return 0
+        return 0
+
+    def _fit_memory(self, devs: list, args: Sequence) -> list:
+        """Drop candidates whose resident bytes plus the task's incoming
+        (not-already-there) argument bytes exceed their threshold.  When
+        nothing fits the full list is returned — the pick then triggers
+        an LRU spill instead of failing placement."""
+        limits = [self._limit_of(d) for d in devs]
+        if not any(limits):
+            return devs
+        homes = [_arg_home(a) for a in args]
+        fits = []
+        for d, lim in zip(devs, limits):
+            if not lim:
+                fits.append(d)
+                continue
+            incoming = sum(nb for key, nb in homes if nb and key != d.key)
+            if self._resident_of(d) + incoming <= lim:
+                fits.append(d)
+        return fits or devs
+
+    def _maybe_spill(self, dev, args: Sequence) -> None:
+        """After placing on ``dev``: if the task pushes it over threshold,
+        evict LRU buffers (asynchronously, on the device's default stream)
+        until the incoming bytes fit.  The task's own arguments are never
+        evicted."""
+        lim = self._limit_of(dev)
+        if not lim:
+            return
+        homes = [_arg_home(a) for a in args]
+        incoming = sum(nb for key, nb in homes if nb and key != dev.key)
+        need = self._resident_of(dev) + incoming - lim
+        if need > 0:
+            keep = {a.gid for a in args if hasattr(a, "gid")}
+            self.spill_lru(dev, need, keep=keep)
+
+    def spill_lru(self, dev, need_bytes: int, keep=()) -> list:
+        """Submit spills of the least-recently-used buffers resident on
+        ``dev`` until ``need_bytes`` are on their way to host RAM; returns
+        the spill futures (each resolves True when storage is released).
+        Buffers whose GID is in ``keep`` are never evicted."""
+        from repro.core import agas
+
+        keep = set(keep)
+        cands = []
+        for gid in agas.registry.gids_on(dev.key, kind="buffer"):
+            if gid in keep:
+                continue
+            try:
+                b = agas.registry.resolve(gid)
+            except KeyError:
+                continue
+            if callable(getattr(b, "spill", None)):
+                cands.append(b)
+        cands.sort(key=lambda b: getattr(b, "_last_use", 0.0))
+        futs, freed = [], 0
+        for b in cands:
+            if freed >= need_bytes:
+                break
+            futs.append(b.spill())
+            freed += b.nbytes
+        return futs
+
+    # -- placement ------------------------------------------------------------
+
+    def _views(self, devs: list) -> list:
+        pending = {}
+        if self._steal:
+            with self._pump_lock:
+                pending = {k: len(dq) for k, dq in self._pending.items() if dq}
+        recent = self._recent_extras()
+        if not pending and not recent:
+            return devs
+        out = []
+        for d in devs:
+            p = pending.get(d.key, 0)
+            r = recent.get(d.key, 0.0)
+            out.append(_LoadView(d, p, r) if (p or r) else d)
+        return out
+
     def select(self, args: Sequence = (), program=None):
-        return self._record(self.policy.select(self._live(), args=args, program=program))
+        cands = self._fit_memory(self._live(), args)
+        dev = _unwrap(self.policy.select(self._views(cands), args=args, program=program))
+        self._maybe_spill(dev, args)
+        return self._record(dev)
 
     def select_batch(self, batch_args: "Sequence[Sequence]" = (), program=None):
         """One placement decision for a whole micro-batch of requests
         (``PlacementPolicy.select_batch``): the engine hands every member
         request's argument leaves, the policy scores them as a unit, and
-        the decision is logged once in ``stats()``."""
-        return self._record(
-            self.policy.select_batch(self._live(), batch_args=batch_args, program=program)
+        the decision is logged once in ``stats()``.  The batch sees the
+        same memory veto and pending-backlog-aware load views as single
+        launches — one signal for all traffic."""
+        flat = [a for args in batch_args for a in args]
+        cands = self._fit_memory(self._live(), flat)
+        dev = _unwrap(
+            self.policy.select_batch(self._views(cands), batch_args=batch_args, program=program)
         )
+        self._maybe_spill(dev, flat)
+        return self._record(dev)
+
+    # -- steal pool (DESIGN.md §14) -------------------------------------------
+
+    @property
+    def steals(self) -> bool:
+        """True when launches should route through the rebalancing pool
+        (stealing enabled AND more than one device to balance across)."""
+        if not self._steal:
+            return False
+        try:
+            return len(self.devices()) > 1
+        except RuntimeError:
+            return False
+
+    def pending_depth(self, key: str) -> int:
+        with self._pump_lock:
+            dq = self._pending.get(key)
+            return len(dq) if dq else 0
+
+    def submit(self, program, args: Sequence = (), kernel: "str | None" = None, *,
+               grid=None, block=None, out=None, sync: str = "ready"):
+        """Schedule a kernel launch through the rebalancing pool: place it
+        (same decision ``select`` would make, with the pending backlog
+        folded into the load signal), park it on the chosen device's
+        pending deque, and return a future of the launch result.  Idle
+        sibling pumps may steal it off the tail before the owner gets
+        there; results are identical either way (the stolen launch runs
+        through the thief's sibling program and its buffers re-home)."""
+        from repro.core.futures import Promise
+
+        dev = self.select(args=args, program=program)
+        nbytes = sum(_arg_home(a)[1] for a in args)
+        promise = Promise(name=f"steal-pool:{kernel}")
+        task = _PendingLaunch(program, args, kernel, grid, block, out, sync,
+                              promise, nbytes, dev.key)
+        with self._pump_lock:
+            self._pending.setdefault(dev.key, deque()).append(task)
+            backlog = len(self._pending[dev.key])
+        self._ensure_pump(dev)
+        if backlog > 1:
+            # The owner is behind: wake every idle sibling so one can steal.
+            for d in self._live():
+                if d.key != dev.key:
+                    self._ensure_pump(d)
+        return promise.get_future()
+
+    def _ensure_pump(self, dev) -> None:
+        key = dev.key
+        with self._pump_lock:
+            if key in self._pumping:
+                return
+            self._pumping.add(key)
+        from repro.core.executor import get_runtime
+
+        get_runtime().pool.submit(self._pump, dev)
+
+    def _pump(self, dev) -> None:
+        """Per-device drain loop (host pool): own head first — FIFO for
+        everything the owner runs — then tail-steals, then exit.  Unit
+        concurrency per device: the pump blocks on each launch, so an
+        idle pump is exactly an idle device."""
+        key = dev.key
+        while True:
+            with self._pump_lock:
+                dq = self._pending.get(key)
+                if dq:
+                    task = dq.popleft()
+                else:
+                    task = self._steal_locked(dev)
+                    if task is None:
+                        self._pumping.discard(key)
+                        return
+            self._run_task(dev, task)
+
+    def _steal_locked(self, thief) -> "_PendingLaunch | None":
+        """Pop the tail of the deepest eligible sibling backlog (caller
+        holds ``_pump_lock``).  Eligibility: the task's argument bytes
+        must be worth moving — at most ``REPRO_STEAL_MAX_BYTES``, divided
+        by the cross-locality penalty when victim and thief live in
+        different localities (a steal there costs a parcel pair per
+        buffer, so only small tasks are worth shipping)."""
+        if not self._steal:
+            return None
+        thief_loc = locality_of_key(getattr(thief, "key", ""))
+        for vkey, dq in sorted(self._pending.items(), key=lambda kv: -len(kv[1])):
+            if vkey == thief.key or not dq:
+                continue
+            task = dq[-1]
+            limit = self._steal_max_bytes
+            cross = locality_of_key(vkey) != thief_loc
+            if cross:
+                limit //= self._cross_penalty
+            if task.nbytes > limit:
+                continue
+            dq.pop()
+            task.stolen = True
+            self._steals += 1
+            if cross:
+                self._cross_steals += 1
+            return task
+        return None
+
+    def _run_task(self, dev, task: "_PendingLaunch") -> None:
+        try:
+            args = task.args
+            if task.stolen:
+                args = self._prefetch_stolen_args(dev, args)
+            prog = task.program
+            if callable(getattr(prog, "for_device", None)):
+                prog = prog.for_device(dev)  # re-bind: sibling compile cache
+            fut = prog.run(args, task.kernel, grid=task.grid, block=task.block,
+                           out=task.out, sync=task.sync)
+            task.promise.set_value(fut.get())
+        except BaseException as e:  # noqa: BLE001 - fails the caller's future
+            try:
+                task.promise.set_exception(e)
+            except Exception:  # noqa: BLE001 - consumer cancelled/raced
+                pass
+
+    def _prefetch_stolen_args(self, dev, args: Sequence) -> Sequence:
+        """Batch-fetch remote argument buffers before a cross-locality
+        stolen launch runs: one ``steal_fetch`` parcel brings every array
+        over (the shm lane carries large payloads) instead of N separate
+        percolation round-trips inside ``run``.  Falls back to per-arg
+        percolation on any failure."""
+        dev_loc = locality_of_key(getattr(dev, "key", ""))
+        groups: "dict[tuple[int, int], tuple[Any, list[int]]]" = {}
+        for i, a in enumerate(args):
+            if not getattr(a, "is_remote_buffer", False):
+                continue
+            rdev = getattr(a, "device", None)
+            port = getattr(rdev, "_port", None)
+            loc = getattr(rdev, "locality_id", None)
+            if port is None or loc is None or loc == dev_loc:
+                continue
+            groups.setdefault((id(port), loc), (port, []))[1].append(i)
+        fetched = None
+        for (_, loc), (port, idxs) in groups.items():
+            if len(idxs) < 2:
+                continue  # one buffer: plain percolation is one parcel anyway
+            try:
+                arrays = port.call(
+                    loc, "steal_fetch", {"gids": [args[i].gid for i in idxs]}
+                ).get()
+            except Exception:  # noqa: BLE001 - fall back to percolation
+                continue
+            if fetched is None:
+                fetched = list(args)
+            for i, arr in zip(idxs, arrays):
+                fetched[i] = arr
+        return fetched if fetched is not None else args
+
+    # -- introspection ---------------------------------------------------------
 
     def stats(self) -> "dict[str, int]":
         """Placement counts per device key (decision log, not queue state)."""
         with self._lock:
             return dict(self._placements)
+
+    def steal_stats(self) -> dict:
+        """Rebalancing counters: total steals, the cross-locality subset,
+        and the current pending backlog per device."""
+        with self._pump_lock:
+            return {
+                "steals": self._steals,
+                "cross_locality": self._cross_steals,
+                "pending": {k: len(dq) for k, dq in self._pending.items() if dq},
+            }
 
     def __repr__(self) -> str:
         n = len(self._devices) if self._devices is not None else "?"

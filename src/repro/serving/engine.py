@@ -347,6 +347,22 @@ class RequestEngine:
         with self._cv:
             m["queue_depth"] = len(self._queue)
             m["inflight_batches"] = self._inflight
+        # Fleet view (DESIGN.md §14): where batches landed and how busy the
+        # devices look to the shared occupancy signal — the serving-side
+        # window into the scheduler's rebalancing behaviour.
+        try:
+            sched = self._scheduler_for()
+            m["placements"] = sched.stats()
+            steal_stats = getattr(sched, "steal_stats", None)
+            if callable(steal_stats):
+                m["steals"] = steal_stats()["steals"]
+            occupancy = {}
+            for d in sched.devices():
+                l = d.load()
+                occupancy[d.key] = round(l.depth + getattr(l, "busy_ewma", 0.0), 4)
+            m["fleet_occupancy"] = occupancy
+        except Exception:  # noqa: BLE001 - metrics never fail the caller
+            pass
         elapsed = max(_now() - self._started, 1e-9)
         m["elapsed_s"] = elapsed
         m["requests_per_s"] = m["requests_completed"] / elapsed

@@ -366,6 +366,40 @@ def test_collected_remote_buffer_retires_its_proxy_record(loopback):
         registry.resolve(foreign_gid)
 
 
+def test_loopback_steal_fetch_batches_buffer_reads(loopback):
+    # the cross-locality steal path (DESIGN.md §14): one parcel returns
+    # every requested buffer, bit-exactly, in request order
+    rdev = loopback.localities()[0].devices[0]
+    a = np.arange(16, dtype=np.float32)
+    b = np.linspace(-1.0, 1.0, 32, dtype=np.float32)
+    ba = rdev.create_buffer_from(a).get()
+    bb = rdev.create_buffer_from(b).get()
+    arrays = loopback.call(rdev.locality_id, "steal_fetch",
+                           {"gids": [ba.gid, bb.gid]}).get()
+    assert len(arrays) == 2
+    assert np.asarray(arrays[0]).tobytes() == a.tobytes()
+    assert np.asarray(arrays[1]).tobytes() == b.tobytes()
+    wait_all([ba.free(), bb.free()])
+
+
+def test_steal_prefetch_resolves_remote_args_in_one_parcel(loopback):
+    # what a thief pump does before running a cross-locality stolen
+    # launch: remote buffer args become host arrays, the rest pass through
+    rdev = loopback.localities()[1].devices[0]
+    a = np.full(8, 2.0, np.float32)
+    b = np.full(8, 5.0, np.float32)
+    ba = rdev.create_buffer_from(a).get()
+    bb = rdev.create_buffer_from(b).get()
+    dev = get_all_devices().get()[0]
+    sched = Scheduler([dev])
+    passthrough = np.ones(3, np.float32)
+    fetched = sched._prefetch_stolen_args(dev, [ba, passthrough, bb])
+    assert np.asarray(fetched[0]).tobytes() == a.tobytes()
+    assert fetched[1] is passthrough
+    assert np.asarray(fetched[2]).tobytes() == b.tobytes()
+    wait_all([ba.free(), bb.free()])
+
+
 # ---------------------------------------------------------------------------
 # cluster integration: 2 real worker processes (ISSUE acceptance criteria)
 # ---------------------------------------------------------------------------
@@ -480,6 +514,44 @@ def test_cluster_remote_resident_pipeline_keeps_bytes_remote(cluster):
     prog.run([rbuf], "partition_map_ref", out=[rout]).get()
     np.testing.assert_allclose(rout.enqueue_read_sync(), np.ones(64), rtol=1e-6)
     wait_all([rbuf.free(), rout.free()])
+
+
+def test_cluster_steal_fetch_crosses_a_real_process_boundary(cluster):
+    rdev = cluster.localities()[0].devices[0]
+    a = np.random.default_rng(7).normal(size=(128,)).astype(np.float32)
+    b = np.random.default_rng(8).normal(size=(64,)).astype(np.float32)
+    ba = rdev.create_buffer_from(a).get()
+    bb = rdev.create_buffer_from(b).get()
+    arrays = cluster.call(rdev.locality_id, "steal_fetch",
+                          {"gids": [ba.gid, bb.gid]}).get()
+    assert np.asarray(arrays[0]).tobytes() == a.tobytes()
+    assert np.asarray(arrays[1]).tobytes() == b.tobytes()
+    wait_all([ba.free(), bb.free()])
+
+
+def test_cluster_heartbeat_flap_recovers_and_reenters_placement():
+    # satellite fix: a locality latched dead for a MISSED HEARTBEAT (the
+    # process is alive) must flow work again once it answers the monitor's
+    # recovery probe — before, port-level ``dead`` stayed latched forever.
+    port = LocalClusterParcelport(n_workers=1, heartbeat_timeout=2.0)
+    try:
+        rdev = port.localities()[0].devices[0]
+        lid = rdev.locality_id
+        assert port.call(lid, "ping", {}).get() == "pong"
+        port._mark_dead(lid, "missed its heartbeat deadline (test-induced flap)")
+        assert not port.alive(lid)
+        with pytest.raises(RuntimeError, match="failed"):
+            port.call(lid, "ping", {}).get()  # fail-fast while latched
+        with pytest.raises(RuntimeError, match="no live devices"):
+            Scheduler([rdev]).select()  # excluded from placement
+        deadline = time.monotonic() + 20
+        while not port.alive(lid) and time.monotonic() < deadline:
+            time.sleep(0.1)
+        assert port.alive(lid), "flapped worker was never re-admitted"
+        assert port.call(lid, "ping", {}).get() == "pong"
+        assert Scheduler([rdev]).select() is rdev  # back in the fleet
+    finally:
+        port.shutdown()
 
 
 # ---------------------------------------------------------------------------

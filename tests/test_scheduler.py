@@ -6,11 +6,18 @@ import os
 import subprocess
 import sys
 import textwrap
+import time
 
 import numpy as np
 import pytest
 
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # hypothesis not installed: deterministic fallback shim
+    from _hypothesis_compat import given, settings, strategies as st
+
 from repro.core import (
+    HOST_KEY,
     QueueLoad,
     Scheduler,
     get_all_devices,
@@ -26,6 +33,7 @@ from repro.core import (
 from repro.core.scheduler import (
     AffinityPolicy,
     LeastLoadedPolicy,
+    PercolationPolicy,
     RoundRobinPolicy,
     StaticPolicy,
 )
@@ -298,6 +306,292 @@ def test_reset_runtime_recycles_device_cache():
 
 
 # ---------------------------------------------------------------------------
+# load-signal decay (DESIGN.md §14): busy_ewma rises with work, forgets it
+# ---------------------------------------------------------------------------
+
+
+def test_busy_ewma_rises_with_work_then_decays(monkeypatch):
+    from repro.core import executor
+
+    monkeypatch.setattr(executor, "_LOAD_HALFLIFE", 0.05)
+    q = get_runtime().queue("test-busy-ewma")
+    q.submit(lambda: time.sleep(0.12)).get()
+    hot = q.load().busy_ewma
+    assert hot > 0.25, hot  # just burned >1 tau of wall time
+    time.sleep(0.4)  # 8 half-lives: the signal forgets
+    cold = q.load().busy_ewma
+    assert cold < 0.1 and cold < hot, (hot, cold)
+
+
+def test_least_loaded_sees_recent_busy_time_not_just_depth(monkeypatch):
+    # Both queues report depth 0 — the lifetime-blind case that used to
+    # make placement a coin flip.  The decayed busy term must separate a
+    # device that just worked from one that sat idle.
+    from repro.core import executor
+
+    monkeypatch.setattr(executor, "_LOAD_HALFLIFE", 0.5)  # slow decay in-test
+
+    class _Shell:
+        def __init__(self, key, q):
+            self.key, self.ops_queue = key, q
+
+    busy = _Shell("cpu:0", get_runtime().queue("test-occ-busy"))
+    idle = _Shell("cpu:1", get_runtime().queue("test-occ-idle"))
+    busy.ops_queue.submit(lambda: time.sleep(0.6)).get()  # most of a tau: signal
+    p = LeastLoadedPolicy()
+    assert all(p.select([busy, idle]).key == "cpu:1" for _ in range(3))
+
+
+# ---------------------------------------------------------------------------
+# tie rotation (satellite fix): equal scores must spread, not pin to dev 0
+# ---------------------------------------------------------------------------
+
+
+def test_affinity_ties_rotate_across_equal_hosts():
+    devs = _fleet(3)
+    args = [_FakeBuf(devs[1], nbytes=1024), _FakeBuf(devs[2], nbytes=1024)]
+    p = AffinityPolicy()
+    picked = [p.select(devs, args=args).key for _ in range(4)]
+    assert set(picked) == {"cpu:1", "cpu:2"}, picked  # tied hosts take turns
+    assert picked[0] != picked[1]
+
+
+def test_percolation_ties_rotate_across_equal_costs():
+    devs = _fleet(2)
+    foreign = _FakeBuf(_FakeDevice("cpu:9"), nbytes=512)  # same bytes to move anywhere
+    p = PercolationPolicy()
+    picked = [p.select(devs, args=[foreign]).key for _ in range(4)]
+    assert picked == ["cpu:0", "cpu:1", "cpu:0", "cpu:1"]
+
+
+def test_select_batch_cold_start_spreads_over_fleet():
+    s = Scheduler(_fleet(4), policy="least_loaded", steal=False)
+    keys = [s.select_batch([[np.ones(4, np.float32)]]).key for _ in range(4)]
+    assert len(set(keys)) == 4, keys  # blind batches round-robin, no pile-up
+
+
+# ---------------------------------------------------------------------------
+# memory-aware placement (DESIGN.md §14): veto, LRU spill, honest accounting
+# ---------------------------------------------------------------------------
+
+
+class _MemDevice(_FakeDevice):
+    def __init__(self, key, resident=0, limit=0):
+        super().__init__(key)
+        self._resident = resident
+        self.memory_limit = limit
+
+    def resident_bytes(self):
+        return self._resident
+
+
+def test_memory_veto_skips_near_full_device():
+    full = _MemDevice("cpu:0", resident=900, limit=1000)
+    empty = _MemDevice("cpu:1", resident=0, limit=1000)
+    s = Scheduler([full, empty], policy="least_loaded", steal=False)
+    arg = _FakeBuf(empty, nbytes=500)  # foreign to cpu:0: 900 + 500 > limit
+    assert all(s.select(args=[arg]).key == "cpu:1" for _ in range(3))
+    # without the over-limit incoming bytes, both devices stay candidates
+    s2 = Scheduler([full, empty], policy="least_loaded", steal=False)
+    assert {s2.select().key for _ in range(4)} == {"cpu:0", "cpu:1"}
+
+
+def test_memory_veto_everything_full_still_places():
+    devs = [_MemDevice(f"cpu:{i}", resident=2000, limit=1000) for i in range(2)]
+    s = Scheduler(devs, policy="least_loaded", steal=False)
+    arg = _FakeBuf(_FakeDevice("cpu:9"), nbytes=64)
+    assert s.select(args=[arg]).key in {"cpu:0", "cpu:1"}  # degraded, not dead
+
+
+def test_spill_refetch_keeps_resident_bytes_honest(device):
+    base_dev = registry.resident_bytes(device.key)
+    base_host = registry.resident_bytes(HOST_KEY)
+    data = np.arange(256, dtype=np.float32)
+    buf = device.create_buffer_from(data).get()
+    assert registry.resident_bytes(device.key) == base_dev + 1024
+
+    assert buf.spill().get() is True
+    assert registry.placement(buf.gid).device_key == HOST_KEY
+    assert registry.resident_bytes(device.key) == base_dev
+    assert registry.resident_bytes(HOST_KEY) == base_host + 1024
+    assert registry.spilled_bytes() >= 1024
+    assert buf.spill().get() is False  # idempotent: nothing left to evict
+
+    # transparent refetch: bit-equal data, record moves back to the device
+    np.testing.assert_array_equal(buf.enqueue_read_sync(), data)
+    assert registry.placement(buf.gid).device_key == device.key
+    assert registry.resident_bytes(device.key) == base_dev + 1024
+    assert registry.resident_bytes(HOST_KEY) == base_host
+
+    # a full overwrite makes the host copy dead: discarded, not refetched
+    buf.spill().get()
+    buf.enqueue_write(0, data * 3.0).get()
+    assert registry.placement(buf.gid).device_key == device.key
+    assert registry.resident_bytes(HOST_KEY) == base_host
+    np.testing.assert_array_equal(buf.enqueue_read_sync(), data * 3.0)
+    buf.free().get()
+    assert registry.resident_bytes(device.key) == base_dev
+
+
+@settings(max_examples=5, deadline=None)
+@given(n=st.integers(1, 4096), seed=st.integers(0, 2**31 - 1))
+def test_spill_roundtrip_is_bit_exact(n, seed):
+    device = get_all_devices(1, 0).get()[0]
+    data = np.random.default_rng(seed).normal(size=(n,)).astype(np.float32)
+    buf = device.create_buffer_from(data).get()
+    try:
+        assert buf.spill().get() is True
+        out = np.asarray(buf.enqueue_read_sync())
+        assert out.tobytes() == data.tobytes()
+        assert registry.placement(buf.gid).device_key == device.key
+    finally:
+        buf.free().get()
+
+
+def test_rehome_while_spilled_keeps_host_record(device):
+    buf = device.create_buffer_from(np.ones(64, np.float32)).get()
+    buf.spill().get()
+    buf._rehome(device)  # re-homing a spilled handle must not lie about bytes
+    assert registry.placement(buf.gid).device_key == HOST_KEY
+    np.testing.assert_array_equal(buf.enqueue_read_sync(), np.ones(64))
+    assert registry.placement(buf.gid).device_key == device.key
+    buf.free().get()
+
+
+def test_spill_lru_evicts_oldest_first(device):
+    lru = device.create_buffer_from(np.zeros(256, np.float32)).get()
+    mru = device.create_buffer_from(np.zeros(256, np.float32)).get()
+    lru._last_use = 0.0  # force a deterministic LRU order
+    mru.enqueue_read_sync()
+    s = Scheduler([device], policy="least_loaded", steal=False)
+    futs = s.spill_lru(device, 1, keep=())
+    wait_all(futs)
+    assert registry.placement(lru.gid).device_key == HOST_KEY
+    assert registry.placement(mru.gid).device_key == device.key
+    wait_all([lru.free(), mru.free()])
+
+
+def test_memory_pressure_triggers_lru_spill_on_placement(device):
+    victim = device.create_buffer_from(np.zeros(256, np.float32)).get()
+    victim._last_use = 0.0
+    s = Scheduler([device], policy="least_loaded", steal=False, spill_bytes=1)
+    s.select(args=[_FakeBuf(_FakeDevice("cpu:9"), nbytes=4096)])
+    deadline = time.monotonic() + 10.0
+    while (time.monotonic() < deadline
+           and registry.placement(victim.gid).device_key != HOST_KEY):
+        time.sleep(0.01)
+    assert registry.placement(victim.gid).device_key == HOST_KEY
+    victim.free().get()
+
+
+def test_spill_lru_never_evicts_kept_gids(device):
+    keeper = device.create_buffer_from(np.zeros(256, np.float32)).get()
+    keeper._last_use = 0.0  # oldest, but protected
+    s = Scheduler([device], policy="least_loaded", steal=False)
+    wait_all(s.spill_lru(device, 1, keep={keeper.gid}))
+    assert registry.placement(keeper.gid).device_key == device.key
+    keeper.free().get()
+
+
+# ---------------------------------------------------------------------------
+# steal pool (DESIGN.md §14): tail-stealing invariants on real WorkQueues
+# ---------------------------------------------------------------------------
+
+
+class _QueueDevice:
+    """Steal-pool fake: a real WorkQueue behind a device-shaped shell, so
+    the pump/steal protocol runs against real FIFO lanes while the launch
+    itself stays synthetic."""
+
+    def __init__(self, key):
+        self.key = key
+        self.ops_queue = get_runtime().queue(f"steal-{key}")
+
+
+class _RecordingProgram:
+    """``for_device``/``run`` shaped like Program: run executes on the
+    bound device's queue (unit concurrency per lane, like a real launch)
+    and logs ``(task_id, device_key)`` — task id is the LAST argument."""
+
+    def __init__(self, log, delays=None):
+        self.log = log
+        self.delays = dict(delays or {})
+
+    def for_device(self, dev):
+        return _BoundRecording(self, dev)
+
+
+class _BoundRecording:
+    def __init__(self, root, dev):
+        self._root, self._dev = root, dev
+
+    def run(self, args, name, grid=None, block=None, out=None, sync="ready"):
+        root, dev = self._root, self._dev
+
+        def _work():
+            d = root.delays.get(dev.key, 0.0)
+            if d:
+                time.sleep(d)
+            root.log.append((args[-1], dev.key))
+            return args[-1] * 2
+
+        return dev.ops_queue.submit(_work)
+
+
+@settings(max_examples=5, deadline=None)
+@given(n=st.integers(6, 18), delay_ms=st.integers(5, 25))
+def test_steal_tail_preserves_victim_head_fifo(n, delay_ms):
+    # All tasks placed on a slow victim; idle siblings steal from the
+    # TAIL.  Invariants: every task runs exactly once, every result is
+    # right, and whatever the victim itself ran is in submission order.
+    log = []
+    devs = [_QueueDevice(f"sp{i}") for i in range(3)]
+    prog = _RecordingProgram(log, delays={"sp0": delay_ms / 1000.0})
+    sched = Scheduler(devs, policy="static", steal=True)
+    futs = [sched.submit(prog, [i], "k") for i in range(n)]
+    assert [f.get() for f in futs] == [2 * i for i in range(n)]
+    assert len(log) == n and {tid for tid, _ in log} == set(range(n))
+    ran_on_victim = [tid for tid, key in log if key == "sp0"]
+    assert ran_on_victim == sorted(ran_on_victim), log
+    assert sched.steal_stats()["steals"] >= 1
+    assert sched.steal_stats()["pending"] == {}
+
+
+def test_steal_byte_gate_blocks_expensive_migrations():
+    # Tasks over REPRO_STEAL_MAX_BYTES stay home even when siblings idle.
+    log = []
+    devs = [_QueueDevice(f"bg{i}") for i in range(3)]
+    heavy = _FakeBuf(devs[0], nbytes=1 << 20)
+    prog = _RecordingProgram(log, delays={"bg0": 0.01})
+    sched = Scheduler(devs, policy="static", steal=True, steal_max_bytes=1024)
+    futs = [sched.submit(prog, [heavy, i], "k") for i in range(6)]
+    assert [f.get() for f in futs] == [2 * i for i in range(6)]
+    assert {key for _, key in log} == {"bg0"}, log  # nothing migrated
+    assert sched.steal_stats()["steals"] == 0
+
+
+def test_steal_disabled_uses_direct_launch_path(device, monkeypatch):
+    s = Scheduler([device, device], steal=False)
+    assert s.steals is False
+    monkeypatch.setenv("REPRO_STEAL", "off")
+    assert Scheduler([device, device]).steals is False  # env knob
+    monkeypatch.setenv("REPRO_STEAL", "auto")
+    assert Scheduler([device]).steals is False  # 1 device: nothing to balance
+    assert Scheduler([device, device]).steals is True
+
+
+def test_run_on_any_routes_through_steal_pool(device):
+    prog = device.create_program({"double": lambda x: x * 2.0}, name="steal-route").get()
+    other = _QueueDevice("sr1")
+    sched = Scheduler([device, other], policy="static", steal=True)
+    # static pins to the real device; the pool path must return the same
+    # value the direct path would
+    fut = prog.run_on_any([np.arange(4, dtype=np.float32)], "double", scheduler=sched)
+    np.testing.assert_allclose(np.asarray(fut.get()), [0.0, 2.0, 4.0, 6.0])
+    assert sched.stats()[device.key] == 1
+
+
+# ---------------------------------------------------------------------------
 # integration: 8 forced host devices (re-exec pattern, see
 # test_multidevice_train.py) — spread, least_loaded vs static wall-clock,
 # affinity placement, multi-device graph fan-out replay
@@ -343,9 +637,12 @@ _CHILD = textwrap.dedent(
     # Timed on a 2-device fleet (a 2-core CI box cannot feed 8 concurrent
     # queues), interleaved min-of-reps, retried on load spikes — shared
     # runners must not turn a structural 2x advantage into a flaky red.
+    # Stealing disabled: this measures the PLACEMENT signal alone — with
+    # the steal pool on, idle dev1 would drain static's backlog and erase
+    # the structural difference under test.
     fleet2 = devices[:2]
     def time_policy(policy):
-        sched = Scheduler(fleet2, policy=policy)
+        sched = Scheduler(fleet2, policy=policy, steal=False)
         t0 = time.perf_counter()
         pipeline(sched)
         return time.perf_counter() - t0
@@ -438,3 +735,87 @@ def test_scheduler_integration_8_host_devices():
     # the wall-clock comparison (least_loaded beats static) is asserted in
     # the child; surface its measurement here for the test log
     assert any(l.startswith("TIMES") for l in out.splitlines()), out
+
+
+# ---------------------------------------------------------------------------
+# integration: one throttled lane out of 8 — stealing must recover the lost
+# wall-clock (ISSUE acceptance: >= 1.5x vs stealing off, results bit-equal)
+# ---------------------------------------------------------------------------
+
+_STEAL_CHILD = textwrap.dedent(
+    """
+    import os, time
+    os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=8 "
+                               "--xla_cpu_multi_thread_eigen=false "
+                               + os.environ.get("XLA_FLAGS", ""))
+    import numpy as np
+    from repro.core import Scheduler, get_all_devices
+
+    devices = get_all_devices(1, 0).get()
+    assert len(devices) == 8, devices
+
+    class Throttled:
+        # per-task brake on one device's default lane: each submitted item
+        # sleeps first, so the lane is structurally slow task-by-task (a
+        # single long block would hold the stolen head hostage instead)
+        def __init__(self, q, delay):
+            self._q, self._delay = q, delay
+        def submit(self, fn, *a, **k):
+            d = self._delay
+            def slow(*aa, **kk):
+                time.sleep(d)
+                return fn(*aa, **kk)
+            return self._q.submit(slow, *a, **k)
+        def __getattr__(self, name):
+            return getattr(self._q, name)
+
+    prog = devices[0].create_program({"k": lambda x: x * 2.0 + 1.0}, "steal").get()
+    parts = [np.random.default_rng(i).normal(size=(4096,)).astype(np.float32)
+             for i in range(32)]
+
+    def run(steal):
+        sched = Scheduler(devices, policy="round_robin", steal=steal)
+        t0 = time.perf_counter()
+        futs = [prog.run_on_any([p], "k", scheduler=sched) for p in parts]
+        res = [np.asarray(f.get()) for f in futs]
+        return time.perf_counter() - t0, res, sched
+
+    run(True); run(False)  # warm every sibling's compile cache first
+    devices[0].ops_queue = Throttled(devices[0].ops_queue, 0.30)
+
+    # round_robin gives the throttled lane 4 of 32 tasks: ~1.2s serialized
+    # with stealing off, ~one brake tick once idle siblings drain the rest.
+    best, sched_on = 0.0, None
+    for attempt in range(4):
+        t_off, res_off, _ = run(False)
+        t_on, res_on, sched_on = run(True)
+        for a, b in zip(res_off, res_on):
+            assert a.tobytes() == b.tobytes()  # bit-equal, stolen or not
+        best = max(best, t_off / max(t_on, 1e-9))
+        print("THROTTLE", f"off={t_off:.3f}", f"on={t_on:.3f}",
+              f"best_ratio={best:.2f}", "steals=", sched_on.steal_stats()["steals"])
+        if best >= 1.5:
+            break
+    assert best >= 1.5, best
+    assert sched_on.steal_stats()["steals"] > 0, sched_on.steal_stats()
+    print("OK")
+    """
+)
+
+
+@pytest.mark.slow
+def test_steal_recovers_throttled_lane_8_host_devices():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src:" + env.get("PYTHONPATH", "")
+    env.pop("REPRO_STEAL", None)  # the child toggles stealing explicitly
+    proc = subprocess.run(
+        [sys.executable, "-c", _STEAL_CHILD],
+        capture_output=True,
+        text=True,
+        env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        timeout=900,
+    )
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert "OK" in proc.stdout, proc.stdout
+    assert any(l.startswith("THROTTLE") for l in proc.stdout.splitlines()), proc.stdout
