@@ -212,6 +212,21 @@ class Registry:
             rec.placement = placement
             self._index_add(gid, rec)
 
+    def update_nbytes(self, gid: GID, nbytes: int) -> None:
+        """Re-declare a registration's resident size (page pools and other
+        growable objects whose footprint changes after registration).  The
+        reverse-index byte totals move with it, so the scheduler's
+        memory veto and spill accounting track the *current* footprint —
+        a pool slab registers its slab bytes once, then a paged KV cache
+        re-charges each sequence's pages as they are allocated/freed."""
+        with self._lock:
+            rec = self._records.get(gid)
+            if rec is None:
+                raise KeyError(f"GID {gid} is not registered")
+            self._index_remove(gid, rec)
+            rec.meta["nbytes"] = int(nbytes)
+            self._index_add(gid, rec)
+
     def unregister(self, gid: GID) -> None:
         with self._lock:
             rec = self._records.pop(gid, None)

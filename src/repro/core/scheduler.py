@@ -508,6 +508,25 @@ class Scheduler:
             self._recent[dev.key] = (count * 2.0 ** (-(now - stamp) / hl) + 1.0, now)
         return dev
 
+    def charge(self, dev, n: float = 1.0) -> None:
+        """Add ``n`` extra units to ``dev``'s decayed recent-placement
+        counter WITHOUT logging a placement.  ``select_batch`` records one
+        unit per batch decision, which under-weights a 32-row decode burst
+        against a 1-row one; the serving engine charges ``rows - 1`` here
+        after dispatch so ``least_loaded`` sees the burst's true size (the
+        direct-jit route never touches a lane queue until the batch is
+        already running, so the recency counter is its only load signal)."""
+        if n <= 0:
+            return
+        from repro.core import executor
+
+        now = _time.monotonic()
+        hl = executor._LOAD_HALFLIFE
+        with self._lock:
+            count, stamp = self._recent.get(dev.key, (0.0, now))
+            self._recent[dev.key] = (
+                count * 2.0 ** (-(now - stamp) / hl) + float(n), now)
+
     def _recent_extras(self) -> "dict[str, float]":
         from repro.core import executor
 

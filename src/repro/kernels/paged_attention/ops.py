@@ -1,0 +1,29 @@
+"""Public paged-attention op for decode serving.
+
+``impl="auto"`` picks the Pallas kernel on TPU (where the scalar-prefetch
+page gather runs in the DMA engine) and the gather-based reference
+everywhere else: interpret-mode Pallas executes the ``(B, H, M)`` grid as
+a Python loop, far too slow for the serving hot path, while the reference
+is one fused XLA gather+einsum.  ``impl="kernel"`` forces the Pallas path
+(interpret mode off-TPU) so tests exercise the real kernel logic.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.paged_attention.kernel import paged_attention_bhd
+from repro.kernels.paged_attention.ref import paged_attention_ref
+
+
+def paged_attention(q, k_pages, v_pages, page_table, lengths, *,
+                    impl: str = "auto"):
+    """q: (B, H, D); k/v_pages: (N, P, K, D); page_table: (B, M) int32;
+    lengths: (B,) int32 -> (B, H, D)."""
+    on_tpu = jax.default_backend() == "tpu"
+    if impl == "ref" or (impl == "auto" and not on_tpu):
+        return paged_attention_ref(q, k_pages, v_pages, page_table, lengths)
+    return paged_attention_bhd(q, k_pages, v_pages, page_table, lengths,
+                               interpret=not on_tpu)
+
+
+KERNELS = {"paged_attention": paged_attention}

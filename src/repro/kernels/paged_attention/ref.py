@@ -1,0 +1,47 @@
+"""Oracle: gather-based paged attention, fp32 softmax.
+
+The pure-JAX reference for the Pallas paged-attention kernel: KV lives in
+a global *page pool* — ``k_pages``/``v_pages`` of shape ``(num_pages,
+page_size, K, D)`` — and each query row owns a ``page_table`` row of
+physical page indices covering its first ``length`` tokens.  The oracle
+simply gathers every table entry back into a contiguous ``(B, M*P, K, D)``
+view and runs exact GQA attention with a length mask, which makes it both
+the correctness anchor for the kernel and the executable definition of the
+page-table layout:
+
+* logical token ``t`` of sequence ``b`` lives at
+  ``pages[table[b, t // P], t % P]``;
+* table slots at or beyond ``ceil(length / P)`` are *padding* — they must
+  hold a **valid** page index (conventionally 0) so gathers stay in
+  bounds, and their tokens are masked out of the softmax by ``lengths``.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def paged_attention_ref(q, k_pages, v_pages, page_table, lengths):
+    """q: (B, H, D); k/v_pages: (N, P, K, D), H % K == 0;
+    page_table: (B, M) int32; lengths: (B,) int32 -> (B, H, D).
+
+    One decode query per sequence, attending to its first ``lengths[b]``
+    cached tokens (no causal structure beyond the length mask: the query
+    IS the last token).
+    """
+    B, H, D = q.shape
+    N, P, K, Dk = k_pages.shape
+    M = page_table.shape[1]
+    R = H // K
+    k = k_pages[page_table].reshape(B, M * P, K, Dk)  # gather: (B, M, P, K, D)
+    v = v_pages[page_table].reshape(B, M * P, K, Dk)
+    qr = q.reshape(B, K, R, D)
+    s = jnp.einsum("bkrd,bskd->bkrs", qr, k, preferred_element_type=jnp.float32)
+    s = s / math.sqrt(D)
+    mask = jnp.arange(M * P)[None, :] < lengths[:, None]  # (B, M*P)
+    s = jnp.where(mask[:, None, None, :], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    o = jnp.einsum("bkrs,bskd->bkrd", w, v)
+    return o.reshape(B, H, D).astype(q.dtype)

@@ -1,6 +1,15 @@
 """Serving layer: per-step decode/prefill builders, scheduler-routed
-fan-out, and the continuous-batching ``RequestEngine`` (DESIGN.md §12)."""
-from repro.serving.engine import EngineClosed, QueueFull, RequestEngine
+fan-out, the continuous-batching ``RequestEngine`` (DESIGN.md §12), and
+the paged-KV prefill/decode-disaggregated ``PagedServeEngine`` (§15)."""
+from repro.serving.engine import EngineClosed, LanePolicy, QueueFull, RequestEngine
+from repro.serving.paged import (
+    OutOfPages,
+    PagedKVCache,
+    PagedServeEngine,
+    PagePool,
+    PageSpec,
+    SeqPages,
+)
 from repro.serving.serve_step import (
     cache_to_rows,
     make_prefill,
@@ -15,6 +24,13 @@ __all__ = [
     "RequestEngine",
     "QueueFull",
     "EngineClosed",
+    "LanePolicy",
+    "PageSpec",
+    "PagePool",
+    "PagedKVCache",
+    "PagedServeEngine",
+    "SeqPages",
+    "OutOfPages",
     "cache_to_rows",
     "make_prefill",
     "make_serve_engine",

@@ -59,6 +59,7 @@ from __future__ import annotations
 import threading
 import time
 from collections import deque
+from dataclasses import dataclass
 from typing import Any, Callable, Sequence
 
 import jax
@@ -67,7 +68,7 @@ import numpy as np
 from repro.core.executor import coalesce
 from repro.core.futures import Future, Promise
 
-__all__ = ["RequestEngine", "QueueFull", "EngineClosed"]
+__all__ = ["RequestEngine", "QueueFull", "EngineClosed", "LanePolicy"]
 
 
 class QueueFull(RuntimeError):
@@ -80,6 +81,37 @@ class EngineClosed(RuntimeError):
 
 def _now() -> float:
     return time.monotonic()
+
+
+@dataclass(frozen=True)
+class LanePolicy:
+    """Per-kind batching policy (prefill/decode disaggregation, §15).
+
+    A serving engine's request kinds want different batching: *prefill*
+    is throughput-bound — batch as many prompt tokens as fit a budget,
+    tolerate a longer assembly window — while *decode* is latency-bound
+    — dispatch at a tight deadline, rows are cheap.  ``None`` fields
+    inherit the engine-wide default.
+
+    ``token_budget`` bounds a batch by ``rows × tokens_per_row`` (the
+    largest leading tail axis among the request's row leaves — for a
+    ``(1, T)`` prompt leaf that is ``T``), so long prompts batch fewer
+    rows and short ones more, instead of one row bound serving both.
+    """
+
+    max_batch: "int | None" = None
+    max_delay_s: "float | None" = None
+    token_budget: "int | None" = None
+
+
+def _tokens_per_row(metas) -> int:
+    """The token-budget denominator: the widest leading tail axis among
+    the row leaves (1 when every row leaf is a bare vector)."""
+    t = 1
+    for m in metas:
+        if m[0] == "row" and m[1]:
+            t = max(t, int(m[1][0]))
+    return t
 
 
 class _Request:
@@ -123,10 +155,15 @@ def _classify(kind: str, payload) -> "tuple[list, Any, int, tuple]":
                 raise ValueError(
                     f"request row leaves disagree on the leading axis: {lead} vs {rows}"
                 )
-            metas.append(("row", tuple(int(d) for d in a.shape[1:]), np.dtype(a.dtype).str))
+            # Dtype OBJECTS, not `.str` codes: ml_dtypes types (bfloat16)
+            # have no char code — np.dtype(bfloat16).str is the void
+            # '<V2', which round-trips to raw bytes and breaks
+            # concatenation.  np.dtype instances hash/compare by value,
+            # so they key batches exactly as the strings did.
+            metas.append(("row", tuple(int(d) for d in a.shape[1:]), np.dtype(a.dtype)))
         else:
             v = np.asarray(a)
-            metas.append(("bcast", v.dtype.str, v.tobytes()))
+            metas.append(("bcast", v.dtype, v.tobytes()))
     if rows is None:
         raise ValueError(
             "request payload has no array leaf with a leading row axis — "
@@ -177,6 +214,11 @@ class RequestEngine:
         stream (default).  ``False`` forces the direct jit path — the
         right choice when the step closes over large parameters (a fused
         graph would bake them into the executable as constants).
+    lanes:
+        Per-kind ``LanePolicy`` overrides (prefill/decode disaggregation,
+        DESIGN.md §15): e.g. ``{"prefill": LanePolicy(token_budget=2048,
+        max_delay_s=0.01), "decode": LanePolicy(max_delay_s=0.001)}``.
+        Kinds without an entry use the engine-wide bounds.
     """
 
     def __init__(
@@ -190,6 +232,7 @@ class RequestEngine:
         cluster=None,
         graph: bool = True,
         buckets: "Sequence[int] | None" = None,
+        lanes: "dict[str, LanePolicy] | None" = None,
         name: str = "engine",
     ):
         from repro.core.parcel import resolve_kernel
@@ -221,6 +264,10 @@ class RequestEngine:
         self._buckets = sorted(set(int(b) for b in buckets))
         if self._buckets[-1] != self.max_batch:
             raise ValueError("largest bucket must equal max_batch")
+        self._lanes: "dict[str, LanePolicy]" = dict(lanes or {})
+        for kind in self._lanes:
+            if kind not in self._fns:
+                raise KeyError(f"lane policy for unknown kind {kind!r}")
 
         self._cv = threading.Condition()
         self._queue: "deque[_Request]" = deque()
@@ -341,6 +388,9 @@ class RequestEngine:
                 "batches": self._batches,
                 "rows": self._rows,
                 "padded_rows": self._padded_rows,
+                # Padded ÷ real rows: the cost of pow-2 bucketing — what
+                # the paged engine's exact-row decode batches eliminate.
+                "padding_waste": (self._padded_rows / self._rows) if self._rows else 0.0,
                 "queue_high_water": self._queue_hwm,
                 "mean_batch_rows": (self._rows / self._batches) if self._batches else 0.0,
             }
@@ -382,19 +432,34 @@ class RequestEngine:
                 return b
         return self._buckets[-1]
 
-    def _compatible_rows(self, key) -> int:
+    def _lane_bounds(self, key) -> "tuple[int, float]":
+        """(row cap, assembly deadline) for this batch key: the kind's
+        ``LanePolicy`` when one was given — token budgets divide down to a
+        row cap against the key's tokens-per-row — else the engine-wide
+        bounds.  The cap never exceeds ``max_batch`` (the bucket roof)."""
+        kind, _treedef, metas = key
+        pol = self._lanes.get(kind)
+        if pol is None:
+            return self.max_batch, self.max_delay_s
+        cap = pol.max_batch if pol.max_batch is not None else self.max_batch
+        if pol.token_budget is not None:
+            cap = min(cap, max(1, pol.token_budget // _tokens_per_row(metas)))
+        delay = pol.max_delay_s if pol.max_delay_s is not None else self.max_delay_s
+        return min(cap, self.max_batch), delay
+
+    def _compatible_rows(self, key, cap: int) -> int:
         rows = 0
         for r in self._queue:
             if r.key == key:
                 rows += r.rows
-                if rows >= self.max_batch:
+                if rows >= cap:
                     break
         return rows
 
-    def _take_group(self, key) -> "list[_Request]":
+    def _take_group(self, key, cap: int) -> "list[_Request]":
         """Pop the head-compatible requests (in order, skipping cancelled
-        entries) up to ``max_batch`` rows; incompatible requests keep
-        their queue position."""
+        entries) up to ``cap`` rows; incompatible requests keep their
+        queue position."""
         group: "list[_Request]" = []
         rows = 0
         kept: "deque[_Request]" = deque()
@@ -404,7 +469,7 @@ class RequestEngine:
             if r.future.cancelled():
                 cancelled += 1
                 continue
-            if r.key == key and rows + r.rows <= self.max_batch:
+            if r.key == key and rows + r.rows <= cap:
                 group.append(r)
                 rows += r.rows
             else:
@@ -423,14 +488,18 @@ class RequestEngine:
                 if not self._queue:
                     return  # closed and drained
                 head = self._queue[0]
-                deadline = head.arrived + self.max_delay_s
+                cap, delay = self._lane_bounds(head.key)
+                # A request bigger than its lane's cap still fits max_batch
+                # (submit checked); run it alone rather than wedging the queue.
+                cap = max(cap, head.rows)
+                deadline = head.arrived + delay
                 while (
                     not self._closed
-                    and self._compatible_rows(head.key) < self.max_batch
+                    and self._compatible_rows(head.key, cap) < cap
                     and _now() < deadline
                 ):
                     self._cv.wait(timeout=max(deadline - _now(), 0.0) or 0.0005)
-                group = self._take_group(head.key)
+                group = self._take_group(head.key, cap)
                 if group:
                     self._inflight += 1
             if group:
@@ -487,12 +556,22 @@ class RequestEngine:
         with self._m_lock:
             for r in group:
                 self._queue_waits.append(dispatched - r.arrived)
+        sched = self._scheduler_for()
         try:
-            dev = self._scheduler_for().select_batch([r.leaves for r in group])
+            dev = sched.select_batch([r.leaves for r in group])
         except BaseException as e:  # noqa: BLE001 - dead fleet fails the batch
             self._finish(group, None, e)
             return
-        bucket = self._bucket(sum(r.rows for r in group))
+        rows = sum(r.rows for r in group)
+        bucket = self._bucket(rows)
+        # select_batch logged ONE placement unit, but this batch is `rows`
+        # of work that the direct-jit route never shows in any lane depth:
+        # charge the remainder so a 32-row decode burst weighs 32, not 1,
+        # in least_loaded's recent-placement signal (the §14 submit-path
+        # fix, applied to the engine's own dispatch).
+        charge = getattr(sched, "charge", None)
+        if callable(charge) and rows > 1:
+            charge(dev, rows - 1)
 
         from repro.core.executor import get_runtime
 

@@ -1,0 +1,1105 @@
+"""Paged KV cache + prefill/decode disaggregation (DESIGN.md §15).
+
+The continuous-batching engine (§12) moves every request's whole KV cache
+through each micro-batch: mixed-length sequences never share a batch (the
+batch key includes the cache shape), rows are padded to pow-2 buckets,
+and migrating a sequence repatriates megabytes.  That is why the fleet
+*lost* to one device in fig9.  This module applies the GPU-virtualization
+lesson (Li et al., arXiv:1511.07658): many clients share a device only
+when their state is partitioned into fixed-size schedulable units.
+
+* ``PagePool`` — one per device: two slab ``Buffer``s (k and v) of shape
+  ``(layers, num_pages, page_size, kv_heads, head_dim)`` plus a free
+  list.  Page 0 is *reserved* as the padding target: page-table slots
+  past a sequence's tail must hold a valid index (the paged-attention
+  kernel DMAs them before masking), so they all point at page 0 and no
+  live sequence ever owns it.
+
+* **Honest accounting.**  The slabs re-register under AGAS kind
+  ``"pool"`` with 0 bytes — slab *capacity* is not memory pressure, and
+  the LRU spiller must never evict a whole pool.  What counts is usage:
+  every sequence is a ``SeqPages`` record (AGAS kind ``"buffer"``,
+  ``nbytes`` = its pages × page bytes, re-declared through
+  ``Registry.update_nbytes`` on every alloc/free/spill).  The §14
+  memory-aware scheduler therefore sees page pressure per device, and
+  its existing ``spill_lru`` evicts *cold sequences'* pages (host copy +
+  pages returned to the pool), never the hot ones it placed work next to.
+
+* ``PagedKVCache`` — the fleet-wide allocator: per-device pools,
+  sequence lifecycle (``new_seq`` / ``append`` / ``free_seq``),
+  ``defrag`` (compact a pool's live pages to the low slots),
+  ``migrate`` (re-home a sequence's pages to another device in ONE
+  coalesced move — all pages travel as one stacked array per slab, not
+  one transfer per page), and ``table`` (page tables + lengths in the
+  kernel's layout).
+
+* ``PagedServeEngine`` — prefill/decode disaggregation.  Prefill is a
+  throughput lane: prompts batch up to a token budget
+  (``LanePolicy.token_budget``), the placement scheduler picks the
+  sequence's home device (memory veto included), and the prompt's KV is
+  paged in once.  Decode is a latency lane *per device*: exact-row
+  batches of every active resident sequence — no row padding at all
+  (``padding_waste`` ≈ 0), mixed lengths share one step because the page
+  table, not the batch shape, encodes length — stepped continuously with
+  a deadline-bounded wait for new arrivals.  Page-table width and pool
+  shapes are static, so the jitted step stays hot across steps.  Every
+  step charges the scheduler's recent-placement counter
+  (``Scheduler.charge``) so ``least_loaded`` sees decode bursts that
+  never touch a lane queue; every ``rebalance_every`` steps the lane
+  asks ``Scheduler.select_batch`` (affinity over the ``SeqPages``
+  records) whether its sequences still belong here — a different answer
+  migrates one sequence, pages percolating in one coalesced move.
+
+The model contract is two callables (see ``make_paged_lm`` in
+``benchmarks/fig9_serving.py`` or ``examples/paged_serving.py``):
+
+``prefill_fn(tokens)``
+    ``(B, T) int32 -> (k, v, next)`` with k/v ``(B, L, T, K, D)`` and
+    ``next`` ``(B,) int32`` — the prompt's KV plus the first token.
+``decode_fn(k_pages, v_pages, tokens, positions, tables, lengths)``
+    one decode step over the *pools*: scatter each row's incoming
+    token's k/v into ``pages[tables[b, pos // P], pos % P]``, attend
+    through the page table (``repro.kernels.paged_attention``), return
+    ``(k_pages, v_pages, next)``.  Donating the pool args keeps the
+    update in place.
+
+Env knobs: ``REPRO_PAGE_SIZE`` (tokens per page, default 16),
+``REPRO_PAGE_POOL_BYTES`` (per-device pool bytes, default 32 MiB),
+``REPRO_PREFILL_TOKEN_BUDGET`` (prefill lane batch bound, default 2048),
+``REPRO_DECODE_DEADLINE_S`` (decode lane arrival wait, default 1 ms).
+"""
+from __future__ import annotations
+
+import functools
+import os
+import threading
+import time
+import weakref
+from dataclasses import dataclass
+from typing import Any, Callable, Sequence
+
+import jax
+import numpy as np
+
+from repro.core import agas
+from repro.core.executor import coalesce
+from repro.core.futures import Future, Promise
+from repro.serving.engine import EngineClosed, LanePolicy, QueueFull
+
+__all__ = [
+    "PageSpec",
+    "PagePool",
+    "PagedKVCache",
+    "PagedServeEngine",
+    "SeqPages",
+    "OutOfPages",
+]
+
+
+def _env_int(name: str, default: int) -> int:
+    try:
+        return int(os.environ.get(name, default))
+    except ValueError:
+        return default
+
+
+def _now() -> float:
+    return time.monotonic()
+
+
+class OutOfPages(RuntimeError):
+    """The pool has fewer free pages than the allocation needs."""
+
+
+@dataclass(frozen=True)
+class PageSpec:
+    """Geometry of one KV page: ``page_size`` tokens × ``kv_heads`` ×
+    ``head_dim`` per layer, k and v both.  Pass ``page_size=0`` to take
+    ``REPRO_PAGE_SIZE`` (default 16)."""
+
+    layers: int
+    page_size: int
+    kv_heads: int
+    head_dim: int
+    dtype: Any = np.float32
+
+    def __post_init__(self):
+        if not self.page_size:
+            object.__setattr__(
+                self, "page_size", _env_int("REPRO_PAGE_SIZE", 16))
+
+    @property
+    def page_bytes(self) -> int:
+        """Bytes one page pins across both slabs (k + v, all layers)."""
+        return (2 * self.layers * self.page_size * self.kv_heads
+                * self.head_dim * np.dtype(self.dtype).itemsize)
+
+    def pages_for(self, tokens: int) -> int:
+        return max(0, -(-int(tokens) // self.page_size))
+
+
+# Consecutive empty decode steps (nothing fits in the pool) tolerated
+# before the lane declares the working set unservable and fails the
+# stalled batch.  At the 2ms stall backoff this is ~1s of zero progress.
+_MAX_DECODE_STALLS = 500
+
+
+def _pow2_pad_idx(idx: np.ndarray) -> np.ndarray:
+    """Pad a page-index vector to the next power-of-two length by
+    repeating the last entry, bounding the distinct shapes the jitted
+    slab gather/scatter ever compile to log2(max pages per move)."""
+    n = idx.size
+    want = 1
+    while want < n:
+        want *= 2
+    if want == n:
+        return idx
+    return np.concatenate([idx, np.repeat(idx[-1:], want - n)])
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _slab_scatter(slab, idx, vals):
+    return slab.at[:, idx].set(vals)
+
+
+@jax.jit
+def _slab_gather(slab, idx):
+    return slab[:, idx]
+
+
+class PagePool:
+    """Per-device page pool: two slab Buffers + a free list.
+
+    All slab mutation happens under ``lock`` — the prefill lane (paging
+    a prompt in), the decode lane (swapping the stepped slabs back) and
+    the spiller (reading a victim's pages out) race otherwise.
+    """
+
+    def __init__(self, device, spec: PageSpec, num_pages: int):
+        if num_pages < 2:
+            raise ValueError("PagePool needs >= 2 pages (page 0 is reserved)")
+        self.device = device
+        self.spec = spec
+        self.num_pages = int(num_pages)
+        shape = (spec.layers, self.num_pages, spec.page_size,
+                 spec.kv_heads, spec.head_dim)
+        self.k_slab = device.create_buffer(shape, spec.dtype).get()
+        self.v_slab = device.create_buffer(shape, spec.dtype).get()
+        for b in (self.k_slab, self.v_slab):
+            self._repin(b)
+        self.lock = threading.RLock()
+        self._free: "list[int]" = list(range(self.num_pages - 1, 0, -1))
+
+    @staticmethod
+    def _repin(buf) -> None:
+        """Move a slab's AGAS record to kind ``"pool"`` at 0 bytes: the
+        slab must be invisible to ``spill_lru`` (kind filter) and to the
+        resident-bytes pressure signal — usage is accounted per sequence
+        (``SeqPages``), capacity is not pressure."""
+        agas.registry.unregister(buf.gid)
+        if buf._finalizer is not None:
+            buf._finalizer.detach()
+        buf.gid = agas.registry.register(
+            buf,
+            agas.Placement(buf.device.key, buf.device.jax_device.process_index),
+            kind="pool",
+            nbytes=0,
+        )
+        buf._finalizer = weakref.finalize(buf, agas.registry.unregister, buf.gid)
+
+    # -- allocation ----------------------------------------------------------
+
+    def alloc(self, n: int) -> "list[int]":
+        with self.lock:
+            if n > len(self._free):
+                raise OutOfPages(
+                    f"{self.device.key}: need {n} page(s), {len(self._free)} free "
+                    f"of {self.num_pages - 1}"
+                )
+            return [self._free.pop() for _ in range(n)]
+
+    def free(self, pages: "Sequence[int]") -> None:
+        with self.lock:
+            for p in pages:
+                if not 0 < p < self.num_pages:
+                    raise ValueError(f"page {p} is not an allocatable page of this pool")
+                if p in self._free:
+                    raise ValueError(f"double free of page {p} on {self.device.key}")
+                self._free.append(p)
+
+    @property
+    def num_free(self) -> int:
+        with self.lock:
+            return len(self._free)
+
+    @property
+    def used_pages(self) -> int:
+        return (self.num_pages - 1) - self.num_free
+
+    # -- slab views ----------------------------------------------------------
+
+    def arrays(self) -> "tuple[jax.Array, jax.Array]":
+        with self.lock:
+            return self.k_slab.array(), self.v_slab.array()
+
+    def set_arrays(self, k, v) -> None:
+        """Swap the stepped slabs back in (decode returns whole pools —
+        donation made the update in-place on device)."""
+        with self.lock:
+            self.k_slab._set_array(k)
+            self.v_slab._set_array(v)
+
+    def write_pages(self, pages: "Sequence[int]", k, v) -> None:
+        """Scatter page contents into the slabs: k/v are
+        ``(n, L, P, Kh, D)`` host or device arrays, one row per page.
+
+        Runs through a jitted, slab-donating scatter with the page count
+        padded to a power of two (duplicate trailing index, same value —
+        a benign rewrite): eager ``.at[].set`` would copy the whole slab
+        AND recompile for every distinct page count."""
+        n = len(pages)
+        if n == 0:
+            return
+        idx = _pow2_pad_idx(np.asarray(pages, np.int32))
+        kk = np.moveaxis(np.asarray(k), 0, 1)
+        vv = np.moveaxis(np.asarray(v), 0, 1)
+        if idx.size != n:
+            kk = np.concatenate([kk, np.repeat(kk[:, -1:], idx.size - n, axis=1)], axis=1)
+            vv = np.concatenate([vv, np.repeat(vv[:, -1:], idx.size - n, axis=1)], axis=1)
+        dev = self.device.jax_device
+        with self.lock:
+            ks, vs = self.k_slab.array(), self.v_slab.array()
+            idxd = jax.device_put(idx, dev)
+            self.k_slab._set_array(_slab_scatter(ks, idxd, jax.device_put(kk, dev)))
+            self.v_slab._set_array(_slab_scatter(vs, idxd, jax.device_put(vv, dev)))
+
+    def read_pages(self, pages: "Sequence[int]") -> "tuple[np.ndarray, np.ndarray]":
+        """Gather page contents out: ``(n, L, P, Kh, D)`` host arrays.
+        Jitted gather, page count padded to a power of two (extra rows
+        sliced off) — same compile-churn guard as ``write_pages``."""
+        n = len(pages)
+        if n == 0:
+            sh = (0, self.spec.layers, self.spec.page_size,
+                  self.spec.kv_heads, self.spec.head_dim)
+            return np.empty(sh, self.spec.dtype), np.empty(sh, self.spec.dtype)
+        idx = _pow2_pad_idx(np.asarray(pages, np.int32))
+        with self.lock:
+            ks, vs = self.k_slab.array(), self.v_slab.array()
+            idxd = jax.device_put(idx, self.device.jax_device)
+            kg, vg = _slab_gather(ks, idxd), _slab_gather(vs, idxd)
+        return (np.moveaxis(np.asarray(kg), 1, 0)[:n],
+                np.moveaxis(np.asarray(vg), 1, 0)[:n])
+
+    def __repr__(self) -> str:
+        return (f"PagePool({self.device.key}: {self.used_pages}/"
+                f"{self.num_pages - 1} pages used)")
+
+
+class SeqPages:
+    """One sequence's pages: the AGAS-visible unit of KV residency.
+
+    Registered kind ``"buffer"`` with ``nbytes`` = pages × page bytes
+    (re-declared on every alloc/free), exposing ``gid``/``device``/
+    ``nbytes`` so the §9 affinity scoring, the §14 memory veto AND
+    ``spill_lru`` all see sequences as first-class residents: the
+    scheduler places decode where a sequence's pages live, and evicts the
+    least-recently-*decoded* sequence under pressure.  ``spill`` copies
+    the pages to host RAM and returns them to the pool (record moves to
+    ``agas.HOST_KEY``); ``ensure_resident`` re-allocates and writes back.
+    """
+
+    def __init__(self, cache: "PagedKVCache", pool: PagePool, seq_id: int):
+        self._cache = cache
+        self.pool = pool
+        self.seq_id = seq_id
+        self.pages: "list[int]" = []
+        self.length = 0
+        self._spilled: "tuple[np.ndarray, np.ndarray] | None" = None
+        self._lock = threading.RLock()
+        self._last_use = _now()
+        dev = pool.device
+        self.gid = agas.registry.register(
+            self, agas.Placement(dev.key, dev.jax_device.process_index),
+            kind="buffer", nbytes=0,
+        )
+        self._finalizer = weakref.finalize(self, agas.registry.unregister, self.gid)
+
+    @property
+    def device(self):
+        return self.pool.device
+
+    @property
+    def nbytes(self) -> int:
+        return len(self.pages) * self.pool.spec.page_bytes
+
+    @property
+    def spilled(self) -> bool:
+        return self._spilled is not None
+
+    def _account(self) -> None:
+        try:
+            agas.registry.update_nbytes(self.gid, self.nbytes)
+        except KeyError:  # freed under a racing finalizer
+            pass
+
+    # -- spill / refetch (scheduler-driven, DESIGN.md §14) -------------------
+
+    def spill(self) -> Future:
+        """Evict to host RAM (future of True when pages were released):
+        page contents copy out, the pages return to the pool's free list,
+        and the AGAS record moves to ``HOST_KEY`` — device page pressure
+        drops immediately, exactly like ``Buffer.spill``."""
+        return self.pool.device.ops_queue.submit(self._spill_now)
+
+    def _spill_now(self) -> bool:
+        with self._lock:
+            if self._spilled is not None or not self.pages:
+                return False
+            self._spilled = self.pool.read_pages(self.pages)
+            self.pool.free(self.pages)
+            self.pages = []
+            agas.registry.update_placement(
+                self.gid,
+                agas.Placement(agas.HOST_KEY, self.pool.device.jax_device.process_index),
+            )
+            self._account()
+            return True
+
+    def ensure_resident(self) -> None:
+        """Refetch after a spill: re-allocate (page ids may differ — the
+        handle is the identity, not the page numbers) and write the host
+        copy back."""
+        with self._lock:
+            if self._spilled is None:
+                return
+            k, v = self._spilled
+            pages = self.pool.alloc(len(k))
+            self.pool.write_pages(pages, k, v)
+            self.pages = pages
+            self._spilled = None
+            dev = self.pool.device
+            agas.registry.update_placement(
+                self.gid, agas.Placement(dev.key, dev.jax_device.process_index))
+            self._account()
+            self._last_use = _now()
+
+    def __repr__(self) -> str:
+        state = "spilled" if self.spilled else self.pool.device.key
+        return (f"SeqPages(#{self.seq_id}: {self.length} tok / "
+                f"{len(self.pages)} pages @ {state})")
+
+
+class PagedKVCache:
+    """Fleet-wide paged KV allocator: one ``PagePool`` per device plus
+    the sequence lifecycle (``new_seq``/``append``/``free_seq``), pool
+    compaction (``defrag``) and coalesced cross-device ``migrate``."""
+
+    def __init__(self, spec: PageSpec, devices: "Sequence | None" = None,
+                 pool_pages: "int | None" = None,
+                 pool_bytes: "int | None" = None):
+        if devices is None:
+            from repro.core.device import get_all_devices
+
+            devices = list(get_all_devices().get())
+        if pool_pages is None:
+            if pool_bytes is None:
+                pool_bytes = _env_int("REPRO_PAGE_POOL_BYTES", 32 << 20)
+            pool_pages = max(2, pool_bytes // spec.page_bytes)
+        self.spec = spec
+        self.pools: "dict[str, PagePool]" = {
+            d.key: PagePool(d, spec, pool_pages) for d in devices
+        }
+        self._seq_lock = threading.Lock()
+        self._next_seq = 0
+        self._seqs: "dict[int, SeqPages]" = {}
+
+    def pool_of(self, device) -> PagePool:
+        try:
+            return self.pools[device.key]
+        except KeyError:
+            raise KeyError(f"no page pool on {device.key}") from None
+
+    # -- sequence lifecycle --------------------------------------------------
+
+    def new_seq(self, device) -> SeqPages:
+        pool = self.pool_of(device)
+        with self._seq_lock:
+            sid = self._next_seq
+            self._next_seq += 1
+            seq = self._seqs[sid] = SeqPages(self, pool, sid)
+        return seq
+
+    def append(self, seq: SeqPages, k, v) -> None:
+        """Page ``T`` new tokens in: k/v are ``(L, T, Kh, D)``.  Partial
+        tail pages are zero-padded to the page boundary (masked by
+        ``length`` at attention time)."""
+        seq.ensure_resident()
+        k = np.asarray(k)
+        v = np.asarray(v)
+        L, T, Kh, D = k.shape
+        P = self.spec.page_size
+        with seq._lock:
+            if seq.length % P:
+                raise ValueError(
+                    "append must start on a page boundary (decode steps append "
+                    "token-at-a-time inside decode_fn, not through append)"
+                )
+            n = self.spec.pages_for(T)
+            pages = seq.pool.alloc(n)
+            pad = n * P - T
+            if pad:
+                k = np.concatenate([k, np.zeros((L, pad, Kh, D), k.dtype)], axis=1)
+                v = np.concatenate([v, np.zeros((L, pad, Kh, D), v.dtype)], axis=1)
+            # (L, n*P, Kh, D) -> (n, L, P, Kh, D): one write per append.
+            seq.pool.write_pages(
+                pages,
+                np.moveaxis(k.reshape(L, n, P, Kh, D), 1, 0),
+                np.moveaxis(v.reshape(L, n, P, Kh, D), 1, 0),
+            )
+            seq.pages.extend(pages)
+            seq.length += T
+            seq._last_use = _now()
+            seq._account()
+
+    def ensure_slot(self, seq: SeqPages) -> None:
+        """Grow the sequence by one page when the next decoded token has
+        no slot (length sits on a page boundary)."""
+        with seq._lock:
+            if len(seq.pages) * self.spec.page_size < seq.length + 1:
+                seq.pages.extend(seq.pool.alloc(1))
+                seq._account()
+
+    def note_decoded(self, seq: SeqPages) -> None:
+        """One token was scattered into the sequence's tail slot by
+        ``decode_fn``; the bookkeeping catches up here."""
+        with seq._lock:
+            seq.length += 1
+            seq._last_use = _now()
+
+    def free_seq(self, seq: SeqPages) -> None:
+        with seq._lock:
+            if seq.pages:
+                seq.pool.free(seq.pages)
+            seq.pages = []
+            seq._spilled = None
+            seq.length = 0
+            if seq._finalizer is not None:
+                seq._finalizer.detach()
+                seq._finalizer = None
+            agas.registry.unregister(seq.gid)
+        with self._seq_lock:
+            self._seqs.pop(seq.seq_id, None)
+
+    # -- layout for the kernel -----------------------------------------------
+
+    def table(self, seqs: "Sequence[SeqPages]", max_pages: int):
+        """(page_table (B, max_pages) int32, lengths (B,) int32) in the
+        ``paged_attention`` layout: padding slots hold the reserved page
+        0 so the kernel's prefetched DMAs stay in bounds."""
+        B = len(seqs)
+        tbl = np.zeros((B, max_pages), np.int32)
+        lens = np.zeros((B,), np.int32)
+        for i, s in enumerate(seqs):
+            n = len(s.pages)
+            if n > max_pages:
+                raise ValueError(
+                    f"sequence #{s.seq_id} has {n} pages, table width is {max_pages}"
+                )
+            tbl[i, :n] = s.pages
+            lens[i] = s.length
+        return tbl, lens
+
+    # -- maintenance ---------------------------------------------------------
+
+    def defrag(self, device) -> int:
+        """Compact a pool: live pages move to the lowest slots (stable
+        order), sequence tables are rewritten, the free list becomes the
+        contiguous tail.  Returns the number of pages that moved.  The
+        caller must quiesce the pool (the engine defrags between decode
+        steps); sequences mid-``spill`` hold the pool lock, so the
+        compaction serializes against them."""
+        pool = self.pool_of(device)
+        with pool.lock:
+            with self._seq_lock:
+                holders = [s for s in self._seqs.values()
+                           if s.pool is pool and s.pages]
+            live: "list[int]" = []
+            for s in holders:
+                live.extend(s.pages)
+            mapping = {old: new for new, old in enumerate(sorted(live), start=1)}
+            moved = sum(1 for old, new in mapping.items() if old != new)
+            if moved:
+                order = np.arange(pool.num_pages, dtype=np.int32)
+                for old, new in mapping.items():
+                    order[new] = old
+                ks, vs = pool.arrays()
+                pool.set_arrays(ks[:, order], vs[:, order])
+                for s in holders:
+                    with s._lock:
+                        s.pages = [mapping[p] for p in s.pages]
+            pool._free = list(range(pool.num_pages - 1, len(live), -1))
+        return moved
+
+    def migrate(self, seq: SeqPages, device) -> None:
+        """Re-home a sequence: ALL its pages leave the source slabs as one
+        stacked read and land in the target pool as one stacked write —
+        the §10 lesson (batch the percolation, never per-page transfers)
+        applied to rebalancing.  The AGAS record moves with the pages, so
+        affinity immediately scores the new home."""
+        dst = self.pool_of(device)
+        with seq._lock:
+            if seq.pool is dst:
+                return
+            seq.ensure_resident()
+            src = seq.pool
+            with coalesce():
+                k, v = src.read_pages(seq.pages)
+                pages = dst.alloc(len(seq.pages))
+                dst.write_pages(pages, k, v)
+            src.free(seq.pages)
+            seq.pool = dst
+            seq.pages = pages
+            agas.registry.update_placement(
+                seq.gid, agas.Placement(device.key, device.jax_device.process_index))
+            seq._account()
+            seq._last_use = _now()
+
+    def stats(self) -> dict:
+        out = {}
+        for key, pool in self.pools.items():
+            out[key] = {
+                "used_pages": pool.used_pages,
+                "free_pages": pool.num_free,
+                "resident_bytes": agas.registry.resident_bytes(key),
+            }
+        out["spilled_bytes"] = agas.registry.spilled_bytes()
+        return out
+
+
+class _PagedRequest:
+    __slots__ = ("tokens", "max_new", "promise", "arrived", "seq", "out",
+                 "started", "first_token_s")
+
+    def __init__(self, tokens, max_new, promise, arrived):
+        self.tokens = tokens
+        self.max_new = max_new
+        self.promise = promise
+        self.arrived = arrived
+        self.seq: "SeqPages | None" = None
+        self.out: "list[int]" = []
+        self.started = arrived
+        self.first_token_s: "float | None" = None
+
+
+class PagedServeEngine:
+    """Prefill/decode-disaggregated serving over a ``PagedKVCache``.
+
+    ``submit(prompt, max_new_tokens)`` returns a future of the generated
+    token ids (np.int32).  One prefill lane batches prompts by token
+    budget and pages their KV onto the scheduler-chosen device; one
+    decode lane per device steps every resident sequence continuously in
+    exact-row batches.  See the module docstring for the model contract
+    and the placement/rebalance protocol.
+    """
+
+    def __init__(self, kv: PagedKVCache, prefill_fn: Callable, decode_fn: Callable,
+                 *, max_seq_len: int, scheduler=None,
+                 prefill: "LanePolicy | None" = None,
+                 decode: "LanePolicy | None" = None,
+                 max_queue: int = 512, rebalance_every: int = 32,
+                 decode_shapes: "Sequence[int] | None" = None,
+                 name: str = "paged"):
+        self.kv = kv
+        self.prefill_fn = prefill_fn
+        self.decode_fn = decode_fn
+        # Optional row-count palette preseeded into every decode lane's
+        # warm-shape set (see _DecodeLane): a closed palette (e.g. powers
+        # of two up to max_batch) makes the set of compiled decode shapes
+        # deterministic across runs — benchmarks want that — at the cost
+        # of padding whenever occupancy is off-palette.  None (default)
+        # learns watermarks as they occur: ~0 steady-state padding,
+        # compile count bounded by distinct high-water marks instead.
+        self.decode_shapes = (
+            tuple(sorted({int(s) for s in decode_shapes if int(s) > 0}))
+            if decode_shapes is not None else ())
+        self.name = name
+        self.max_seq_len = int(max_seq_len)
+        self.max_pages = kv.spec.pages_for(self.max_seq_len)
+        self._scheduler = scheduler
+        self.max_queue = int(max_queue)
+        self.rebalance_every = max(1, int(rebalance_every))
+        self.prefill_policy = prefill if prefill is not None else LanePolicy(
+            max_batch=8, max_delay_s=0.004,
+            token_budget=_env_int("REPRO_PREFILL_TOKEN_BUDGET", 2048))
+        self.decode_policy = decode if decode is not None else LanePolicy(
+            max_batch=64,
+            max_delay_s=float(os.environ.get("REPRO_DECODE_DEADLINE_S", 0.001)))
+
+        self._cv = threading.Condition()
+        self._queue: "list[_PagedRequest]" = []
+        self._closed = False
+
+        # Per-device decode lanes: inbox + thread, created on first use.
+        self._lane_lock = threading.Lock()
+        self._lanes: "dict[str, _DecodeLane]" = {}
+
+        # Metrics.
+        self._m_lock = threading.Lock()
+        self._started_at = _now()
+        self._submitted = 0
+        self._completed = 0
+        self._failed = 0
+        self._prefill_batches = 0
+        self._prefill_tokens = 0
+        self._prefill_rows = 0
+        self._prefill_padded = 0
+        self._decode_steps = 0
+        self._decode_rows = 0
+        self._decode_padded = 0
+        self._migrations = 0
+        self._token_lat: "list[float]" = []
+        self._seq_lat: "list[float]" = []
+        self._ttft: "list[float]" = []
+
+        self._prefill_thread = threading.Thread(
+            target=self._prefill_loop, name=f"paged:{name}:prefill", daemon=True)
+        self._prefill_thread.start()
+
+    # -- submission ----------------------------------------------------------
+
+    def submit(self, prompt, max_new_tokens: int) -> Future:
+        tokens = np.asarray(prompt, np.int32).reshape(-1)
+        if tokens.size == 0:
+            raise ValueError("empty prompt")
+        total = tokens.size + int(max_new_tokens)
+        if total > self.max_seq_len:
+            raise ValueError(
+                f"prompt ({tokens.size}) + max_new_tokens ({max_new_tokens}) "
+                f"exceeds max_seq_len ({self.max_seq_len})")
+        promise: Promise = Promise(name=f"{self.name}:seq")
+        req = _PagedRequest(tokens, int(max_new_tokens), promise, _now())
+        with self._cv:
+            if self._closed:
+                raise EngineClosed(f"engine {self.name!r} is closed")
+            if len(self._queue) >= self.max_queue:
+                raise QueueFull(
+                    f"engine {self.name!r} admission queue is full "
+                    f"({self.max_queue}) — backpressure: shed or retry")
+            self._queue.append(req)
+            self._cv.notify_all()
+        with self._m_lock:
+            self._submitted += 1
+        return promise.get_future()
+
+    def reset_metrics(self) -> None:
+        """Zero the counters and latency histograms (placement state, warm
+        decode shapes and resident pages are untouched).  Benchmarks call
+        this after a warm-up pass so ``metrics()`` reflects only the
+        measured window — warm-pass XLA compiles would otherwise dominate
+        every latency percentile."""
+        with self._m_lock:
+            self._started_at = _now()
+            self._submitted = self._completed = self._failed = 0
+            self._prefill_batches = self._prefill_tokens = 0
+            self._prefill_rows = self._prefill_padded = 0
+            self._decode_steps = self._decode_rows = self._decode_padded = 0
+            self._migrations = 0
+            self._token_lat.clear()
+            self._seq_lat.clear()
+            self._ttft.clear()
+
+    def __enter__(self) -> "PagedServeEngine":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def close(self) -> None:
+        with self._cv:
+            self._closed = True
+            self._cv.notify_all()
+        self._prefill_thread.join(timeout=60)
+        with self._lane_lock:
+            lanes = list(self._lanes.values())
+        for lane in lanes:
+            lane.close()
+
+    def drain(self) -> None:
+        """Block until every admitted sequence has finished decoding."""
+        while True:
+            with self._cv:
+                queued = len(self._queue)
+            with self._lane_lock:
+                active = sum(lane.active_count() for lane in self._lanes.values())
+            if not queued and not active:
+                return
+            time.sleep(0.002)
+
+    # -- prefill lane (throughput: token-budget batching) --------------------
+
+    def _scheduler_for(self):
+        if self._scheduler is not None:
+            return self._scheduler
+        from repro.core.scheduler import get_scheduler
+
+        return get_scheduler()
+
+    def _prefill_loop(self) -> None:
+        pol = self.prefill_policy
+        while True:
+            with self._cv:
+                while not self._queue and not self._closed:
+                    self._cv.wait()
+                if not self._queue:
+                    return
+                head = self._queue[0]
+                deadline = head.arrived + (pol.max_delay_s or 0.004)
+                T = head.tokens.size
+                budget_rows = max(1, (pol.token_budget or 1 << 30) // max(T, 1))
+                cap = min(pol.max_batch or 8, budget_rows)
+                while (not self._closed and _now() < deadline
+                       and sum(1 for r in self._queue if r.tokens.size == T) < cap):
+                    self._cv.wait(timeout=max(deadline - _now(), 0.0005))
+                group, kept = [], []
+                for r in self._queue:
+                    if r.tokens.size == T and len(group) < cap:
+                        group.append(r)
+                    else:
+                        kept.append(r)
+                self._queue[:] = kept
+            if group:
+                try:
+                    self._run_prefill(group)
+                except BaseException as e:  # noqa: BLE001 - lane must not die
+                    for r in group:
+                        r.promise.set_exception(e)
+                    with self._m_lock:
+                        self._failed += len(group)
+
+    def _run_prefill(self, group: "list[_PagedRequest]") -> None:
+        T = group[0].tokens.size
+        batch = np.stack([r.tokens for r in group])  # (B, T) — equal-T: no padding
+        k, v, nxt = self.prefill_fn(batch)
+        k = np.asarray(k)
+        v = np.asarray(v)
+        nxt = np.asarray(nxt, np.int32)
+        sched = self._scheduler_for()
+        done = _now()
+        with self._m_lock:
+            self._prefill_batches += 1
+            self._prefill_tokens += batch.size
+            self._prefill_rows += len(group)
+        for i, req in enumerate(group):
+            dev = sched.select(args=())
+            pool = self._pool_with_room(dev, self.kv.spec.pages_for(T) + 1)
+            req.seq = self.kv.new_seq(pool.device)
+            # k[i]: (L, T, Kh, D) — the whole prompt pages in as one write.
+            self.kv.append(req.seq, k[i], v[i])
+            req.out.append(int(nxt[i]))
+            req.started = done
+            req.first_token_s = done - req.arrived
+            if req.max_new <= 1:
+                self._finish(req)
+            else:
+                self._lane_for(pool.device).admit(req)
+
+    def _pool_with_room(self, dev, need_pages: int) -> PagePool:
+        """The chosen device's pool if it has room, else spill its LRU
+        sequences to make room, else the pool with the most free pages —
+        admission never fails while ANY pool can hold the prompt."""
+        pool = self.kv.pools.get(dev.key)
+        if pool is not None and pool.num_free >= need_pages:
+            return pool
+        if pool is not None:
+            need = (need_pages - pool.num_free) * self.kv.spec.page_bytes
+            for f in self._scheduler_for().spill_lru(dev, need):
+                f.get()
+            if pool.num_free >= need_pages:
+                return pool
+        best = max(self.kv.pools.values(), key=lambda p: p.num_free)
+        if best.num_free < need_pages:
+            raise OutOfPages(
+                f"no pool has {need_pages} free page(s); deepest is "
+                f"{best.device.key} with {best.num_free}")
+        return best
+
+    def _lane_for(self, device) -> "_DecodeLane":
+        with self._lane_lock:
+            lane = self._lanes.get(device.key)
+            if lane is None:
+                lane = self._lanes[device.key] = _DecodeLane(self, device)
+            return lane
+
+    # -- completion ----------------------------------------------------------
+
+    def _finish(self, req: "_PagedRequest", exc: "BaseException | None" = None) -> None:
+        if req.seq is not None:
+            self.kv.free_seq(req.seq)
+            req.seq = None
+        if exc is not None:
+            req.promise.set_exception(exc)
+            with self._m_lock:
+                self._failed += 1
+            return
+        req.promise.set_value(np.asarray(req.out, np.int32))
+        with self._m_lock:
+            self._completed += 1
+            self._seq_lat.append(_now() - req.arrived)
+            if req.first_token_s is not None:
+                self._ttft.append(req.first_token_s)
+
+    # -- metrics -------------------------------------------------------------
+
+    @staticmethod
+    def _pct(xs: "list[float]", q: float) -> float:
+        if not xs:
+            return 0.0
+        xs = sorted(xs)
+        return xs[int(q * (len(xs) - 1))]
+
+    def metrics(self) -> dict:
+        with self._m_lock:
+            rows = self._prefill_rows + self._decode_rows
+            padded = self._prefill_padded + self._decode_padded
+            m = {
+                "requests_submitted": self._submitted,
+                "requests_completed": self._completed,
+                "requests_failed": self._failed,
+                "prefill_batches": self._prefill_batches,
+                "prefill_tokens": self._prefill_tokens,
+                "decode_steps": self._decode_steps,
+                "rows": rows,
+                "padded_rows": padded,
+                "padding_waste": (padded / rows) if rows else 0.0,
+                "migrations": self._migrations,
+                "token_latency_p50_s": self._pct(self._token_lat, 0.50),
+                "token_latency_p99_s": self._pct(self._token_lat, 0.99),
+                "ttft_p99_s": self._pct(self._ttft, 0.99),
+                "seq_latency_p99_s": self._pct(self._seq_lat, 0.99),
+            }
+        elapsed = max(_now() - self._started_at, 1e-9)
+        m["elapsed_s"] = elapsed
+        m["seqs_per_s"] = m["requests_completed"] / elapsed
+        m["kv"] = self.kv.stats()
+        try:
+            m["placements"] = self._scheduler_for().stats()
+        except Exception:  # noqa: BLE001 - metrics never fail the caller
+            pass
+        with self._lane_lock:
+            m["active_by_device"] = {
+                k: lane.active_count() for k, lane in self._lanes.items()}
+        return m
+
+    def __repr__(self) -> str:
+        return (f"PagedServeEngine({self.name}: {self._completed}/"
+                f"{self._submitted} sequences)")
+
+
+class _DecodeLane:
+    """One device's decode lane: continuous exact-row batched stepping.
+
+    The lane thread owns the device's resident sequences.  Each
+    iteration: fold in arrivals (deadline-bounded wait only when idle),
+    take up to ``max_batch`` sequences, grow tails by a page where
+    needed, run ONE ``decode_fn`` step over the pools, swap the slabs
+    back, and retire finished sequences.  Mixed-length sequences share
+    the step at their true lengths — no sequence-dimension padding ever,
+    which is the entire point of paging.
+
+    Row counts are kept shape-stable: ``decode_fn`` is jitted by the
+    caller, so every new row count is a fresh XLA compile.  The lane
+    remembers which row counts it has already run (``_warm``) and pads a
+    smaller batch up to the nearest warm count — duplicating the last
+    row, whose scatter rewrites the same slot with the same value and
+    whose output is discarded — rather than compiling a one-off shape.
+    A batch that sets a new high-water mark compiles exactly (and
+    becomes warm), and padding is capped at 2x the real rows, so steady
+    state runs exact with ~0 padding and a shrinking tail never
+    recompiles."""
+
+    def __init__(self, engine: PagedServeEngine, device):
+        self.engine = engine
+        self.device = device
+        self._cv = threading.Condition()
+        self._warm: "set[int]" = set(engine.decode_shapes)
+        self._inbox: "list[_PagedRequest]" = []
+        self._active: "list[_PagedRequest]" = []
+        self._closed = False
+        self._steps = 0
+        self._stalls = 0  # consecutive steps where nothing fit in the pool
+        self._thread = threading.Thread(
+            target=self._loop, name=f"paged:{engine.name}:decode:{device.key}",
+            daemon=True)
+        self._thread.start()
+
+    def admit(self, req: "_PagedRequest") -> None:
+        with self._cv:
+            self._inbox.append(req)
+            self._cv.notify_all()
+
+    def active_count(self) -> int:
+        with self._cv:
+            return len(self._inbox) + len(self._active)
+
+    def close(self) -> None:
+        with self._cv:
+            self._closed = True
+            self._cv.notify_all()
+        self._thread.join(timeout=60)
+
+    def _loop(self) -> None:
+        eng = self.engine
+        pol = eng.decode_policy
+        while True:
+            with self._cv:
+                if not self._active and not self._inbox:
+                    if self._closed:
+                        return
+                    self._cv.wait(timeout=0.05)
+                    continue
+                if not self._active and self._inbox:
+                    # Idle lane: give the batch one deadline window to fill.
+                    deadline = _now() + (pol.max_delay_s or 0.001)
+                    while not self._closed and _now() < deadline:
+                        self._cv.wait(timeout=max(deadline - _now(), 0.0005))
+                self._active.extend(self._inbox)
+                self._inbox.clear()
+                # Residents first (stable, so round-robin order survives):
+                # a spilled sequence can only rejoin once pages free up,
+                # and putting it ahead of resident work would let one
+                # unfittable sequence stall the whole lane.
+                self._active.sort(key=lambda r: r.seq.spilled)
+                batch = self._active[: (pol.max_batch or 64)]
+            if not batch:
+                continue
+            try:
+                self._step(batch)
+            except BaseException as e:  # noqa: BLE001 - fail the batch, not the lane
+                with self._cv:
+                    for r in batch:
+                        if r in self._active:
+                            self._active.remove(r)
+                for r in batch:
+                    eng._finish(r, e)
+
+    def _step(self, batch: "list[_PagedRequest]") -> None:
+        eng = self.engine
+        kv = eng.kv
+        t0 = _now()
+        # Page pressure IS the capacity limit on a small fleet: a
+        # sequence whose pages cannot be made resident right now is
+        # deferred — it stays active and retries as finishing sequences
+        # free pages — rather than failed or force-spilling a batchmate
+        # (which would thrash the same pool within one step).
+        ready: "list[_PagedRequest]" = []
+        for r in batch:
+            try:
+                r.seq.ensure_resident()
+                kv.ensure_slot(r.seq)
+                ready.append(r)
+            except OutOfPages:
+                continue
+        if not ready:
+            self._stalls += 1
+            if self._stalls > _MAX_DECODE_STALLS:
+                raise OutOfPages(
+                    f"{self.device.key}: {len(batch)} sequence(s) stalled "
+                    f"{self._stalls} consecutive steps waiting for pages — "
+                    "the pool cannot hold this working set")
+            time.sleep(0.002)  # wait for a sibling/finisher to free pages
+            return
+        self._stalls = 0
+        batch = ready
+        seqs = [r.seq for r in batch]
+        tbl, lens = kv.table(seqs, eng.max_pages)
+        tokens = np.asarray([r.out[-1] for r in batch], np.int32)
+        # Shape reuse (see class docstring): pad to the nearest warm row
+        # count when that costs less than doubling the batch, else
+        # compile this exact count and make it warm.
+        b_real = len(batch)
+        cand = min((w for w in self._warm if w >= b_real), default=None)
+        want = cand if cand is not None and cand - b_real <= b_real else b_real
+        self._warm.add(want)
+        pad = want - b_real
+        if pad:
+            tbl = np.concatenate([tbl, np.repeat(tbl[-1:], pad, axis=0)])
+            lens = np.concatenate([lens, np.repeat(lens[-1:], pad)])
+            tokens = np.concatenate([tokens, np.repeat(tokens[-1:], pad)])
+        pool = kv.pool_of(self.device)
+        with pool.lock:
+            ks, vs = pool.arrays()
+            # Host operands ride the call uncommitted: the computation
+            # follows the committed slabs to this lane's device, and the
+            # C++ dispatch path moves four tiny arrays faster than four
+            # python-level device_put round-trips would.
+            k2, v2, nxt = eng.decode_fn(ks, vs, tokens, lens, tbl, lens)
+            nxt = np.asarray(nxt, np.int32)  # sync before the slabs swap
+            pool.set_arrays(k2, v2)
+        done: "list[_PagedRequest]" = []
+        for i, r in enumerate(batch):
+            kv.note_decoded(r.seq)
+            r.out.append(int(nxt[i]))
+            if len(r.out) >= r.max_new:
+                done.append(r)
+        step_s = _now() - t0
+        # Direct-route placement charge (the fix select_batch alone cannot
+        # make): this step never touched a lane queue, so the recency
+        # counter is the only signal least_loaded has that this device
+        # just did len(batch) rows of work.
+        sched = eng._scheduler_for()
+        charge = getattr(sched, "charge", None)
+        if callable(charge):
+            charge(self.device, len(batch))
+        with eng._m_lock:
+            eng._decode_steps += 1
+            eng._decode_rows += len(batch)
+            eng._decode_padded += pad
+            eng._token_lat.extend([step_s] * len(batch))
+        with self._cv:
+            for r in done:
+                self._active.remove(r)
+            # Rotate survivors to the tail so an active set larger than
+            # max_batch round-robins instead of starving the overflow.
+            if len(self._active) > len(batch) - len(done):
+                for r in batch:
+                    if r in self._active:
+                        self._active.remove(r)
+                        self._active.append(r)
+        for r in done:
+            eng._finish(r)
+        self._steps += 1
+        if self._steps % eng.rebalance_every == 0:
+            self._maybe_rebalance([r for r in batch if r not in done])
+
+    def _maybe_rebalance(self, batch: "list[_PagedRequest]") -> None:
+        """Ask the placement layer whether this lane's sequences still
+        belong here: ``select_batch`` over the ``SeqPages`` handles keeps
+        them home under affinity (the bytes ARE here) — unless memory
+        pressure vetoes the device, in which case the coldest sequence
+        migrates (one coalesced page move) to the chosen sibling.
+
+        Gated on page pressure: with >=20% of the pool free there is
+        nothing to rebalance away from, and under a pure load policy
+        (``least_loaded`` scores this lane's own just-charged work)
+        asking anyway ping-pongs sequences between lanes — each move a
+        page gather + scatter — for no memory relief at all."""
+        if not batch:
+            return
+        eng = self.engine
+        pool = eng.kv.pool_of(self.device)
+        if pool.num_free * 5 >= pool.num_pages:
+            return
+        sched = eng._scheduler_for()
+        try:
+            dev = sched.select_batch([[r.seq] for r in batch])
+        except Exception:  # noqa: BLE001 - advisory; never fail decode
+            return
+        if dev.key == self.device.key or dev.key not in eng.kv.pools:
+            return
+        victim = min(batch, key=lambda r: r.seq._last_use)
+        eng.kv.migrate(victim.seq, dev)
+        with self._cv:
+            self._active.remove(victim)
+        with eng._m_lock:
+            eng._migrations += 1
+        eng._lane_for(dev).admit(victim)

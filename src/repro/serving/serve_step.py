@@ -111,7 +111,15 @@ def route_batches(fn, batches, scheduler=None, percolate: bool = True, cluster=N
 
 def cache_to_rows(cache, batch_axis: int = 1):
     """Model-layout KV cache -> engine request layout (batch axis moved to
-    the FRONT of every leaf, where ``RequestEngine`` concatenates)."""
+    the FRONT of every leaf, where ``RequestEngine`` concatenates).
+
+    Dtype-preserving end to end, bf16/fp16 included: the engine keys and
+    re-materializes leaves by ``np.dtype`` *instance* (not the char code,
+    which ml_dtypes types lack), so a sub-fp32 cache round-trips through
+    submit → batch → slice bit-identically.  The paged serving path
+    (``repro.serving.paged``) does NOT go through these adapters at all —
+    its KV never leaves the device as whole-cache rows; only page tables
+    and tokens travel."""
     return jax.tree_util.tree_map(lambda a: jnp.moveaxis(a, batch_axis, 0), cache)
 
 
