@@ -70,6 +70,8 @@ Env knobs: ``REPRO_PAGE_SIZE`` (tokens per page, default 16),
 """
 from __future__ import annotations
 
+import concurrent.futures as _cf
+import contextlib
 import functools
 import os
 import threading
@@ -514,31 +516,53 @@ class PagedKVCache:
     def defrag(self, device) -> int:
         """Compact a pool: live pages move to the lowest slots (stable
         order), sequence tables are rewritten, the free list becomes the
-        contiguous tail.  Returns the number of pages that moved.  The
-        caller must quiesce the pool (the engine defrags between decode
-        steps); sequences mid-``spill`` hold the pool lock, so the
-        compaction serializes against them."""
+        contiguous tail.  Returns the number of pages that moved.
+
+        Lock discipline: every holder's ``seq._lock`` is acquired FIRST
+        (in ``seq_id`` order) and only then the pool lock — the same
+        seq-then-pool order spill/migrate/append/decode use, so the
+        compaction serializes against an in-flight spill or decode step
+        instead of deadlocking with it (pool-then-seq here would be the
+        classic ABBA).  The free list is rebuilt from the locked holders'
+        pages, so if the holder set changed while the locks were being
+        collected (a raced-in ``new_seq``/``migrate`` allocated pages the
+        pass cannot see), everything is released and the pass retries;
+        after a few contended passes it returns 0 — defrag is
+        maintenance, not a correctness gate."""
         pool = self.pool_of(device)
-        with pool.lock:
+        moved = 0
+        for _ in range(8):
             with self._seq_lock:
-                holders = [s for s in self._seqs.values()
-                           if s.pool is pool and s.pages]
-            live: "list[int]" = []
-            for s in holders:
-                live.extend(s.pages)
-            mapping = {old: new for new, old in enumerate(sorted(live), start=1)}
-            moved = sum(1 for old, new in mapping.items() if old != new)
-            if moved:
-                order = np.arange(pool.num_pages, dtype=np.int32)
-                for old, new in mapping.items():
-                    order[new] = old
-                ks, vs = pool.arrays()
-                pool.set_arrays(ks[:, order], vs[:, order])
+                holders = sorted(
+                    (s for s in self._seqs.values() if s.pool is pool),
+                    key=lambda s: s.seq_id)
+            with contextlib.ExitStack() as stack:
                 for s in holders:
-                    with s._lock:
-                        s.pages = [mapping[p] for p in s.pages]
-            pool._free = list(range(pool.num_pages - 1, len(live), -1))
-        return moved
+                    stack.enter_context(s._lock)
+                with pool.lock:
+                    with self._seq_lock:
+                        current = [s for s in self._seqs.values()
+                                   if s.pool is pool]
+                    if any(s not in holders for s in current):
+                        continue  # unlocked holder raced in — retry
+                    holders = [s for s in holders if s.pool is pool and s.pages]
+                    live: "list[int]" = []
+                    for s in holders:
+                        live.extend(s.pages)
+                    mapping = {old: new
+                               for new, old in enumerate(sorted(live), start=1)}
+                    moved = sum(1 for old, new in mapping.items() if old != new)
+                    if moved:
+                        order = np.arange(pool.num_pages, dtype=np.int32)
+                        for old, new in mapping.items():
+                            order[new] = old
+                        ks, vs = pool.arrays()
+                        pool.set_arrays(ks[:, order], vs[:, order])
+                        for s in holders:
+                            s.pages = [mapping[p] for p in s.pages]
+                    pool._free = list(range(pool.num_pages - 1, len(live), -1))
+                    return moved
+        return 0
 
     def migrate(self, seq: SeqPages, device) -> None:
         """Re-home a sequence: ALL its pages leave the source slabs as one
@@ -578,7 +602,7 @@ class PagedKVCache:
 
 class _PagedRequest:
     __slots__ = ("tokens", "max_new", "promise", "arrived", "seq", "out",
-                 "started", "first_token_s")
+                 "started", "first_token_s", "handed_off")
 
     def __init__(self, tokens, max_new, promise, arrived):
         self.tokens = tokens
@@ -589,6 +613,12 @@ class _PagedRequest:
         self.out: "list[int]" = []
         self.started = arrived
         self.first_token_s: "float | None" = None
+        # True once prefill is done with the request — settled or admitted
+        # to a decode lane.  A prefill-batch failure must fail only the
+        # requests still owned by prefill: settling an already-admitted
+        # request's promise again would raise InvalidStateError out of
+        # whichever lane thread finishes it.
+        self.handed_off = False
 
 
 class PagedServeEngine:
@@ -637,6 +667,10 @@ class PagedServeEngine:
 
         self._cv = threading.Condition()
         self._queue: "list[_PagedRequest]" = []
+        # Requests popped from the queue but not yet admitted/settled:
+        # without this, drain() sees an idle engine while a prefill batch
+        # is mid-flight (counted by neither the queue nor any lane).
+        self._inflight = 0
         self._closed = False
 
         # Per-device decode lanes: inbox + thread, created on first use.
@@ -725,10 +759,11 @@ class PagedServeEngine:
             lane.close()
 
     def drain(self) -> None:
-        """Block until every admitted sequence has finished decoding."""
+        """Block until every submitted sequence has finished: nothing
+        queued, nothing mid-prefill, nothing active on a decode lane."""
         while True:
             with self._cv:
-                queued = len(self._queue)
+                queued = len(self._queue) + self._inflight
             with self._lane_lock:
                 active = sum(lane.active_count() for lane in self._lanes.values())
             if not queued and not active:
@@ -753,10 +788,16 @@ class PagedServeEngine:
                 if not self._queue:
                     return
                 head = self._queue[0]
-                deadline = head.arrived + (pol.max_delay_s or 0.004)
+                # `x if x is not None else d`, never `x or d`: an explicit
+                # 0.0 deadline / 0 budget is a real policy (dispatch now),
+                # matching RequestEngine._lane_bounds.
+                delay = pol.max_delay_s if pol.max_delay_s is not None else 0.004
+                deadline = head.arrived + delay
                 T = head.tokens.size
-                budget_rows = max(1, (pol.token_budget or 1 << 30) // max(T, 1))
-                cap = min(pol.max_batch or 8, budget_rows)
+                budget = pol.token_budget if pol.token_budget is not None else 1 << 30
+                budget_rows = max(1, budget // max(T, 1))
+                cap = min(pol.max_batch if pol.max_batch is not None else 8,
+                          budget_rows)
                 while (not self._closed and _now() < deadline
                        and sum(1 for r in self._queue if r.tokens.size == T) < cap):
                     self._cv.wait(timeout=max(deadline - _now(), 0.0005))
@@ -767,14 +808,20 @@ class PagedServeEngine:
                     else:
                         kept.append(r)
                 self._queue[:] = kept
+                self._inflight += len(group)
             if group:
                 try:
                     self._run_prefill(group)
                 except BaseException as e:  # noqa: BLE001 - lane must not die
+                    # Fail only the requests prefill still owns: members
+                    # already admitted to a decode lane (or settled) must
+                    # not be settled twice, and a failed member's pages
+                    # must go back to the pool.
                     for r in group:
-                        r.promise.set_exception(e)
-                    with self._m_lock:
-                        self._failed += len(group)
+                        if r.handed_off:
+                            continue
+                        self._finish(r, e)
+                        self._prefill_done(r)
 
     def _run_prefill(self, group: "list[_PagedRequest]") -> None:
         T = group[0].tokens.size
@@ -802,6 +849,15 @@ class PagedServeEngine:
                 self._finish(req)
             else:
                 self._lane_for(pool.device).admit(req)
+            self._prefill_done(req)
+
+    def _prefill_done(self, req: "_PagedRequest") -> None:
+        """Prefill is done with this request (admitted or settled): mark
+        it so a later batch failure cannot settle it twice, and release
+        its in-flight slot for ``drain``."""
+        req.handed_off = True
+        with self._cv:
+            self._inflight -= 1
 
     def _pool_with_room(self, dev, need_pages: int) -> PagePool:
         """The chosen device's pool if it has room, else spill its LRU
@@ -836,12 +892,23 @@ class PagedServeEngine:
         if req.seq is not None:
             self.kv.free_seq(req.seq)
             req.seq = None
+        # An already-settled promise is absorbed, not raised: double
+        # settlement can only mean two completion paths raced (e.g. a
+        # prefill-batch failure vs. a lane that already admitted the
+        # request), and a lane thread dying here would hang every other
+        # active sequence's future forever.
         if exc is not None:
-            req.promise.set_exception(exc)
+            try:
+                req.promise.set_exception(exc)
+            except _cf.InvalidStateError:
+                return
             with self._m_lock:
                 self._failed += 1
             return
-        req.promise.set_value(np.asarray(req.out, np.int32))
+        try:
+            req.promise.set_value(np.asarray(req.out, np.int32))
+        except _cf.InvalidStateError:
+            return
         with self._m_lock:
             self._completed += 1
             self._seq_lat.append(_now() - req.arrived)
@@ -958,8 +1025,11 @@ class _DecodeLane:
                     self._cv.wait(timeout=0.05)
                     continue
                 if not self._active and self._inbox:
-                    # Idle lane: give the batch one deadline window to fill.
-                    deadline = _now() + (pol.max_delay_s or 0.001)
+                    # Idle lane: give the batch one deadline window to
+                    # fill (an explicit 0.0 means dispatch immediately —
+                    # `is not None`, matching RequestEngine._lane_bounds).
+                    delay = pol.max_delay_s if pol.max_delay_s is not None else 0.001
+                    deadline = _now() + delay
                     while not self._closed and _now() < deadline:
                         self._cv.wait(timeout=max(deadline - _now(), 0.0005))
                 self._active.extend(self._inbox)
@@ -969,7 +1039,8 @@ class _DecodeLane:
                 # and putting it ahead of resident work would let one
                 # unfittable sequence stall the whole lane.
                 self._active.sort(key=lambda r: r.seq.spilled)
-                batch = self._active[: (pol.max_batch or 64)]
+                cap = pol.max_batch if pol.max_batch is not None else 64
+                batch = self._active[:cap]
             if not batch:
                 continue
             try:
@@ -991,56 +1062,77 @@ class _DecodeLane:
         # deferred — it stays active and retries as finishing sequences
         # free pages — rather than failed or force-spilling a batchmate
         # (which would thrash the same pool within one step).
-        ready: "list[_PagedRequest]" = []
-        for r in batch:
-            try:
-                r.seq.ensure_resident()
-                kv.ensure_slot(r.seq)
-                ready.append(r)
-            except OutOfPages:
-                continue
-        if not ready:
-            self._stalls += 1
-            if self._stalls > _MAX_DECODE_STALLS:
-                raise OutOfPages(
-                    f"{self.device.key}: {len(batch)} sequence(s) stalled "
-                    f"{self._stalls} consecutive steps waiting for pages — "
-                    "the pool cannot hold this working set")
-            time.sleep(0.002)  # wait for a sibling/finisher to free pages
-            return
-        self._stalls = 0
-        batch = ready
-        seqs = [r.seq for r in batch]
-        tbl, lens = kv.table(seqs, eng.max_pages)
-        tokens = np.asarray([r.out[-1] for r in batch], np.int32)
-        # Shape reuse (see class docstring): pad to the nearest warm row
-        # count when that costs less than doubling the batch, else
-        # compile this exact count and make it warm.
-        b_real = len(batch)
-        cand = min((w for w in self._warm if w >= b_real), default=None)
-        want = cand if cand is not None and cand - b_real <= b_real else b_real
-        self._warm.add(want)
-        pad = want - b_real
-        if pad:
-            tbl = np.concatenate([tbl, np.repeat(tbl[-1:], pad, axis=0)])
-            lens = np.concatenate([lens, np.repeat(lens[-1:], pad)])
-            tokens = np.concatenate([tokens, np.repeat(tokens[-1:], pad)])
-        pool = kv.pool_of(self.device)
-        with pool.lock:
-            ks, vs = pool.arrays()
-            # Host operands ride the call uncommitted: the computation
-            # follows the committed slabs to this lane's device, and the
-            # C++ dispatch path moves four tiny arrays faster than four
-            # python-level device_put round-trips would.
-            k2, v2, nxt = eng.decode_fn(ks, vs, tokens, lens, tbl, lens)
-            nxt = np.asarray(nxt, np.int32)  # sync before the slabs swap
-            pool.set_arrays(k2, v2)
+        #
+        # Every ready sequence's _lock is held from ensure_resident
+        # through decode_fn and note_decoded, acquired in seq_id order
+        # (the same order defrag uses).  The spiller's _spill_now and
+        # defrag's compaction both take seq._lock first, so a batch
+        # member's pages can be neither freed (and re-owned by a racing
+        # prefill) nor renumbered between the page-table snapshot and
+        # the scatter of the new token — without the pin, decode would
+        # silently attend over another sequence's KV under pool
+        # pressure, exactly the regime paging exists for.
         done: "list[_PagedRequest]" = []
-        for i, r in enumerate(batch):
-            kv.note_decoded(r.seq)
-            r.out.append(int(nxt[i]))
-            if len(r.out) >= r.max_new:
-                done.append(r)
+        held: "list[SeqPages]" = []
+        ok: "set[int]" = set()
+        try:
+            for r in sorted(batch, key=lambda q: q.seq.seq_id):
+                s = r.seq
+                s._lock.acquire()
+                held.append(s)
+                try:
+                    s.ensure_resident()
+                    kv.ensure_slot(s)
+                except OutOfPages:
+                    held.pop()
+                    s._lock.release()
+                    continue
+                ok.add(s.seq_id)
+            ready = [r for r in batch if r.seq.seq_id in ok]
+            if not ready:
+                self._stalls += 1
+                if self._stalls > _MAX_DECODE_STALLS:
+                    raise OutOfPages(
+                        f"{self.device.key}: {len(batch)} sequence(s) stalled "
+                        f"{self._stalls} consecutive steps waiting for pages — "
+                        "the pool cannot hold this working set")
+                time.sleep(0.002)  # wait for a sibling/finisher to free pages
+                return
+            self._stalls = 0
+            batch = ready
+            seqs = [r.seq for r in batch]
+            tbl, lens = kv.table(seqs, eng.max_pages)
+            tokens = np.asarray([r.out[-1] for r in batch], np.int32)
+            # Shape reuse (see class docstring): pad to the nearest warm row
+            # count when that costs less than doubling the batch, else
+            # compile this exact count and make it warm.
+            b_real = len(batch)
+            cand = min((w for w in self._warm if w >= b_real), default=None)
+            want = cand if cand is not None and cand - b_real <= b_real else b_real
+            self._warm.add(want)
+            pad = want - b_real
+            if pad:
+                tbl = np.concatenate([tbl, np.repeat(tbl[-1:], pad, axis=0)])
+                lens = np.concatenate([lens, np.repeat(lens[-1:], pad)])
+                tokens = np.concatenate([tokens, np.repeat(tokens[-1:], pad)])
+            pool = kv.pool_of(self.device)
+            with pool.lock:
+                ks, vs = pool.arrays()
+                # Host operands ride the call uncommitted: the computation
+                # follows the committed slabs to this lane's device, and the
+                # C++ dispatch path moves four tiny arrays faster than four
+                # python-level device_put round-trips would.
+                k2, v2, nxt = eng.decode_fn(ks, vs, tokens, lens, tbl, lens)
+                nxt = np.asarray(nxt, np.int32)  # sync before the slabs swap
+                pool.set_arrays(k2, v2)
+            for i, r in enumerate(batch):
+                kv.note_decoded(r.seq)
+                r.out.append(int(nxt[i]))
+                if len(r.out) >= r.max_new:
+                    done.append(r)
+        finally:
+            for s in held:
+                s._lock.release()
         step_s = _now() - t0
         # Direct-route placement charge (the fix select_batch alone cannot
         # make): this step never touched a lane queue, so the recency

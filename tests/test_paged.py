@@ -9,6 +9,7 @@ import os
 import subprocess
 import sys
 import textwrap
+import threading
 import time
 
 import numpy as np
@@ -246,6 +247,12 @@ def test_defrag_compacts_and_preserves_contents(device):
     for sid, seq in ((1, seqs[1]), (3, seqs[3])):
         np.testing.assert_array_equal(_seq_tokens(kv, seq), np.arange(4) + sid * 1000.0)
     assert kv.defrag(device) == 0  # idempotent once compact
+    # Free explicitly: SeqPages <-> kv._seqs is a reference cycle, so a
+    # leaked live sequence's AGAS registration survives until the cyclic
+    # GC runs — nondeterministically mid-way through a LATER test's
+    # resident-bytes accounting.
+    kv.free_seq(seqs[1])
+    kv.free_seq(seqs[3])
 
 
 # ---------------------------------------------------------------------------
@@ -480,6 +487,192 @@ def test_paged_engine_admission_guards(device):
             eng.submit(np.ones((12,), np.int32), 8)
     finally:
         eng.close()
+
+
+# ---------------------------------------------------------------------------
+# concurrency: decode/spill/defrag races, partial prefill failure, policy zeros
+# ---------------------------------------------------------------------------
+
+
+def test_spill_serializes_against_held_seq_lock(device):
+    """A decode step holds the sequence's lock through the kernel call;
+    a racing spill must wait for it, never free the pages mid-step."""
+    spec = _spec(P=2)
+    kv = PagedKVCache(spec, devices=[device], pool_pages=16)
+    seq = kv.new_seq(device)
+    kv.append(seq, *_fill(spec, 1, 4))
+    seq._lock.acquire()  # simulate an in-flight decode step pinning the seq
+    try:
+        f = seq.spill()
+        time.sleep(0.05)
+        assert not f.done()  # blocked on the seq lock
+        assert seq.pages and not seq.spilled  # pages untouched mid-step
+    finally:
+        seq._lock.release()
+    assert f.get(timeout=30) is True  # spill proceeds once the step ends
+    assert seq.spilled
+    kv.free_seq(seq)
+
+
+def test_paged_engine_exact_tokens_under_spill_pressure(device):
+    """Hammer the decode lanes with a concurrent spiller (the regime where
+    an unpinned sequence's pages could be freed and re-owned mid-step):
+    every generated token must still be exact."""
+    V, P = 64, 4
+    prefill_fn, decode_fn = _toy_paged_model(V=V, P=P)
+    kv = PagedKVCache(PageSpec(1, P, 1, 4), devices=[device], pool_pages=64)
+    eng = PagedServeEngine(kv, prefill_fn, decode_fn, max_seq_len=32,
+                           scheduler=Scheduler([device]), name="t-spillrace")
+    stop = threading.Event()
+
+    def spiller():
+        while not stop.is_set():
+            with kv._seq_lock:
+                seqs = list(kv._seqs.values())
+            for s in seqs:
+                try:
+                    s.spill().get(timeout=30)
+                except Exception:  # noqa: BLE001 - freed mid-flight is fine
+                    pass
+            time.sleep(0.001)
+
+    th = threading.Thread(target=spiller, daemon=True)
+    th.start()
+    rng = np.random.default_rng(7)
+    try:
+        futs = []
+        for _ in range(8):
+            plen = int(rng.integers(1, 9))
+            prompt = rng.integers(0, V - 16, size=plen).astype(np.int32)
+            futs.append((prompt, eng.submit(prompt, max_new_tokens=6)))
+        for prompt, f in futs:
+            out = f.get(timeout=120)
+            want = [(int(prompt[-1]) + 1 + j) % V for j in range(6)]
+            assert list(out) == want
+    finally:
+        stop.set()
+        th.join(timeout=30)
+        eng.close()
+    assert kv.pools[device.key].used_pages == 0
+
+
+def test_defrag_no_deadlock_with_concurrent_spillers(device):
+    """defrag takes seq locks before the pool lock (same order as spill);
+    the old pool-then-seq order was an ABBA deadlock against _spill_now."""
+    spec = _spec(P=2)
+    kv = PagedKVCache(spec, devices=[device], pool_pages=32)
+    seqs = []
+    for sid in range(6):
+        seq = kv.new_seq(device)
+        kv.append(seq, *_fill(spec, sid, 4))
+        seqs.append(seq)
+    stop = threading.Event()
+
+    def churner(offset):
+        i = offset
+        while not stop.is_set():
+            s = seqs[i % len(seqs)]
+            try:
+                s._spill_now()          # seq._lock -> pool.lock
+                s.ensure_resident()     # seq._lock -> pool.lock
+            except OutOfPages:
+                pass
+            i += 1
+
+    threads = [threading.Thread(target=churner, args=(i,), daemon=True)
+               for i in range(2)]
+    for t in threads:
+        t.start()
+
+    def defragger():
+        for _ in range(50):
+            kv.defrag(device)
+
+    d = threading.Thread(target=defragger, daemon=True)
+    d.start()
+    d.join(timeout=60)
+    deadlocked = d.is_alive()
+    stop.set()
+    for t in threads:
+        t.join(timeout=30)
+    assert not deadlocked, "defrag deadlocked against concurrent spill"
+    for sid, seq in enumerate(seqs):
+        seq.ensure_resident()
+        np.testing.assert_array_equal(_seq_tokens(kv, seq), np.arange(4) + sid * 1000.0)
+    _check_invariants(kv)
+    for seq in seqs:
+        kv.free_seq(seq)
+
+
+def test_prefill_partial_failure_fails_only_unadmitted(device):
+    """A mid-group prefill failure must fail only the requests prefill
+    still owns: already-admitted members finish normally, the lane thread
+    survives (no double settlement), drain() returns, no page leaks."""
+    V, P = 64, 4
+    prefill_fn, decode_fn = _toy_paged_model(V=V, P=P)
+    kv = PagedKVCache(PageSpec(1, P, 1, 4), devices=[device], pool_pages=64)
+    eng = PagedServeEngine(
+        kv, prefill_fn, decode_fn, max_seq_len=32,
+        scheduler=Scheduler([device]),
+        prefill=LanePolicy(max_batch=8, max_delay_s=0.25, token_budget=4096),
+        name="t-partial")
+    orig = eng._pool_with_room
+    calls = {"n": 0}
+
+    def flaky(dev, need_pages):
+        calls["n"] += 1
+        if calls["n"] == 3:
+            raise OutOfPages("injected mid-group failure")
+        return orig(dev, need_pages)
+
+    eng._pool_with_room = flaky
+    try:
+        prompts = [np.arange(4, dtype=np.int32) + i for i in range(4)]
+        futs = [eng.submit(p, max_new_tokens=4) for p in prompts]
+        for i in (0, 1):  # admitted before the failure: complete exactly
+            out = futs[i].get(timeout=120)
+            want = [(int(prompts[i][-1]) + 1 + j) % V for j in range(4)]
+            assert list(out) == want
+        for i in (2, 3):  # owned by prefill at the failure: fail cleanly
+            with pytest.raises(OutOfPages, match="injected"):
+                futs[i].get(timeout=120)
+        eng.drain()  # in-flight accounting survives the failure path
+        eng._pool_with_room = orig
+        # The prefill thread and the decode lane are still alive.
+        out = eng.submit(np.arange(4, dtype=np.int32), 3).get(timeout=120)
+        assert list(out) == [(3 + 1 + j) % V for j in range(3)]
+        m = eng.metrics()
+    finally:
+        eng.close()
+    assert m["requests_failed"] == 2
+    assert m["requests_completed"] == 3
+    assert kv.pools[device.key].used_pages == 0
+
+
+def test_lane_policy_explicit_zero_not_treated_as_unset(device):
+    """LanePolicy(token_budget=0) / max_delay_s=0.0 are real bounds, not
+    'inherit the default' (matching RequestEngine._lane_bounds)."""
+    V, P = 64, 4
+    prefill_fn, decode_fn = _toy_paged_model(V=V, P=P)
+    kv = PagedKVCache(PageSpec(1, P, 1, 4), devices=[device], pool_pages=64)
+    eng = PagedServeEngine(
+        kv, prefill_fn, decode_fn, max_seq_len=32,
+        scheduler=Scheduler([device]),
+        prefill=LanePolicy(max_batch=8, max_delay_s=0.05, token_budget=0),
+        decode=LanePolicy(max_batch=64, max_delay_s=0.0),
+        name="t-zero")
+    try:
+        prompts = [np.arange(4, dtype=np.int32) for _ in range(3)]
+        futs = [eng.submit(p, 3) for p in prompts]
+        for p, f in zip(prompts, futs):
+            out = f.get(timeout=120)
+            assert list(out) == [(int(p[-1]) + 1 + j) % V for j in range(3)]
+        m = eng.metrics()
+    finally:
+        eng.close()
+    # token_budget=0 floors at one row per prefill batch; `x or default`
+    # would have read it as unset and batched all three rows together.
+    assert m["prefill_batches"] == 3
 
 
 # ---------------------------------------------------------------------------
