@@ -7,12 +7,14 @@ fig6 multi-device rows (incl. per-policy scheduler rows) to
 ``BENCH_multidevice.json``, the fig7 remote-transport rows (local vs
 loopback vs cluster launch) to ``BENCH_remote.json``, the fig8
 stream-overlap rows (1-stream serialized vs 2-stream double-buffered
-pipeline) to ``BENCH_overlap.json``, and the fig9 serving rows
+pipeline) to ``BENCH_overlap.json``, the fig9 serving rows
 (continuous batching vs per-request serial, 1 and 8 devices) to
-``BENCH_serving.json`` so the native/futurized/graph gap, the
+``BENCH_serving.json``, and the fig10 elastic-training rows (tokens/s at
+1→4 localities, with and without a mid-run worker kill) to
+``BENCH_training.json`` so the native/futurized/graph gap, the
 1→4-device scaling trajectory, the parcel-transport tax, the
-transfer–compute overlap win and the batching throughput win are all
-tracked per-PR.
+transfer–compute overlap win, the batching throughput win and the
+kill-and-recover training property are all tracked per-PR.
 
     PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig3,...]
 """
@@ -33,6 +35,7 @@ MODULES = [
     ("fig7", "benchmarks.fig7_remote"),
     ("fig8", "benchmarks.fig8_overlap"),
     ("fig9", "benchmarks.fig9_serving"),
+    ("fig10", "benchmarks.fig10_training"),
     ("roofline", "benchmarks.roofline_table"),
 ]
 
@@ -87,6 +90,7 @@ def main() -> None:
                 "fig7": "BENCH_remote.json",
                 "fig8": "BENCH_overlap.json",
                 "fig9": "BENCH_serving.json",
+                "fig10": "BENCH_training.json",
             }.get(tag)
             if json_out:
                 payload = {

@@ -13,6 +13,8 @@ target sharding.
 from __future__ import annotations
 
 import json
+import re
+import shutil
 import threading
 import time
 from pathlib import Path
@@ -25,6 +27,11 @@ from repro.core.executor import get_runtime
 from repro.core.futures import Future
 
 _SEP = "/"
+
+# Only fully-published checkpoints look like this; a writer killed
+# mid-save leaves ``step_XXXXXXXX.tmp`` behind, which must never be
+# listed (it may hold a torn npz) and is swept on the next manager.
+_STEP_DIR = re.compile(r"^step_(\d{8})$")
 
 
 def _flatten(tree) -> "dict[str, np.ndarray]":
@@ -53,6 +60,15 @@ class CheckpointManager:
         self._writer = get_runtime().queue(f"ckpt-writer:{directory}")
         self._pending: "Optional[Future]" = None
         self._lock = threading.Lock()
+        self._sweep_torn()
+
+    def _sweep_torn(self) -> None:
+        """Remove staging dirs a killed writer left behind.  Single-writer
+        discipline (one manager per directory) makes this safe: any
+        ``.tmp`` visible to a fresh manager is an orphan, never in-flight."""
+        for d in self.dir.glob("step_*.tmp"):
+            if d.is_dir():
+                shutil.rmtree(d, ignore_errors=True)
 
     # -- save ---------------------------------------------------------------
 
@@ -77,7 +93,9 @@ class CheckpointManager:
             t0 = time.time()
             step_dir = self.dir / f"step_{step:08d}"
             tmp = step_dir.with_suffix(".tmp")
-            tmp.mkdir(parents=True, exist_ok=True)
+            if tmp.exists():  # a crashed writer's leftovers must not leak
+                shutil.rmtree(tmp)  # into the directory we publish
+            tmp.mkdir(parents=True)
             np.savez(tmp / "arrays.npz", **host)
             manifest = {
                 "step": step,
@@ -89,7 +107,9 @@ class CheckpointManager:
                 "written_at": time.time(),
             }
             (tmp / "manifest.json").write_text(json.dumps(manifest))
-            tmp.rename(step_dir)  # atomic publish
+            if step_dir.exists():  # re-save of a restored step
+                shutil.rmtree(step_dir)
+            tmp.rename(step_dir)  # atomic publish: torn state never visible
             self._gc()
             return {"step": step, "seconds": time.time() - t0, "path": str(step_dir)}
 
@@ -115,9 +135,15 @@ class CheckpointManager:
     # -- restore --------------------------------------------------------------
 
     def steps(self) -> "list[int]":
-        return sorted(
-            int(d.name.split("_")[1]) for d in self.dir.glob("step_*") if d.is_dir()
-        )
+        """Fully-published checkpoint steps only: the name filter skips
+        ``.tmp`` staging dirs (a writer killed mid-save must never surface
+        as ``latest_step`` — atomicity is publish-by-rename)."""
+        out = []
+        for d in self.dir.glob("step_*"):
+            m = _STEP_DIR.match(d.name)
+            if m and d.is_dir():
+                out.append(int(m.group(1)))
+        return sorted(out)
 
     def latest_step(self) -> "Optional[int]":
         s = self.steps()

@@ -693,3 +693,6 @@ def reset_runtime() -> None:
 
     _device._on_runtime_reset()
     _scheduler._on_runtime_reset()
+    _elastic = sys.modules.get("repro.training.elastic")
+    if _elastic is not None:  # never import the trainer just to reset it
+        _elastic._on_runtime_reset()

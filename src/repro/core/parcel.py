@@ -71,6 +71,7 @@ import os
 import queue as _queue
 import struct
 import threading
+import time
 import weakref
 from dataclasses import dataclass, field
 from typing import Any, Callable
@@ -780,6 +781,16 @@ class ActionServer:
 
         return dev.ops_queue.submit(_run).get()
 
+    def _do_invoke(self, payload: dict) -> Any:
+        """Named-function RPC: resolve ``fn`` exactly like a kernel
+        reference (``register_kernel`` entry, ``repro.kernels`` registry,
+        or an importable ``"module:attr"``) and call it with the decoded
+        payload value directly — no ``device_put``, so the payload may mix
+        arrays with plain scalars/strings (the elastic trainer's shard-step
+        action ships params + tokens + config knobs in one dict)."""
+        fn = resolve_kernel(payload["fn"])
+        return fn(payload.get("payload"))
+
     def _do_run_segment(self, payload: dict) -> list:
         """Execute one fused-graph segment plan: a sequence of launches by
         kernel name over an SSA environment seeded with the shipped inputs
@@ -860,7 +871,34 @@ class Parcelport:
         self._localities: "list" = []
         self._schedulers: dict = {}
         self._shut = False
+        self._fault_filter: "Callable | None" = None
         _live_ports.add(self)
+
+    # -- fault injection ------------------------------------------------------
+
+    def set_fault_filter(self, fn: "Callable | None") -> None:
+        """Install (or clear, with ``None``) a chaos hook consulted on every
+        outbound parcel: ``fn(locality_id, action) -> None`` passes the
+        parcel through, ``("drop", exc)`` fails it with ``exc`` without
+        sending, ``("delay", seconds)`` sleeps on the sender before the
+        send — FIFO-preserving, because later parcels on the same channel
+        queue behind the delay.  Installed by ``repro.fault.inject``; the
+        transport itself stays deterministic."""
+        self._fault_filter = fn
+
+    def _fault_verdict(self, locality_id: int, action: str):
+        """None to proceed, or the exception an injected drop fails with.
+        Injected delays are served here (on the sending thread)."""
+        fn = self._fault_filter
+        if fn is None:
+            return None
+        verdict = fn(locality_id, action)
+        if verdict is None:
+            return None
+        if verdict[0] == "delay":
+            time.sleep(float(verdict[1]))
+            return None
+        return verdict[1]  # ("drop", exc)
 
     # -- transport surface (implemented by subclasses) ----------------------
 
@@ -950,6 +988,7 @@ class LoopbackParcelport(Parcelport):
         self._servers: "dict[int, ActionServer]" = {}
         self._queues: dict = {}
         self._pid = itertools.count(1)
+        self._dead: "set[int]" = set()
         for _ in range(n_localities):
             lid = _next_locality_id()
             self._servers[lid] = ActionServer(lid)
@@ -964,6 +1003,13 @@ class LoopbackParcelport(Parcelport):
         server = self._servers.get(locality_id)
         if server is None:
             return Future.failed(KeyError(f"no locality L{locality_id} on this parcelport"))
+        if locality_id in self._dead:
+            return Future.failed(RuntimeError(
+                f"parcel {action!r} to locality L{locality_id} failed fast: "
+                "locality killed (fault injection); it is excluded from placement"))
+        exc = self._fault_verdict(locality_id, action)
+        if exc is not None:
+            return Future.failed(exc)
         blob = encode_parcel(Parcel(action, payload, next(self._pid), locality_id))
 
         def _serve():
@@ -978,6 +1024,23 @@ class LoopbackParcelport(Parcelport):
             return rep.payload.get("value")
 
         return self._queues[locality_id].submit(_serve)
+
+    def alive(self, locality_id: int) -> bool:
+        return (
+            not self._shut
+            and locality_id in self._servers
+            and locality_id not in self._dead
+        )
+
+    def kill(self, locality_id: int) -> None:
+        """Simulate worker death on an in-process fleet: subsequent parcels
+        fail fast and ``alive()`` reads False until ``revive`` — the chaos
+        analogue of a cluster worker's process exit."""
+        self._dead.add(locality_id)
+
+    def revive(self, locality_id: int) -> None:
+        """Re-admit a killed locality (the recovered-worker path)."""
+        self._dead.discard(locality_id)
 
     def shutdown(self) -> None:
         if self._shut:
@@ -1348,6 +1411,9 @@ class LocalClusterParcelport(Parcelport):
         w = self._workers.get(locality_id)
         if w is None:
             return Future.failed(KeyError(f"no locality L{locality_id} on parcelport {self.name!r}"))
+        exc = self._fault_verdict(locality_id, action)
+        if exc is not None:
+            return Future.failed(exc)
         pid = next(self._pid)
         promise: Promise = Promise(name=f"parcel:{action}:L{locality_id}")
         with w.lock:
@@ -1383,6 +1449,10 @@ class LocalClusterParcelport(Parcelport):
         w = self._workers.get(locality_id)
         if w is None:
             promise.set_exception(KeyError(f"no locality L{locality_id} on parcelport {self.name!r}"))
+            return
+        exc = self._fault_verdict(locality_id, action)
+        if exc is not None:
+            promise.set_exception(exc)
             return
         pid = next(self._pid)
         with w.lock:

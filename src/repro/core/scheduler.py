@@ -465,6 +465,10 @@ class Scheduler:
         self._pumping: "set[str]" = set()
         self._steals = 0
         self._cross_steals = 0
+        # Cordoned devices: excluded from placement like heartbeat-dead
+        # localities, but by explicit request (fault injection / drains)
+        # rather than liveness.  Waived only when it would empty the fleet.
+        self._cordoned: "set[str]" = set()
         # Decayed recent-placement counters (device key -> (count, stamp)):
         # a launch placed a moment ago may not show in the device's lane
         # depth yet (percolating launches enqueue only after their copies
@@ -495,7 +499,22 @@ class Scheduler:
                 "Scheduler has no live devices: every locality in the fleet "
                 "is dead (missed heartbeat or worker exit)"
             )
+        if self._cordoned:
+            open_devs = [d for d in live if d.key not in self._cordoned]
+            if open_devs:  # an all-cordoned fleet waives the cordon
+                return open_devs
         return live
+
+    def cordon(self, device_key: str) -> None:
+        """Exclude ``device_key`` from new placements (drain / fault
+        injection).  Unlike heartbeat death this is an explicit operator
+        decision; in-flight work on the device is untouched."""
+        with self._lock:
+            self._cordoned.add(device_key)
+
+    def uncordon(self, device_key: str) -> None:
+        with self._lock:
+            self._cordoned.discard(device_key)
 
     def _record(self, dev):
         from repro.core import executor

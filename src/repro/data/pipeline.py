@@ -102,3 +102,16 @@ class Pipeline:
         with self._lock:
             first_inflight = self._inflight[0][0] if self._inflight else self.cursor
         return {"cursor": first_inflight}
+
+    def close(self) -> None:
+        """Tear down prefetch: stop issuing and settle every in-flight
+        batch (producer failures are swallowed — the pipeline is going
+        away).  Safe to call more than once; ``get()`` after close raises
+        from the empty deque."""
+        with self._lock:
+            inflight, self._inflight = list(self._inflight), deque()
+        for _, fut in inflight:
+            try:
+                fut.wait()
+            except Exception:  # noqa: BLE001 - teardown is best-effort
+                pass

@@ -42,6 +42,14 @@ class Heartbeat:
         with self._lock:
             self._last = time.monotonic()
 
+    def force_expire(self) -> None:
+        """Backdate the last tick past the deadline so the next ``check()``
+        reads dead — the fault injector's heartbeat-corruption hook
+        (``repro.fault.inject``).  A subsequent ``tick()`` recovers the
+        worker exactly as a real flap would."""
+        with self._lock:
+            self._last = time.monotonic() - 2.0 * self.timeout_s
+
     def check(self) -> bool:
         with self._lock:
             alive = (time.monotonic() - self._last) < self.timeout_s

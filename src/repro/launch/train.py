@@ -5,8 +5,17 @@ overlap, paper Fig. 4), jit'd microbatched train step under the cell's
 sharding rules, async checkpointing (paper Fig. 5), step monitor
 (straggler detection), fail-stop resume.
 
+With ``--workers N`` (N > 1), ``--elastic``, or a parcelport, the driver
+routes through ``repro.training.elastic.ElasticTrainer`` instead: the
+batch is sharded across workers, gradients come back as parcels, and a
+worker death mid-run reshards over the survivors (DESIGN.md §16).
+``--chaos SEED`` arms the fault injector with a deterministic mid-run
+worker kill drawn from SEED — the CI recovery drill.
+
     PYTHONPATH=src python -m repro.launch.train --arch olmo-1b --smoke \
         --steps 20 --batch 8 --seq 64 --ckpt-dir /tmp/ckpt
+    PYTHONPATH=src python -m repro.launch.train --smoke --steps 12 \
+        --workers 4 --chaos 3
 """
 from __future__ import annotations
 
@@ -45,7 +54,31 @@ def train(
     log_every: int = 1,
     seed: int = 0,
     schedule_total: "int | None" = None,
+    workers: int = 1,
+    elastic: bool = False,
+    port=None,
+    chaos: "int | None" = None,
+    grad_compression: bool = False,
 ) -> dict:
+    if elastic or workers > 1 or port is not None:
+        return _train_elastic(
+            arch,
+            use_smoke=use_smoke,
+            steps=steps,
+            batch=batch,
+            seq=seq,
+            lr=lr,
+            ckpt_dir=ckpt_dir,
+            ckpt_every=ckpt_every,
+            resume=resume,
+            log_every=log_every,
+            seed=seed,
+            schedule_total=schedule_total,
+            workers=workers,
+            port=port,
+            chaos=chaos,
+            grad_compression=grad_compression,
+        )
     cfg = smoke_cfg(get_config(arch)) if use_smoke else get_config(arch)
     shape = ShapeConfig("custom", seq_len=seq, global_batch=batch, kind="train")
     plan = plan_for(cfg, shape)
@@ -86,33 +119,43 @@ def train(
 
         losses = []
         ckpt_futs = []
-        for step in range(start_step, steps):
-            t0 = time.time()
-            idx, dev_batch = pipe.get()  # overlapped host->device feed
-            params, opt_state, metrics = jit_step(params, opt_state, dev_batch)
-            loss = float(metrics["loss"])
-            dt = time.time() - t0
-            monitor.record(step, dt)
-            losses.append(loss)
-            if log_every and step % log_every == 0:
-                print(
-                    f"step {step:5d} loss {loss:8.4f} gnorm {float(metrics['gnorm']):7.3f} "
-                    f"lr {float(metrics['lr']):.2e} {dt * 1000:7.1f} ms",
-                    flush=True,
-                )
-            if mgr and ckpt_every and (step + 1) % ckpt_every == 0:
-                # async save (Fig. 5 pattern): training continues while the
-                # writer thread serializes
-                ckpt_futs.append(
-                    mgr.save_async(
-                        step + 1,
-                        (params, opt_state),
-                        extra={"step": step + 1, "cursor": pipe.state()["cursor"]},
+        try:
+            for step in range(start_step, steps):
+                t0 = time.time()
+                idx, dev_batch = pipe.get()  # overlapped host->device feed
+                params, opt_state, metrics = jit_step(params, opt_state, dev_batch)
+                loss = float(metrics["loss"])
+                dt = time.time() - t0
+                monitor.record(step, dt)
+                losses.append(loss)
+                if log_every and step % log_every == 0:
+                    print(
+                        f"step {step:5d} loss {loss:8.4f} gnorm {float(metrics['gnorm']):7.3f} "
+                        f"lr {float(metrics['lr']):.2e} {dt * 1000:7.1f} ms",
+                        flush=True,
                     )
-                )
-
-        if mgr:
-            mgr.wait()
+                if mgr and ckpt_every and (step + 1) % ckpt_every == 0:
+                    # async save (Fig. 5 pattern): training continues while the
+                    # writer thread serializes
+                    ckpt_futs.append(
+                        mgr.save_async(
+                            step + 1,
+                            (params, opt_state),
+                            extra={"step": step + 1, "cursor": pipe.state()["cursor"]},
+                        )
+                    )
+        finally:
+            # Crash safety: a mid-loop failure must not abandon the writer
+            # thread mid-serialization or leave prefetch batches in flight —
+            # settle both before the exception propagates.
+            pipe.close()
+            for f in ckpt_futs:
+                try:
+                    f.wait()
+                except Exception:  # noqa: BLE001 - teardown is best-effort
+                    pass
+            if mgr:
+                mgr.wait()
         return {
             "losses": losses,
             "final_loss": losses[-1] if losses else float("nan"),
@@ -120,6 +163,59 @@ def train(
             "params": params,
             "opt_state": opt_state,
         }
+
+
+def _train_elastic(
+    arch: str,
+    *,
+    use_smoke: bool,
+    steps: int,
+    batch: int,
+    seq: int,
+    lr: float,
+    ckpt_dir: "str | None",
+    ckpt_every: int,
+    resume: bool,
+    log_every: int,
+    seed: int,
+    schedule_total: "int | None",
+    workers: int,
+    port,
+    chaos: "int | None",
+    grad_compression: bool,
+) -> dict:
+    """Elastic data-parallel route (DESIGN.md §16).  ``chaos`` arms a
+    deterministic mid-run worker kill: the run must complete anyway, with
+    the post-kill loss curve bit-identical to a clean survivor-count run
+    from the same state (the property CI drills)."""
+    from repro.fault.inject import FaultInjector
+    from repro.training.elastic import ElasticTrainer
+
+    trainer = ElasticTrainer(
+        arch,
+        use_smoke=use_smoke,
+        batch=batch,
+        seq=seq,
+        lr=lr,
+        seed=seed,
+        workers=workers,
+        port=port,
+        grad_compression=grad_compression,
+        total_steps=schedule_total or steps,
+        ckpt_dir=ckpt_dir,
+        ckpt_every=ckpt_every,
+        resume=resume,
+    )
+    try:
+        if chaos is not None:
+            inj = FaultInjector(seed=int(chaos))
+            kill_after, victim = inj.plan_kill(steps - trainer.cursor, trainer.workers)
+            inj.kill_at_step(victim, trainer.cursor + kill_after)
+        out = trainer.run(max(0, steps - trainer.cursor), log_every=log_every)
+    finally:
+        trainer.close()
+    out["recoveries"] = [e for e in trainer.events if e[0] == "death"]
+    return out
 
 
 def main():
@@ -134,6 +230,12 @@ def main():
     ap.add_argument("--ckpt-every", type=int, default=10)
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--workers", type=int, default=1, help="data-parallel workers (>1 = elastic)")
+    ap.add_argument("--elastic", action="store_true", help="elastic route even with 1 worker")
+    ap.add_argument("--chaos", type=int, default=None, metavar="SEED",
+                    help="arm the fault injector: kill a seeded-random worker mid-run")
+    ap.add_argument("--grad-compression", action="store_true",
+                    help="int8 stochastic-rounding gradient parcels")
     args = ap.parse_args()
 
     out = train(
@@ -147,8 +249,14 @@ def main():
         ckpt_every=args.ckpt_every,
         resume=args.resume,
         seed=args.seed,
+        workers=args.workers,
+        elastic=args.elastic,
+        chaos=args.chaos,
+        grad_compression=args.grad_compression,
     )
     print(f"final loss: {out['final_loss']:.4f}  stragglers: {out['stragglers']}")
+    for ev in out.get("recoveries", []):
+        print(f"recovered: worker {ev[2]} died at step {ev[1]}, resharded over survivors")
 
 
 if __name__ == "__main__":

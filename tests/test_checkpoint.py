@@ -1,5 +1,9 @@
 """Async checkpoint / restore / fail-stop resume tests (paper Fig. 5
-pattern + DESIGN.md §6)."""
+pattern + DESIGN.md §6), including save atomicity under a mid-write
+process kill (publish-by-rename: ``latest_step()`` is never torn)."""
+import subprocess
+import sys
+import textwrap
 import time
 
 import jax
@@ -55,6 +59,59 @@ def test_latest_and_missing(tmp_path):
     assert mgr.latest_step() is None
     with pytest.raises(FileNotFoundError):
         mgr.restore({"a": jnp.zeros(1)})
+
+
+def test_kill_mid_save_never_tears_latest_step(tmp_path):
+    """A writer killed in the middle of ``save_async`` must leave only the
+    previously-published checkpoint visible: the half-written step stays a
+    ``.tmp`` staging dir (never listed, restore never reads it) and the
+    next manager sweeps it."""
+    child = textwrap.dedent(
+        """
+        import os
+        import numpy as np
+        from repro.checkpoint.checkpoint import CheckpointManager
+
+        d = os.environ["CKPT_DIR"]
+        mgr = CheckpointManager(d)
+        state = {"w": np.arange(64, dtype=np.float32)}
+        mgr.save_async(1, state).get()          # durable baseline
+
+        real_savez = np.savez
+        def torn_savez(path, **arrays):          # half the bytes, then die
+            real_savez(path, **arrays)
+            with open(path, "r+b") as f:
+                f.truncate(os.path.getsize(path) // 2)
+            os._exit(42)                         # no atexit, no cleanup
+        np.savez = torn_savez
+        mgr.save_async(2, state).get()
+        """
+    )
+    env = {**__import__("os").environ, "CKPT_DIR": str(tmp_path), "PYTHONPATH": "src"}
+    proc = subprocess.run([sys.executable, "-c", child], env=env, cwd="/root/repo",
+                          capture_output=True, text=True, timeout=240)
+    assert proc.returncode == 42, proc.stderr
+
+    leftovers = sorted(p.name for p in tmp_path.iterdir())
+    assert "step_00000002.tmp" in leftovers  # the kill really was mid-write
+
+    mgr = CheckpointManager(str(tmp_path))  # crash-restart: sweeps the orphan
+    assert mgr.steps() == [1]
+    assert mgr.latest_step() == 1  # never the torn step
+    restored, _ = mgr.restore({"w": np.zeros(64, np.float32)})
+    np.testing.assert_array_equal(restored["w"], np.arange(64, dtype=np.float32))
+    assert not list(tmp_path.glob("*.tmp"))  # orphan swept on construction
+
+
+def test_resave_of_restored_step_replaces_published_dir(tmp_path):
+    """Re-saving a step that already exists (resume at k, checkpoint at k
+    again) atomically replaces the published dir instead of failing."""
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save_async(3, {"x": jnp.zeros(4)}).get()
+    mgr.save_async(3, {"x": jnp.ones(4)}).get()
+    assert mgr.steps() == [3]
+    restored, _ = mgr.restore({"x": jnp.zeros(4)})
+    np.testing.assert_array_equal(np.asarray(restored["x"]), np.ones(4))
 
 
 def test_failstop_resume_is_deterministic(tmp_path):

@@ -1,0 +1,246 @@
+"""Property-based chaos suite for elastic data-parallel training
+(DESIGN.md §16).
+
+The central property, drilled over random (seed, kill-step, victim)
+triples: a worker killed MID-STEP discards that step's partial results,
+the trainer reshards over the survivors, and the loss curve from the
+reshard point is **bit-identical** to a clean (N-1)-worker run seeded
+from the same state — dask-style re-execution from AGAS-resident driver
+state, no checkpoint involved.  Around it: re-join/scale-out resume full
+N-way sharding, dropped gradient parcels retry before a link is declared
+dead, the parcel route leaks neither workers nor shm segments, and the
+checkpoint path remains the (bit-exact) last resort.
+"""
+import glob
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # hypothesis not installed: deterministic fallback shim
+    from _hypothesis_compat import given, settings, strategies as st
+
+from repro.core import agas
+from repro.core.parcel import LoopbackParcelport
+from repro.fault.inject import FaultInjector
+from repro.training.elastic import ElasticTrainer, LocalWorker
+
+# One shard family for the whole file: module-level caches in
+# repro.training.elastic mean compilation is paid once, every further
+# trainer (each property example builds two) replays pre-bound plans.
+ARCH, BATCH, SEQ, TOTAL = "olmo-1b", 6, 8, 5
+
+
+def _trainer(workers=3, seed=0, **kw):
+    kw.setdefault("total_steps", TOTAL)  # one LR horizon -> one jitted update
+    return ElasticTrainer(
+        ARCH, use_smoke=True, batch=BATCH, seq=SEQ, seed=seed, workers=workers, **kw
+    )
+
+
+def _count_dispatches(trainer):
+    """Wrap every worker's run_shard to count shards dispatched per step
+    boundary — the observable for 'resumes N-way sharding'."""
+    counts = {}
+    for w in trainer.workers:
+        orig = w.run_shard
+
+        def wrapped(task, _w=w, _orig=orig):
+            counts[_w.wid] = counts.get(_w.wid, 0) + 1
+            return _orig(task)
+
+        w.run_shard = wrapped
+    return counts
+
+
+# ---------------------------------------------------------------------------
+# THE property: mid-step kill -> bit-identical to a clean N-1 run
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=3, deadline=None)
+@given(seed=st.integers(0, 3), kill_step=st.integers(1, 3), victim=st.integers(0, 2))
+def test_midstep_kill_bit_identical_to_clean_survivor_run(seed, kill_step, victim):
+    t = _trainer(workers=3, seed=seed)
+    try:
+        t.run(kill_step)  # 3-way up to the kill step
+        snap = t.snapshot()  # state AT the kill step (reference seed)
+        t.workers[victim].kill_at_step(t.cursor)  # dies inside its shard
+        tail = t.run(TOTAL - kill_step)["losses"]
+        deaths = [e for e in t.events if e[0] == "death"]
+        assert [(e[1], e[2]) for e in deaths] == [(kill_step, victim)]
+        assert len(t.active_workers()) == 2
+    finally:
+        t.close()
+
+    ref = _trainer(
+        workers=2, seed=seed, state=(snap["params"], snap["opt_state"]),
+        start_step=snap["step"],
+    )
+    try:
+        ref_tail = ref.run(TOTAL - kill_step)["losses"]
+        assert not ref.events  # the reference run saw no faults
+    finally:
+        ref.close()
+    # bit-identical, not approximately equal: same floats, every step
+    assert tail == ref_tail
+    assert np.float64(tail[0]) == np.float64(ref_tail[0])
+
+
+# ---------------------------------------------------------------------------
+# elasticity up: re-join and scale-out resume full sharding
+# ---------------------------------------------------------------------------
+
+
+def test_revived_worker_rejoins_n_way_sharding_at_step_boundary():
+    t = _trainer(workers=3)
+    counts = _count_dispatches(t)
+    try:
+        t.workers[1].kill()  # boundary death: excluded, no mid-step event
+        t.step()
+        assert counts == {0: 1, 2: 1}  # 2-way over survivors
+        t.workers[1].revive()
+        t.step()  # next boundary re-reads the active set
+        assert counts == {0: 2, 1: 1, 2: 2}  # back to 3-way
+        assert len(t.active_workers()) == 3
+        assert not [e for e in t.events if e[0] == "death"]  # no step was lost
+    finally:
+        t.close()
+
+
+def test_add_worker_scales_out_next_step():
+    t = _trainer(workers=2)
+    try:
+        t.step()
+        w = t.add_worker(LocalWorker(7))
+        counts = _count_dispatches(t)
+        t.step()
+        assert counts == {0: 1, 1: 1, 7: 1}  # admitted at the boundary
+        assert ("join", 1, 7) in t.events
+        assert w in t.active_workers()
+    finally:
+        t.close()
+
+
+# ---------------------------------------------------------------------------
+# parcel route: recovery without leaking workers or shm segments
+# ---------------------------------------------------------------------------
+
+
+def test_parcel_route_kill_recovers_and_leaks_nothing():
+    before = set(glob.glob("/dev/shm/psm_*"))
+    port = LoopbackParcelport(n_localities=3)
+    try:
+        t = _trainer(workers=3, seed=1, port=port)
+        try:
+            t.run(1)
+            snap = t.snapshot()
+            t.workers[2].kill_at_step(t.cursor)  # parcel fails fast mid-step
+            tail = t.run(2)["losses"]
+            assert [e[0] for e in t.events].count("death") == 1
+            assert len(t.active_workers()) == 2
+            t.workers[2].revive()  # recovered locality re-admitted
+            t.run(1)
+            assert len(t.active_workers()) == 3
+        finally:
+            t.close()
+        # remote (loopback) gradients match the local route bit-for-bit
+        ref = _trainer(workers=2, seed=1, state=(snap["params"], snap["opt_state"]),
+                       start_step=snap["step"])
+        try:
+            assert tail == ref.run(2)["losses"]
+        finally:
+            ref.close()
+    finally:
+        port.shutdown()
+    leaked = set(glob.glob("/dev/shm/psm_*")) - before
+    assert not leaked, f"shm segments leaked past shutdown: {sorted(leaked)}"
+
+
+def test_dropped_parcels_retry_then_reshard_after_link_death():
+    port = LoopbackParcelport(n_localities=2)
+    try:
+        inj = FaultInjector(seed=0)
+        t = _trainer(workers=2, port=port, max_retries=2)
+        try:
+            lid0 = t.workers[0].lid
+            # one transient drop: re-sent to the SAME worker, not a death
+            inj.drop_parcels(port, actions=["invoke"], localities=[lid0], count=1)
+            t.step()
+            assert [e[0] for e in t.events] == ["retry"]
+            assert len(t.active_workers()) == 2
+            # persistent drops: retries exhaust, link declared dead, reshard
+            inj.drop_parcels(port, actions=["invoke"], localities=[lid0], p=1.0)
+            t.step()
+            kinds = [e[0] for e in t.events]
+            assert kinds.count("retry") == 1 + t.max_retries
+            assert kinds.count("death") == 1
+            assert [w.wid for w in t.active_workers()] == [1]
+        finally:
+            inj.clear_parcel_faults(port)
+            t.close()
+    finally:
+        port.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# driver wiring (--workers/--chaos) and AGAS-resident state
+# ---------------------------------------------------------------------------
+
+
+def test_train_driver_chaos_run_completes_with_recovery():
+    from repro.launch.train import train
+
+    out = train(ARCH, use_smoke=True, steps=4, batch=BATCH, seq=SEQ,
+                workers=3, chaos=2, log_every=0)
+    assert len(out["losses"]) == 4  # the kill cost zero steps
+    assert all(np.isfinite(l) for l in out["losses"])
+    assert len(out["recoveries"]) == 1  # seeded kill fired and was absorbed
+
+
+def test_master_state_is_agas_resident_until_close():
+    t = _trainer(workers=2)
+    gid = t.agas_gid
+    assert gid in agas.registry.gids_on(agas.HOST_KEY, kind="elastic-state")
+    assert agas.registry.resolve(gid) is t
+    t.close()
+    assert gid not in agas.registry.gids_on(agas.HOST_KEY, kind="elastic-state")
+
+
+def test_every_worker_dead_raises_with_resume_hint():
+    t = _trainer(workers=2)
+    try:
+        for w in t.workers:
+            w.kill()
+        with pytest.raises(RuntimeError, match="resume=True"):
+            t.step()
+    finally:
+        t.close()
+
+
+# ---------------------------------------------------------------------------
+# checkpoint restore: the last resort, still bit-exact
+# ---------------------------------------------------------------------------
+
+
+def test_checkpoint_resume_matches_uninterrupted_run(tmp_path):
+    a = _trainer(workers=2, ckpt_dir=str(tmp_path), ckpt_every=1)
+    try:
+        a.run(2)
+    finally:
+        a.close()  # driver "dies" here; durable state is the checkpoint
+
+    b = _trainer(workers=2, ckpt_dir=str(tmp_path), resume=True)
+    try:
+        assert b.cursor == 2
+        resumed = b.run(3)["losses"]
+    finally:
+        b.close()
+
+    c = _trainer(workers=2)  # never interrupted
+    try:
+        full = c.run(TOTAL)["losses"]
+    finally:
+        c.close()
+    assert resumed == full[2:]  # npz round-trip loses no bits

@@ -1,0 +1,268 @@
+"""Unit coverage for the chaos layer itself (``repro.fault.inject``):
+every injector, plus the guarantees injection must NOT break — parcel
+drop/delay preserve channel ordering, a stalled lane is visible to
+``least_loaded`` rather than fatal, heartbeat flaps fire ``on_dead`` once
+per death.  The elastic-training chaos suite (test_elastic_train.py)
+builds on the hooks proven here."""
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.device import get_all_devices
+from repro.core.parcel import LoopbackParcelport
+from repro.core.scheduler import Scheduler
+from repro.fault.inject import FaultInjector, InjectedFault, ParcelDropped
+from repro.fault.monitor import Heartbeat
+
+
+@pytest.fixture
+def port():
+    p = LoopbackParcelport(n_localities=2)
+    yield p
+    p.shutdown()
+
+
+def _lid(port, i=0):
+    return port.localities()[i].process_index
+
+
+# ---------------------------------------------------------------------------
+# parcel drop
+# ---------------------------------------------------------------------------
+
+
+def test_drop_fails_future_with_parcel_dropped(port):
+    inj = FaultInjector(seed=0)
+    inj.drop_parcels(port, actions=["ping"], count=1)
+    lid = _lid(port)
+    with pytest.raises(ParcelDropped):
+        port.call(lid, "ping", {}).get()
+    # count exhausted: the channel works again
+    assert port.call(lid, "ping", {}).get() == "pong"
+    assert [f.kind for f in inj.log] == ["drop"]
+
+
+def test_drop_preserves_ordering_of_surviving_parcels(port):
+    """A dropped write never reaches the wire, so the surviving writes
+    land in submission order — the buffer ends at the LAST surviving
+    write's value, never an earlier one (no reordering artifact)."""
+    lid = _lid(port)
+    dev = port.localities()[0].devices[0]
+    buf = dev.create_buffer_from(np.zeros(4, np.float32)).get()
+    inj = FaultInjector(seed=0)
+    inj.drop_parcels(port, actions=["enqueue_write"], count=1)
+    futs = [buf.enqueue_write(0, np.full(4, float(i), np.float32)) for i in range(1, 6)]
+    outcomes = []
+    for f in futs:
+        try:
+            f.get()
+            outcomes.append("ok")
+        except ParcelDropped:
+            outcomes.append("dropped")
+    assert outcomes.count("dropped") == 1  # exactly the injected one
+    last_ok = max(i for i, o in enumerate(outcomes) if o == "ok") + 1
+    np.testing.assert_array_equal(
+        buf.enqueue_read().get(), np.full(4, float(last_ok), np.float32)
+    )
+    buf.free()
+
+
+def test_drop_filters_by_locality_and_action(port):
+    l0, l1 = _lid(port, 0), _lid(port, 1)
+    inj = FaultInjector(seed=0)
+    inj.drop_parcels(port, actions=["ping"], localities=[l0])
+    with pytest.raises(ParcelDropped):
+        port.call(l0, "ping", {}).get()
+    assert port.call(l1, "ping", {}).get() == "pong"  # other locality untouched
+    assert port.call(l0, "barrier", {}).get() is None  # other action untouched
+    inj.clear_parcel_faults(port)
+    assert port.call(l0, "ping", {}).get() == "pong"
+
+
+def test_probabilistic_drops_replay_identically():
+    """Same seed, same call sequence -> the same parcels drop: a chaos
+    scenario is named by its seed."""
+
+    def scenario(seed):
+        p = LoopbackParcelport(n_localities=1)
+        try:
+            inj = FaultInjector(seed=seed)
+            inj.drop_parcels(p, actions=["ping"], p=0.5)
+            lid = _lid(p)
+            out = []
+            for _ in range(16):
+                try:
+                    p.call(lid, "ping", {}).get()
+                    out.append(1)
+                except ParcelDropped:
+                    out.append(0)
+            return out
+        finally:
+            p.shutdown()
+
+    a, b, c = scenario(3), scenario(3), scenario(4)
+    assert a == b
+    assert 0 < sum(a) < 16  # p=0.5 actually drops some and passes some
+    assert a != c  # a different seed is a different scenario
+
+
+# ---------------------------------------------------------------------------
+# parcel delay
+# ---------------------------------------------------------------------------
+
+
+def test_delay_slows_but_never_reorders(port):
+    """Delay sleeps on the sender BEFORE the send, so later parcels on the
+    channel queue behind it: FIFO holds, the reply just arrives late."""
+    lid = _lid(port)
+    dev = port.localities()[0].devices[0]
+    buf = dev.create_buffer_from(np.zeros(2, np.float32)).get()
+    inj = FaultInjector(seed=0)
+    inj.delay_parcels(port, seconds=0.15, actions=["enqueue_write"], count=1)
+    t0 = time.monotonic()
+    f1 = buf.enqueue_write(0, np.full(2, 1.0, np.float32))  # delayed
+    f2 = buf.enqueue_write(0, np.full(2, 2.0, np.float32))  # queues behind it
+    f1.get()
+    f2.get()
+    assert time.monotonic() - t0 >= 0.15
+    np.testing.assert_array_equal(buf.enqueue_read().get(), np.full(2, 2.0, np.float32))
+    assert [f.kind for f in inj.log] == ["delay"]
+    buf.free()
+
+
+# ---------------------------------------------------------------------------
+# worker kill (loopback transport)
+# ---------------------------------------------------------------------------
+
+
+def test_kill_worker_fails_fast_and_revive_readmits(port):
+    lid = _lid(port)
+    inj = FaultInjector(seed=0)
+    assert port.alive(lid)
+    inj.kill_worker(port, lid)
+    assert not port.alive(lid)
+    with pytest.raises(RuntimeError, match="failed fast"):
+        port.call(lid, "ping", {}).get()
+    assert not port.localities()[0].devices[0].alive()  # scheduler-visible
+    port.revive(lid)
+    assert port.alive(lid)
+    assert port.call(lid, "ping", {}).get() == "pong"
+
+
+# ---------------------------------------------------------------------------
+# lane stall
+# ---------------------------------------------------------------------------
+
+
+def test_stall_lane_visible_to_least_loaded():
+    """A stalled lane is a SLOW device, not a dead one: its queue depth
+    rises, ``least_loaded`` routes around it, and queued work completes
+    once the stall drains."""
+    dev = get_all_devices().get()[0]
+    inj = FaultInjector(seed=0)
+    stall = inj.stall_lane(dev, 0.25)
+    probe = dev.ops_queue.submit(lambda: 42)  # queues behind the stall
+    load = dev.ops_queue.load()
+    assert load.depth >= 1 or load.inflight >= 1
+
+    class _IdleQueue:
+        def load(self):
+            return type(load)(depth=0, inflight=0, busy_for=0.0, busy_time=0.0,
+                              submitted=0, completed=0)
+
+    class _IdleDev:
+        key = "cpu:idle"
+        ops_queue = _IdleQueue()
+
+    from repro.core.scheduler import make_policy
+
+    picked = make_policy("least_loaded").select([dev, _IdleDev()])
+    assert picked.key == "cpu:idle"
+    assert probe.get() == 42  # stalled, not lost
+    stall.get()
+    assert [f.kind for f in inj.log] == ["stall"]
+
+
+# ---------------------------------------------------------------------------
+# scheduler cordon
+# ---------------------------------------------------------------------------
+
+
+def test_cordon_excludes_device_until_uncordon():
+    class _FakeQueue:
+        def load(self):
+            from repro.core.executor import QueueLoad
+
+            return QueueLoad(depth=0, inflight=0, busy_for=0.0, busy_time=0.0,
+                             submitted=0, completed=0)
+
+    class _FakeDev:
+        def __init__(self, key):
+            self.key = key
+            self.ops_queue = _FakeQueue()
+
+    devs = [_FakeDev("cpu:0"), _FakeDev("cpu:1")]
+    sched = Scheduler(devs, policy="round_robin", steal=False)
+    inj = FaultInjector(seed=0)
+    inj.cordon_device(sched, "cpu:1")
+    assert {sched.select().key for _ in range(4)} == {"cpu:0"}
+    # cordoning the whole fleet waives the cordon instead of deadlocking
+    inj.cordon_device(sched, "cpu:0")
+    assert sched.select().key in {"cpu:0", "cpu:1"}
+    inj.uncordon_device(sched, "cpu:0")
+    inj.uncordon_device(sched, "cpu:1")
+    assert {sched.select().key for _ in range(4)} == {"cpu:0", "cpu:1"}
+
+
+# ---------------------------------------------------------------------------
+# heartbeat corruption
+# ---------------------------------------------------------------------------
+
+
+def test_corrupt_heartbeat_fires_on_dead_per_death():
+    deaths = []
+    hb = Heartbeat(timeout_s=60.0, on_dead=lambda: deaths.append(1))
+    inj = FaultInjector(seed=0)
+    hb.tick()
+    assert hb.check()
+    inj.corrupt_heartbeat(hb)
+    assert not hb.check()  # death #1
+    assert not hb.check()  # latched: no double fire
+    assert len(deaths) == 1
+    hb.tick()  # recovery clears the latch
+    assert hb.check()
+    inj.corrupt_heartbeat(hb)  # flap: death #2
+    assert not hb.check()
+    assert len(deaths) == 2
+    assert all(f.kind == "hb_expire" for f in inj.log)
+
+
+# ---------------------------------------------------------------------------
+# scenario planning
+# ---------------------------------------------------------------------------
+
+
+def test_plan_kill_is_deterministic_and_in_range():
+    victims = ["w0", "w1", "w2"]
+    a = FaultInjector(seed=11).plan_kill(10, victims)
+    b = FaultInjector(seed=11).plan_kill(10, victims)
+    assert a == b
+    for seed in range(20):
+        k, v = FaultInjector(seed=seed).plan_kill(10, victims)
+        assert 1 <= k < 10
+        assert v in victims
+    with pytest.raises(ValueError):
+        FaultInjector(seed=0).plan_kill(10, [])
+
+
+def test_injector_log_records_fired_faults_in_order(port):
+    inj = FaultInjector(seed=0)
+    lid = _lid(port)
+    inj.drop_parcels(port, actions=["ping"], count=1)
+    with pytest.raises(ParcelDropped):
+        port.call(lid, "ping", {}).get()
+    inj.delay_parcels(port, seconds=0.01, actions=["ping"], count=1)
+    port.call(lid, "ping", {}).get()
+    assert [(f.kind, f.action) for f in inj.log] == [("drop", "ping"), ("delay", "ping")]
+    assert all(isinstance(f, InjectedFault) for f in inj.log)
