@@ -40,13 +40,21 @@ admission, prefill grouping, page alloc/free, table builds, placement,
 warm-shape reuse, donation — is exercised for real; only the per-row
 device clock is synthetic.
 
+The ``zoo`` rows replace the toys with REAL zoo architectures (smoke'd):
+a dense transformer and an SSM LM served as one fleet through
+``PagedServeEngine.from_config`` (DESIGN.md §17) — multi-layer folded
+pages, resident recurrent state, host-side sampling — under the same
+occupancy model, with 1-device vs 8-device token streams asserted
+bit-identical.
+
 jax fixes the device count at first init, so this benchmark re-execs
 itself in a subprocess with ``--xla_force_host_platform_device_count=8``
 and parses the CSV it prints (the fig6 pattern).  Results land in
 ``BENCH_serving.json`` via ``benchmarks/run.py``; CI asserts the batched
-row beats the serial row, that the paged 8-device fleet meets or beats
-the paged single device on sequences/s, and that its token p99 is inside
-the SLO.
+row beats the serial row and holds >= 0.95x of the 1-device engine's
+requests/s when spread over the fleet, that the paged and zoo 8-device
+fleets meet or beat their single-device rows on sequences/s, and that
+their token p99 is inside the SLO.
 """
 from __future__ import annotations
 
@@ -111,50 +119,67 @@ print(f"CSVROW,fig9/serving_serial_1dev,{best_wall / R * 1e6:.1f},"
       f"p99_ms={pct(best_lats, 0.99) * 1e3:.2f};requests={R}")
 
 # --- batched: concurrent submission through the RequestEngine ----------------
-def engine_pass(sched, name):
+def make_batched(sched, name):
     eng = RequestEngine(step, max_batch=8, max_delay_s=0.002, max_queue=4 * R,
                         scheduler=sched, name=name)
-    try:
-        wait_all([eng.submit(p) for p in payloads])  # warm every bucket route
-        best = None
-        for _ in range(REPS):
-            t0 = time.perf_counter()
-            stamped = []
-            for p in payloads:
-                ts = time.perf_counter()
-                f = eng.submit(p)
-                # client-observed latency: submit -> slice resolution
-                stamped.append(f.then(
-                    lambda v, ts=ts: (time.perf_counter() - ts, v), executor="inline"
-                ))
-            wait_all(stamped)
-            wall = time.perf_counter() - t0
-            if best is None or wall < best[0]:
-                best = (wall, stamped)
-        wall, stamped = best
+    # Warm every bucket route the placement will actually use: jit
+    # caches key on (rows x device); sticky placement pins a stream, so
+    # either the fleet is covered within a few passes (spread policies)
+    # or it never will be (a held home) — 16 passes bounds both.
+    for _ in range(16):
+        wait_all([eng.submit(p) for p in payloads])
+        if len(sched.stats()) >= len(sched.devices()):
+            break
+    return eng
+
+def batched_rep(eng):
+    t0 = time.perf_counter()
+    stamped = []
+    for p in payloads:
+        ts = time.perf_counter()
+        f = eng.submit(p)
+        # client-observed latency: submit -> slice resolution
+        stamped.append(f.then(
+            lambda v, ts=ts: (time.perf_counter() - ts, v), executor="inline"
+        ))
+    wait_all(stamped)
+    return time.perf_counter() - t0, stamped
+
+sched1 = Scheduler([dev], policy="least_loaded")
+sched8 = Scheduler(devices, policy="least_loaded")
+eng1 = make_batched(sched1, "fig9-1dev")
+eng8 = make_batched(sched8, "fig9-8dev")
+BREPS = 5 if quick else 6
+best1 = best8 = None
+try:
+    # Interleaved reps: the CI gate checks the 8dev/1dev RATIO, so both
+    # fleets must sample the same noise environment — two disjoint
+    # measurement windows would put the ratio at the mercy of machine-
+    # load drift between them.
+    for _ in range(BREPS):
+        w, s = batched_rep(eng1)
+        if best1 is None or w < best1[0]:
+            best1 = (w, s)
+        w, s = batched_rep(eng8)
+        if best8 is None or w < best8[0]:
+            best8 = (w, s)
+    for label, (wall, stamped), eng, sched in (
+            ("1dev", best1, eng1, sched1), ("8dev", best8, eng8, sched8)):
         lats = []
         for want, f in zip(ref, stamped):
             lat, got = f.get()
             lats.append(lat)
             assert got.dtype == want.dtype and np.array_equal(got, want), "diverged"
-        return wall, lats, eng.metrics()
-    finally:
-        eng.close()
-
-wall, lats, m = engine_pass(Scheduler([dev], policy="least_loaded"), "fig9-1dev")
-print(f"CSVROW,fig9/serving_batched_1dev,{wall / R * 1e6:.1f},"
-      f"rps={R / wall:.1f};p50_ms={pct(lats, 0.5) * 1e3:.2f};"
-      f"p99_ms={pct(lats, 0.99) * 1e3:.2f};"
-      f"mean_batch={m['mean_batch_rows']:.1f};waste={m['padding_waste']:.3f};requests={R}")
-
-sched8 = Scheduler(devices, policy="least_loaded")
-wall8, lats8, m8 = engine_pass(sched8, "fig9-8dev")
-print(f"CSVROW,fig9/serving_batched_8dev,{wall8 / R * 1e6:.1f},"
-      f"rps={R / wall8:.1f};p50_ms={pct(lats8, 0.5) * 1e3:.2f};"
-      f"p99_ms={pct(lats8, 0.99) * 1e3:.2f};"
-      f"mean_batch={m8['mean_batch_rows']:.1f};waste={m8['padding_waste']:.3f};"
-      f"spread={len(sched8.stats())};requests={R}"
-)
+        m = eng.metrics()
+        spread = f"spread={len(sched.stats())};" if label == "8dev" else ""
+        print(f"CSVROW,fig9/serving_batched_{label},{wall / R * 1e6:.1f},"
+              f"rps={R / wall:.1f};p50_ms={pct(lats, 0.5) * 1e3:.2f};"
+              f"p99_ms={pct(lats, 0.99) * 1e3:.2f};"
+              f"mean_batch={m['mean_batch_rows']:.1f};"
+              f"waste={m['padding_waste']:.3f};{spread}requests={R}")
+finally:
+    eng1.close()
+    eng8.close()
 
 # --- paged: prefill/decode disaggregation over paged KV (DESIGN.md S15) ------
 PAGE = 16
@@ -307,6 +332,112 @@ out1 = paged_pass(devices[:1], "1dev")
 out8 = paged_pass(devices, "8dev")
 # Same prompts, same models, two fleets: greedy tokens must agree bit-for-bit.
 assert all(np.array_equal(a, b) for a, b in zip(out1, out8)), "paged fleets diverged"
+
+# --- zoo: real architectures through the paged engine (DESIGN.md S17) --------
+# Two model-zoo families (dense transformer + SSM) served as ONE fleet by
+# ``PagedServeEngine.from_config`` — the smoke'd real models, not toys:
+# multi-layer folded pages, resident recurrent state, host-side sampling.
+# The occupancy model wraps the zoo decode step exactly as above.
+from repro.configs import get_config, smoke
+from repro.models.model import get_model
+from repro.serving import SamplingParams
+
+S_ZOO = 16 if quick else 24
+NEW_ZOO = 6 if quick else 10
+ZOO = ("olmo-1b", "mamba2-130m")
+ZOO_CFGS = [smoke(get_config(n)) for n in ZOO]
+ZOO_PARAMS = [get_model(c).init(c, jax.random.PRNGKey(i))
+              for i, c in enumerate(ZOO_CFGS)]
+zoo_work = sorted(
+    [(i % 2, (5, 9, 17)[int(v)], NEW_ZOO)
+     for i, v in enumerate(rng.integers(0, 3, size=S_ZOO))],
+    key=lambda t: (t[0], t[1]))  # sorted: deterministic prefill groups
+
+ZOO_POOL = 96
+ZOO_SHAPES = (1, 2, 4, 8)
+
+def zoo_pass(devs, label):
+    sched = Scheduler(devs, policy="least_loaded")
+    engines, inners = [], []
+    for i, (cfg, params) in enumerate(zip(ZOO_CFGS, ZOO_PARAMS)):
+        eng = PagedServeEngine.from_config(
+            cfg, params=params, devices=devs, max_seq_len=48,
+            pool_pages=ZOO_POOL, scheduler=sched,
+            prefill=LanePolicy(max_batch=8, max_delay_s=0.02, token_budget=512),
+            decode=LanePolicy(max_batch=8, max_delay_s=0.02),
+            decode_shapes=ZOO_SHAPES,
+            name=f"fig9-zoo-{label}-m{i}")
+        inner = eng.decode_fn
+        def wrapped(ks, vs, state, tokens, positions, tables, lengths, _in=inner):
+            _occupy(_dev_of(ks), tokens.shape[0] * _TOK_S)
+            return _in(ks, vs, state, tokens, positions, tables, lengths)
+        eng.decode_fn = wrapped
+        engines.append(eng)
+        inners.append(inner)
+
+    # Prewarm every palette row count on every device OUTSIDE the measured
+    # window, exactly as paged_pass does: the decode jit keys on
+    # (rows x device), and a real-model compile inside a measured rep
+    # would charge ~1s to some token's p99.  A throwaway 1-row prefill
+    # yields the family's resident-state row template (None for pure
+    # transformers); zero slabs of the pool's geometry stand in for the
+    # real pools (page 0 is the scatter sink — it is the reserved
+    # sentinel, never read back).
+    for eng, inner in zip(engines, inners):
+        spec = eng.kv.spec
+        st = eng.prefill_fn(np.ones((1, 4), np.int32), None)[2]
+        row = (None if st is None
+               else jax.tree_util.tree_map(lambda a: np.asarray(a)[0], st))
+        sh = (spec.layers, ZOO_POOL, spec.page_size, spec.kv_heads,
+              spec.head_dim)
+        for d in devs:
+            kz = jax.device_put(np.zeros(sh, np.float32), d.jax_device)
+            vz = jax.device_put(np.zeros(sh, np.float32), d.jax_device)
+            for b in ZOO_SHAPES:
+                stb = (None if row is None else jax.tree_util.tree_map(
+                    lambda a, _b=b: np.stack([a] * _b), row))
+                kz, vz, _, _ = inner(kz, vz, stb, np.zeros(b, np.int32),
+                                     np.zeros(b, np.int32),
+                                     np.zeros((b, eng.max_pages), np.int32),
+                                     np.zeros(b, np.int32))
+            jax.block_until_ready((kz, vz))
+
+    def one_pass():
+        t0 = time.perf_counter()
+        futs = [engines[mi].submit(
+                    np.arange(plen, dtype=np.int32) % (ZOO_CFGS[mi].vocab_size - 1) + 1,
+                    nnew)
+                for mi, plen, nnew in zoo_work]
+        outs = [np.asarray(f.get()) for f in futs]
+        return outs, time.perf_counter() - t0
+
+    one_pass()  # warm: prefill groups + decode palette compile here
+    best = None
+    for _ in range(REPS):
+        for e in engines:
+            e.reset_metrics()
+        outs, wall = one_pass()
+        ms = [e.metrics() for e in engines]
+        if best is None or wall < best[1]:
+            best = (outs, wall, ms)
+    for e in engines:
+        e.close()
+    outs, wall, ms = best
+    rows = sum(m["rows"] for m in ms)
+    padded = sum(m["padded_rows"] for m in ms)
+    print(f"CSVROW,fig9/serving_zoo_{label},{wall / S_ZOO * 1e6:.1f},"
+          f"seqs_per_s={S_ZOO / wall:.2f};"
+          f"p99_tok_ms={max(m['token_latency_p99_s'] for m in ms) * 1e3:.1f};"
+          f"ttft_p99_ms={max(m['ttft_p99_s'] for m in ms) * 1e3:.1f};"
+          f"waste={(padded / rows) if rows else 0.0:.3f};"
+          f"slo_ms={SLO_MS:.0f};models={len(ZOO)};"
+          f"sequences={S_ZOO};new_tokens={NEW_ZOO}")
+    return outs
+
+z1 = zoo_pass(devices[:1], "1dev")
+z8 = zoo_pass(devices, "8dev")
+# Real-model fleets must agree bit-for-bit too (greedy, per-row math).
+assert all(np.array_equal(a, b) for a, b in zip(z1, z8)), "zoo fleets diverged"
 """
 
 
@@ -327,7 +458,7 @@ def run(quick: bool = False):
         if line.startswith("CSVROW,"):
             _, name, us, derived = line.split(",", 3)
             rows.append({"name": name, "s": float(us) / 1e6, "derived": derived})
-    if len(rows) < 5 or proc.returncode != 0:
+    if len(rows) < 7 or proc.returncode != 0:
         rows.append(
             {"name": "fig9/FAILED", "s": -1.0, "derived": proc.stderr.strip()[-200:].replace(",", ";")}
         )

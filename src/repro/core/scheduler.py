@@ -559,6 +559,26 @@ class Scheduler:
                     out[key] = c
         return out
 
+    def occupancy(self, dev, *, recent: bool = True) -> float:
+        """Honest occupancy of one device as placement sees it: lane
+        depth + decayed busy time, plus the steal-pool backlog and this
+        scheduler's decayed recent placements unless ``recent=False``.
+
+        ``recent=False`` is the hysteresis probe for sticky placement
+        (``select_batch(prefer=...)``): a caller deciding whether a
+        sticky home must yield compares *structural* load only, because
+        the recent-placement counter on the home is mostly the caller's
+        own just-charged work — scoring it would repel every micro-batch
+        from the device it just warmed (self-repulsion), which is the
+        exact spray the sticky hint exists to stop."""
+        pending = 0
+        if self._steal:
+            with self._pump_lock:
+                dq = self._pending.get(dev.key)
+                pending = len(dq) if dq else 0
+        extra = self._recent_extras().get(dev.key, 0.0) if recent else 0.0
+        return _occupancy(_LoadView(dev, pending, extra))
+
     # -- memory-aware placement (DESIGN.md §14) ------------------------------
 
     def _limit_of(self, dev) -> int:
@@ -660,18 +680,64 @@ class Scheduler:
         self._maybe_spill(dev, args)
         return self._record(dev)
 
-    def select_batch(self, batch_args: "Sequence[Sequence]" = (), program=None):
+    def select_batch(self, batch_args: "Sequence[Sequence]" = (), program=None,
+                     prefer: "str | None" = None, prefer_slack: float = 16.0):
         """One placement decision for a whole micro-batch of requests
         (``PlacementPolicy.select_batch``): the engine hands every member
         request's argument leaves, the policy scores them as a unit, and
         the decision is logged once in ``stats()``.  The batch sees the
         same memory veto and pending-backlog-aware load views as single
-        launches — one signal for all traffic."""
+        launches — one signal for all traffic.
+
+        ``prefer`` is a sticky-home hint (device key): under a pure load
+        policy, the recent-placement charge a batch deposits makes the
+        NEXT batch of the same route score its own home as busy and hop
+        devices — consecutive micro-batches of one request stream spray
+        across the fleet, churning per-device executable caches (the
+        fig9 batched fan-out regression).  When the policy is
+        ``least_loaded`` and the preferred device is alive, un-vetoed and
+        within ``prefer_slack`` of the policy's pick on *recent-free*
+        occupancy (depth + busy only — see ``occupancy``), the batch
+        stays home.  The slack is in units of queued submissions: a
+        burst legitimately parks its whole in-flight window (engine
+        ``max_batch`` x queued micro-batches, each ~100us of work) on
+        its home lane, while hopping costs an executable-cache warmup
+        worth tens of milliseconds — hundreds of micro-batches.  So the
+        slack is sized well past any burst window, and only a backlog
+        comparable to the warmup cost itself justifies the move.  A genuinely backed-up home (queued work
+        the pick does not have, beyond that slack) still yields, so
+        loaded fleets fan out — and this structural yield runs on every
+        placement, so it is also the mechanism by which a sticky stream
+        eventually re-homes.  Spread
+        policies (round_robin/static) and byte-aware policies
+        (affinity/percolation) ignore the hint — their placement is the
+        point.  The *recorded* placement is always the device actually
+        chosen, so ``stats()`` stays honest."""
         flat = [a for args in batch_args for a in args]
-        cands = self._fit_memory(self._live(), flat)
+        live = self._live()
+        if prefer is not None and self.policy.name == "least_loaded":
+            # Fast path: any pick's recent-free occupancy is >= 0, so a
+            # home within the slack of ZERO holds no matter what the
+            # policy would have chosen — skip scoring the whole fleet
+            # (memory fit + lock-guarded occupancy per device), which
+            # otherwise taxes every held batch ~linearly in fleet size.
+            home = next((d for d in live if d.key == prefer), None)
+            if (home is not None
+                    and self.occupancy(home, recent=False) <= prefer_slack
+                    and self._fit_memory([home], flat)):
+                self._maybe_spill(home, flat)
+                return self._record(home)
+        cands = self._fit_memory(live, flat)
         dev = _unwrap(
             self.policy.select_batch(self._views(cands), batch_args=batch_args, program=program)
         )
+        if prefer is not None and dev.key != prefer and self.policy.name == "least_loaded":
+            home = next((d for d in cands if d.key == prefer), None)
+            if home is not None and (
+                self.occupancy(home, recent=False)
+                <= self.occupancy(dev, recent=False) + prefer_slack
+            ):
+                dev = home
         self._maybe_spill(dev, flat)
         return self._record(dev)
 

@@ -10,6 +10,7 @@ is one fused XLA gather+einsum.  ``impl="kernel"`` forces the Pallas path
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
 
 from repro.kernels.paged_attention.kernel import paged_attention_bhd
 from repro.kernels.paged_attention.ref import paged_attention_ref
@@ -26,4 +27,30 @@ def paged_attention(q, k_pages, v_pages, page_table, lengths, *,
                                interpret=not on_tpu)
 
 
-KERNELS = {"paged_attention": paged_attention}
+def paged_attention_layers(q, k_pages, v_pages, page_table, lengths, *,
+                           impl: str = "auto"):
+    """Multi-layer paged attention over ONE folded slab (DESIGN.md §17).
+
+    The zoo's page geometry keeps every layer's KV in a single slab with
+    layer as the leading dim — one page table covers the whole model.
+    q: (L, B, H, D); k/v_pages: (L, N, P, K, D); page_table: (B, M);
+    lengths: (B,) -> (L, B, H, D).  ``L`` is static, so the python loop
+    unrolls into one fused XLA computation (ref) or L kernel launches
+    sharing the prefetched table (Pallas) — no per-layer table rebuilds,
+    which is the point of folding.  GQA geometries (H a multiple of K)
+    pass straight through to the per-layer op."""
+    L = q.shape[0]
+    if k_pages.shape[0] != L or v_pages.shape[0] != L:
+        raise ValueError(
+            f"layer dims disagree: q has {L}, k_pages {k_pages.shape[0]}, "
+            f"v_pages {v_pages.shape[0]}")
+    outs = [paged_attention(q[l], k_pages[l], v_pages[l], page_table,
+                            lengths, impl=impl)
+            for l in range(L)]
+    return jnp.stack(outs, axis=0)
+
+
+KERNELS = {
+    "paged_attention": paged_attention,
+    "paged_attention_layers": paged_attention_layers,
+}

@@ -209,3 +209,66 @@ def decode_step(cfg, params, cache, tokens, pos, *, positions=None):
     x = L.apply_norm(cfg, x, params["final_norm"])
     logits = L.unembed(cfg, params["embed"], x)
     return logits, cache
+
+
+# ---------------------------------------------------------------------------
+# paged serving contract (DESIGN.md §17)
+# ---------------------------------------------------------------------------
+
+def paged_spec(cfg):
+    """Decoder self-KV lives in pages; the fixed-size cross K/V (one
+    entry per encoder frame, never grows) rides as per-sequence state."""
+    from repro.serving.paged import PageSpec
+
+    return PageSpec(
+        layers=cfg.num_layers,
+        page_size=0,
+        kv_heads=cfg.num_kv_heads,
+        head_dim=cfg.hd,
+        dtype=jnp.float32,
+    )
+
+
+def paged_prefill(cfg, params, tokens, extras=None):
+    """tokens: (B, T); extras['frames']: (B, S_enc, D) stub embeddings.
+
+    Returns (k, v, state, last_logits): self-KV rows (B, L, T, K, hd)
+    for the pages, cross K/V stacked batch-leading as resident state.
+    """
+    frames = extras["frames"]
+    logits, _, kv = forward(
+        cfg, params, {"frames": frames, "tokens": tokens},
+        return_kv=True, last_only=True,
+    )
+    k = jnp.stack([kv_l[0] for kv_l in kv["self"]], axis=1)  # (B, L, T, K, hd)
+    v = jnp.stack([kv_l[1] for kv_l in kv["self"]], axis=1)
+    state = {
+        "cross_k": jnp.stack([x[0] for x in kv["cross"]], axis=1),  # (B, L, Se, K, hd)
+        "cross_v": jnp.stack([x[1] for x in kv["cross"]], axis=1),
+    }
+    return k, v, state, logits[:, -1]
+
+
+def paged_decode_step(cfg, params, k_pages, v_pages, state, tokens, positions, tables, lengths):
+    """One ragged decoder step: scatter self-KV into pages, attend over
+    each row's own prefix, cross-attend the resident encoder K/V.
+    Per-row math is op-for-op ``decode_step``'s."""
+    tokens = tokens.reshape(-1, 1)
+    x = L.embed(cfg, params["embed"], tokens)
+    pos_tab = params["dec_pos"]
+    x = x + pos_tab[positions % pos_tab.shape[0]][:, None].astype(x.dtype)
+
+    for i, lp in enumerate(params["dec_layers"]):
+        h = L.apply_norm(cfg, x, lp["ln1"])
+        q, k, v = L.qkv_proj(cfg, lp["attn"], h)
+        kp, vp = L.page_scatter(k_pages[i], v_pages[i], k, v, tables, positions)
+        k_pages = k_pages.at[i].set(kp)
+        v_pages = v_pages.at[i].set(vp)
+        o = L.paged_decode_attend(q, kp, vp, tables, lengths)
+        x = x + L.out_proj(cfg, lp["attn"], o)
+        x = _cross(cfg, lp, x, state["cross_k"][:, i], state["cross_v"][:, i])
+        x = _mlp_block(cfg, lp, x)
+
+    x = L.apply_norm(cfg, x, params["final_norm"])
+    logits = L.unembed(cfg, params["embed"], x)
+    return k_pages, v_pages, state, logits[:, 0]

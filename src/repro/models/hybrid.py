@@ -280,3 +280,185 @@ def decode_step(cfg, params, cache, tokens, pos, *, positions=None):
     x = L.apply_norm(cfg, x, params["final_norm"])
     logits = L.unembed(cfg, params["embed"], x)
     return logits, cache
+
+
+# ---------------------------------------------------------------------------
+# paged serving contract (DESIGN.md §17)
+# ---------------------------------------------------------------------------
+
+def paged_spec(cfg):
+    """One slab layer per KV *producer* (consumers share the producer's
+    pages, exactly as they share its cache in ``decode_step``).  SWA
+    layers keep FULL history in pages; the ring layout the oracle's
+    ``cache_update(..., ring=...)`` would hold is reconstructed at decode
+    via ``layers.ring_gather`` — so pages stay position-addressed for
+    every layer and one table serves the whole stack."""
+    from repro.serving.paged import PageSpec
+
+    return PageSpec(
+        layers=len(kv_producers(cfg)),
+        page_size=0,
+        kv_heads=cfg.num_kv_heads,
+        head_dim=cfg.hd,
+        dtype=jnp.float32,
+    )
+
+
+def paged_prefill(cfg, params, tokens, extras=None):
+    """tokens: (B, T) -> (k, v, state, last_logits).
+
+    k/v: (B, Lp, T', K, hd) over producer layers with T' = meta + T —
+    meta registers live in the pages too, so the sequence's page length
+    and the decode-step positions are the same absolute coordinate.
+    state: batch-leading per-layer recurrent {'ssm_state', 'ssm_conv'}.
+    The block math is op-for-op ``forward``'s (ssm path via
+    ``S.ssm_prefill``, the cache-returning twin of ``S.ssm_block``).
+    """
+    x = L.embed(cfg, params["embed"], tokens)
+    B = x.shape[0]
+    if cfg.meta_tokens:
+        meta = jnp.broadcast_to(params["meta"][None], (B, cfg.meta_tokens, cfg.d_model))
+        x = jnp.concatenate([meta.astype(x.dtype), x], axis=1)
+    S_ = x.shape[1]
+    pos = jnp.broadcast_to(jnp.arange(S_)[None], (B, S_))
+    rot = int(cfg.hd * cfg.partial_rotary)
+    cos, sin = L.rope_angles(pos, rot, cfg.rope_theta)
+
+    producers = kv_producers(cfg)
+    shared_kv = None
+    kvs = {}
+    states, convs = [], []
+    for l, lp in enumerate(params["layers"]):
+        shared = shared_kv
+        h = L.apply_norm(cfg, x, lp["ln1"])
+        y_ssm, ssm_cache = S.ssm_prefill(cfg, lp["ssm"], h)
+        states.append(ssm_cache["state"])
+        convs.append(ssm_cache["conv"])
+        hd, H, K = cfg.hd, cfg.num_heads, cfg.num_kv_heads
+        q = jnp.einsum("bsd,dh->bsh", h, lp["attn"]["wq"], preferred_element_type=h.dtype)
+        if cfg.attn_qkv_bias:
+            q = q + lp["attn"]["bq"]
+        q = L.apply_rope(q.reshape(B, S_, H, hd), cos, sin)
+        if "wk" in lp["attn"]:
+            k = jnp.einsum("bsd,dh->bsh", h, lp["attn"]["wk"], preferred_element_type=h.dtype)
+            v = jnp.einsum("bsd,dh->bsh", h, lp["attn"]["wv"], preferred_element_type=h.dtype)
+            if cfg.attn_qkv_bias:
+                k, v = k + lp["attn"]["bk"], v + lp["attn"]["bv"]
+            k = L.apply_rope(k.reshape(B, S_, K, hd), cos, sin)
+            v = v.reshape(B, S_, K, hd)
+        else:
+            k, v = shared
+        if _is_global(cfg, l) or cfg.sliding_window is None or S_ <= cfg.sliding_window:
+            o = L.attention(q, k, v, causal=True, q_block=512)
+        else:
+            w = cfg.sliding_window
+            qp, _ = _pad_to(q, w)
+            kp, _ = _pad_to(k, w)
+            vp, _ = _pad_to(v, w)
+            o = L.local_block_attention(qp, kp, vp, window=w)[:, :S_]
+        y_attn = L.out_proj(cfg, lp["attn"], o)
+        fused = 0.5 * (
+            L.rmsnorm(y_attn, lp["fuse_attn"], cfg.norm_eps)
+            + L.rmsnorm(y_ssm, lp["fuse_ssm"], cfg.norm_eps)
+        )
+        x = x + fused
+        x = x + L.mlp(cfg, lp["mlp"], L.apply_norm(cfg, x, lp["ln2"]))
+        x = constrain(x, "batch", "seq", "embed")
+        if _kv_producer(cfg, l) == l:
+            shared_kv = (k, v)
+            kvs[l] = (k, v)
+
+    xf = L.apply_norm(cfg, x, params["final_norm"])
+    if cfg.meta_tokens:
+        xf = xf[:, cfg.meta_tokens :]
+    logits = L.unembed(cfg, params["embed"], xf[:, -1:])
+
+    k_rows = jnp.stack([kvs[l][0] for l in producers], axis=1)  # (B, Lp, S', K, hd)
+    v_rows = jnp.stack([kvs[l][1] for l in producers], axis=1)
+    state = {
+        "ssm_state": jnp.stack(states, axis=1),  # (B, L, H, N, P) f32
+        "ssm_conv": jnp.stack(convs, axis=1),    # (B, L, W-1, C)
+    }
+    return k_rows, v_rows, state, logits[:, 0]
+
+
+def paged_decode_step(cfg, params, k_pages, v_pages, state, tokens, positions, tables, lengths):
+    """k_pages/v_pages: (Lp, N, P, K, hd); positions == lengths: (B,)
+    ABSOLUTE page coordinates (meta included — prefill registered the
+    meta registers as page tokens).  Per-row math is ``decode_step``'s:
+    global producers scatter + full-prefix attend, SWA producers scatter
+    + ring-reconstructed windowed attend, consumers reuse the producer's
+    gathered cache, SSM state advances every layer.
+    """
+    tokens = tokens.reshape(-1, 1)
+    x = L.embed(cfg, params["embed"], tokens)
+    B = x.shape[0]
+    p1 = positions[:, None].astype(jnp.int32)
+    rot = int(cfg.hd * cfg.partial_rotary)
+    cos, sin = L.rope_angles(p1, rot, cfg.rope_theta)
+
+    producers = kv_producers(cfg)
+    prod_ix = {l: i for i, l in enumerate(producers)}
+    P_ = k_pages.shape[2]
+    width = tables.shape[1] * P_
+    ring = min(cfg.sliding_window, width) if cfg.sliding_window else width
+
+    new_states, new_convs = [], []
+    shared = None
+    for l, lp in enumerate(params["layers"]):
+        h = L.apply_norm(cfg, x, lp["ln1"])
+        y_ssm, new_ssm = S.ssm_decode_step(
+            cfg, lp["ssm"], h,
+            {"state": state["ssm_state"][:, l], "conv": state["ssm_conv"][:, l]},
+        )
+        new_states.append(new_ssm["state"])
+        new_convs.append(new_ssm["conv"])
+
+        hd, H, K = cfg.hd, cfg.num_heads, cfg.num_kv_heads
+        q = jnp.einsum("bsd,dh->bsh", h, lp["attn"]["wq"], preferred_element_type=h.dtype)
+        if cfg.attn_qkv_bias:
+            q = q + lp["attn"]["bq"]
+        q = L.apply_rope(q.reshape(B, 1, H, hd), cos, sin)
+
+        if "wk" in lp["attn"]:
+            k = jnp.einsum("bsd,dh->bsh", h, lp["attn"]["wk"], preferred_element_type=h.dtype)
+            v = jnp.einsum("bsd,dh->bsh", h, lp["attn"]["wv"], preferred_element_type=h.dtype)
+            if cfg.attn_qkv_bias:
+                k, v = k + lp["attn"]["bk"], v + lp["attn"]["bv"]
+            k = L.apply_rope(k.reshape(B, 1, K, hd), cos, sin)
+            v = v.reshape(B, 1, K, hd)
+            i = prod_ix[l]
+            kp, vp = L.page_scatter(k_pages[i], v_pages[i], k, v, tables, positions)
+            k_pages = k_pages.at[i].set(kp)
+            v_pages = v_pages.at[i].set(vp)
+            if _is_global(cfg, l):
+                ck = L.page_gather(kp, tables)
+                cv = L.page_gather(vp, tables)
+                o = L.attention(q, ck, cv, causal=False, valid_len=lengths + 1)
+            else:
+                ck = L.ring_gather(kp, tables, positions, ring)
+                cv = L.ring_gather(vp, tables, positions, ring)
+                valid = jnp.minimum(positions + 1, ring)
+                o = L.attention(q, ck, cv, causal=False, valid_len=valid)
+                shared = (ck, cv, True, valid)
+        else:
+            ck, cv, is_ring, valid = shared
+            if is_ring:
+                o = L.attention(q, ck, cv, causal=False, valid_len=valid)
+            else:
+                o = L.attention(q, ck, cv, causal=False, valid_len=lengths + 1)
+        y_attn = L.out_proj(cfg, lp["attn"], o)
+        fused = 0.5 * (
+            L.rmsnorm(y_attn, lp["fuse_attn"], cfg.norm_eps)
+            + L.rmsnorm(y_ssm, lp["fuse_ssm"], cfg.norm_eps)
+        )
+        x = x + fused
+        x = x + L.mlp(cfg, lp["mlp"], L.apply_norm(cfg, x, lp["ln2"]))
+
+    x = L.apply_norm(cfg, x, params["final_norm"])
+    logits = L.unembed(cfg, params["embed"], x)
+    state = {
+        "ssm_state": jnp.stack(new_states, axis=1),
+        "ssm_conv": jnp.stack(new_convs, axis=1),
+    }
+    return k_pages, v_pages, state, logits[:, 0]

@@ -144,7 +144,10 @@ def apply_rope(x, cos, sin):
 def _block_attend(q, k, v, qpos, kpos, *, causal, window, softcap, valid_len=None):
     """q: (B, Sq, K, R, D); k/v: (B, Skv, K, D); qpos: (Sq,); kpos: (Skv,).
 
-    Returns (B, Sq, K, R, D). Scores/softmax in fp32.
+    Returns (B, Sq, K, R, D). Scores/softmax in fp32.  ``valid_len`` may be
+    a scalar (one cache fill level for the whole batch) or a ``(B,)`` array
+    (ragged paged decode: each row attends over its own prefix).  The
+    scalar path's op sequence is unchanged by the batched branch.
     """
     scale = 1.0 / math.sqrt(q.shape[-1])
     s = jnp.einsum("bqkrd,bskd->bkrqs", q, k, preferred_element_type=F32) * scale
@@ -155,9 +158,13 @@ def _block_attend(q, k, v, qpos, kpos, *, causal, window, softcap, valid_len=Non
         mask &= kpos[None, :] <= qpos[:, None]
     if window is not None:
         mask &= kpos[None, :] > (qpos[:, None] - window)
-    if valid_len is not None:
-        mask &= kpos[None, :] < valid_len
-    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    if valid_len is not None and getattr(valid_len, "ndim", 0) == 1:
+        mask_b = mask[None] & (kpos[None, None, :] < valid_len[:, None, None])
+        s = jnp.where(mask_b[:, None, None], s, NEG_INF)
+    else:
+        if valid_len is not None:
+            mask &= kpos[None, :] < valid_len
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
     w = jax.nn.softmax(s, axis=-1).astype(v.dtype)
     return jnp.einsum("bkrqs,bskd->bqkrd", w, v)
 
@@ -179,8 +186,9 @@ def attention(
 
     ``q_block``: process queries in blocks of this size via lax.scan so the
     peak score tensor is (B, H, q_block, Skv) — required for 32k+ prefill.
-    ``valid_len``: number of valid cache slots (decode); ``kpos``: explicit
-    key positions (defaults to arange(Skv)).
+    ``valid_len``: number of valid cache slots (decode) — scalar, or a
+    ``(B,)`` array for ragged per-row prefixes (paged decode); ``kpos``:
+    explicit key positions (defaults to arange(Skv)).
     """
     B, Sq, H, D = q.shape
     K = k.shape[2]
@@ -446,3 +454,82 @@ def decode_attend(cfg, q, ck, cv, pos, *, window: "Optional[int]" = None):
     ring = ck.shape[1]
     valid = jnp.minimum(pos + 1, ring)
     return attention(q, ck, cv, causal=False, valid_len=valid)
+
+
+# ---------------------------------------------------------------------------
+# paged KV helpers (DESIGN.md §17): the model side of the paging contract
+# ---------------------------------------------------------------------------
+
+def page_scatter(kp, vp, k_new, v_new, tables, positions):
+    """Scatter one decode-step token per row into a page slab.
+
+    kp/vp: (N, P, K, D) pool slabs for ONE layer; k_new/v_new: (B, 1, K, D);
+    tables: (B, M) page tables; positions: (B,) — the token's slot, i.e.
+    the row's current length (token ``t`` lives at
+    ``pages[table[b, t // P], t % P]``, the kernel-layer layout contract).
+    """
+    P = kp.shape[1]
+    page = jnp.take_along_axis(tables, positions[:, None] // P, axis=1)[:, 0]
+    slot = positions % P
+    kp = kp.at[page, slot].set(k_new[:, 0].astype(kp.dtype))
+    vp = vp.at[page, slot].set(v_new[:, 0].astype(vp.dtype))
+    return kp, vp
+
+
+def page_gather(pages, tables):
+    """(N, P, K, D) slab + (B, M) table -> (B, M*P, K, D) contiguous cache.
+
+    Position order: slot ``t`` of the result is token ``t`` of the row, so
+    the gathered cache is drop-in for ``decode_attend``'s contiguous cache
+    — bit-for-bit, stale slots past ``length`` included (they are masked
+    to exact-zero weight downstream).
+    """
+    N, P, K, D = pages.shape
+    B, M = tables.shape
+    return pages[tables].reshape(B, M * P, K, D)
+
+
+def paged_decode_attend(q, kp, vp, tables, lengths):
+    """One-token GQA attention against paged KV, bit-equal to the padded
+    ``decode_attend(..., pos)`` oracle when each row's ``pos == lengths[b]``
+    and the oracle cache width equals ``tables.shape[1] * P``.
+
+    q: (B, 1, H, D); kp/vp: (N, P, K, D); lengths: (B,) tokens already
+    resident EXCLUDING the one scattered this step (so rows attend over
+    ``lengths + 1`` slots — the fig9 toy's contract).
+    """
+    kc = page_gather(kp, tables)
+    vc = page_gather(vp, tables)
+    return attention(q, kc, vc, causal=False, valid_len=lengths + 1)
+
+
+def ring_gather(pages, tables, positions, ring: int):
+    """Reconstruct a sliding-window ring cache (B, ring, K, D) from paged
+    full-history KV.
+
+    Slot ``s`` of a ring cache written via ``cache_update(..., ring=ring)``
+    holds the newest token whose absolute position ``p`` satisfies
+    ``p % ring == s`` and ``p <= pos``; that is
+    ``p = pos - ((pos - s) % ring)``.  Negative ``p`` (slot not yet
+    written) is clamped to 0 — those slots are masked by the caller's
+    ``valid_len=min(pos+1, ring)`` exactly as the oracle masks its
+    zero-initialized slots, and masked lanes contribute exact 0.0 either
+    way.
+    """
+    N, P, K, D = pages.shape
+    s = jnp.arange(ring)
+    p = positions[:, None] - ((positions[:, None] - s[None, :]) % ring)  # (B, ring)
+    p = jnp.maximum(p, 0)
+    page = jnp.take_along_axis(tables, p // P, axis=1)  # (B, ring)
+    return pages[page, p % P]  # (B, ring, K, D)
+
+
+def paged_ring_attend(q, kp, vp, tables, positions, *, ring: int):
+    """Sliding-window one-token attention against paged KV: gather the
+    ring layout the oracle's ring cache would hold at ``pos = positions``
+    (new token already scattered), then run the same windowed attend —
+    bit-equal to ``decode_attend(..., window=w)`` per row."""
+    kc = ring_gather(kp, tables, positions, ring)
+    vc = ring_gather(vp, tables, positions, ring)
+    valid = jnp.minimum(positions + 1, ring)
+    return attention(q, kc, vc, causal=False, valid_len=valid)

@@ -11,6 +11,17 @@
 ``input_specs``/``make_batch`` build ShapeDtypeStruct stand-ins / random
 host batches for every (arch x shape) cell, including the modality STUBS
 (whisper frames, qwen2-vl patch embeddings + M-RoPE positions).
+
+Every family also exposes the **paged serving contract** (DESIGN.md §17)
+consumed by ``PagedServeEngine.from_config``:
+
+    spec = m.paged_spec(cfg)                        # ONE multi-layer PageSpec
+    k, v, state, logits = m.paged_prefill(cfg, params, tokens, extras)
+    k_pages, v_pages, state, logits = m.paged_decode_step(
+        cfg, params, k_pages, v_pages, state, tokens, positions, tables, lengths)
+
+``paged_surface(cfg)`` returns the triple with a clear error if an arch
+is missing a piece.
 """
 from __future__ import annotations
 
@@ -23,7 +34,7 @@ import numpy as np
 from repro.configs.base import ArchConfig, ShapeConfig
 from repro.models import encdec, hybrid, ssm_lm, transformer
 
-__all__ = ["get_model", "input_specs", "make_batch", "batch_logical_specs"]
+__all__ = ["get_model", "paged_surface", "input_specs", "make_batch", "batch_logical_specs"]
 
 
 def get_model(cfg: ArchConfig) -> ModuleType:
@@ -36,6 +47,27 @@ def get_model(cfg: ArchConfig) -> ModuleType:
     if cfg.family == "encdec":
         return encdec
     raise ValueError(cfg.family)
+
+
+def paged_surface(cfg: ArchConfig):
+    """(paged_spec, paged_prefill, paged_decode_step) for ``cfg``'s family.
+
+    The uniform seam between the model zoo and the paged serving engine:
+    every architecture folds its multi-layer KV into ONE ``PageSpec``
+    (layer = leading slab dim, one table per sequence) and threads any
+    recurrent / fixed-size residue (SSM state, conv windows, cross K/V)
+    through the opaque ``state`` slot, which the engine spills, migrates
+    and ships with the sequence's pages.
+    """
+    m = get_model(cfg)
+    missing = [n for n in ("paged_spec", "paged_prefill", "paged_decode_step")
+               if not hasattr(m, n)]
+    if missing:
+        raise NotImplementedError(
+            f"model family '{cfg.family}' ({m.__name__}) lacks the paged "
+            f"serving contract: missing {missing}"
+        )
+    return m.paged_spec, m.paged_prefill, m.paged_decode_step
 
 
 def _batch_shapes(cfg: ArchConfig, shape: ShapeConfig, *, dtype=jnp.bfloat16):

@@ -79,7 +79,7 @@ def route(x2d, wr, top_k: int, renormalize: bool):
     return weights, idx, aux
 
 
-def moe_block(cfg, p, x):
+def moe_block(cfg, p, x, *, groups=None):
     """x: (B, S, D) -> (y, aux_loss). Capacity-based top-k MoE.
 
     Grouped dispatch (``cfg.moe.dispatch_groups`` = G): routing is global,
@@ -87,11 +87,17 @@ def moe_block(cfg, p, x):
     the data axis, so dispatch never moves tokens across data shards —
     only the expert GEMM communicates (EP) or nothing does (TP).  G=1
     recovers the single global dispatch buffer (baseline).
+
+    ``groups`` overrides ``dispatch_groups``.  The paged serving paths
+    pass ``groups=B`` so capacity buckets never span rows: dropping for
+    one request then depends only on that request's own tokens, which is
+    what makes serving-batch composition invisible in the outputs (the
+    bit-reproducibility contract, DESIGN.md §17).
     """
     e = cfg.moe
     B, S, D = x.shape
     T = B * S
-    G = max(1, min(e.dispatch_groups, T))
+    G = max(1, min(e.dispatch_groups if groups is None else groups, T))
     while T % G:
         G -= 1
     Tg = T // G

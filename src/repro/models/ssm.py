@@ -180,6 +180,49 @@ def ssm_block(cfg, p, x, *, return_state: bool = False):
     return out
 
 
+def ssm_prefill(cfg, p, x):
+    """``ssm_block`` plus the decode cache prefill leaves behind.
+
+    Returns (out (B, S, D), cache) where ``cache`` is exactly the
+    ``{'state', 'conv'}`` dict ``ssm_decode_step`` consumes: the chunked
+    scan's final state and the last ``d_conv - 1`` RAW (pre-silu-conv)
+    xBC projections (left-zero-padded when S < d_conv - 1, matching the
+    zero-initialized rolling window).  The output math is op-for-op
+    ``ssm_block``'s.
+    """
+    s, di, H, P, G, N = _dims(cfg)
+    B_, S, D = x.shape
+
+    z = jnp.einsum("bsd,de->bse", x, p["w_z"], preferred_element_type=x.dtype)
+    xbc_raw = jnp.einsum("bsd,de->bse", x, p["w_xbc"], preferred_element_type=x.dtype)
+    dt_raw = jnp.einsum("bsd,dh->bsh", x, p["w_dt"], preferred_element_type=F32)
+    z = constrain(z, "batch", "seq", "ssm_inner")
+    xbc_raw = constrain(xbc_raw, "batch", "seq", "ssm_inner")
+
+    xbc = jax.nn.silu(_causal_depthwise_conv(xbc_raw, p["conv_w"], p["conv_b"]))
+    xs = xbc[..., :di].reshape(B_, S, H, P)
+    Bg = xbc[..., di : di + G * N].reshape(B_, S, G, N)
+    Cg = xbc[..., di + G * N :].reshape(B_, S, G, N)
+
+    dt = jax.nn.softplus(dt_raw + p["dt_bias"])  # (B, S, H) fp32
+    A = -jnp.exp(p["A_log"])  # (H,)
+
+    y, state = ssd_chunked(xs, dt, A, Bg, Cg, cfg.ssm.chunk)
+    y = y + xs.astype(F32) * p["D"][:, None]
+    y = y.reshape(B_, S, di).astype(x.dtype)
+
+    y = rmsnorm(y * jax.nn.silu(z), p["norm_scale"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"], preferred_element_type=x.dtype)
+    out = constrain(out, "batch", "seq", "embed")
+
+    W = s.d_conv
+    win = xbc_raw[:, max(S - (W - 1), 0):]
+    pad = (W - 1) - win.shape[1]
+    if pad > 0:
+        win = jnp.pad(win, ((0, 0), (pad, 0), (0, 0)))
+    return out, {"state": state, "conv": win.astype(x.dtype)}
+
+
 # ---------------------------------------------------------------------------
 # decode path: O(1) state update per token
 # ---------------------------------------------------------------------------

@@ -87,3 +87,56 @@ def decode_step(cfg, params, cache, tokens, pos, *, positions=None):
     x = L.apply_norm(cfg, x, params["final_norm"])
     logits = L.unembed(cfg, params["embed"], x)
     return logits, {"state": states, "conv": convs}
+
+
+# ---------------------------------------------------------------------------
+# paged serving contract (DESIGN.md §17)
+# ---------------------------------------------------------------------------
+
+def paged_spec(cfg):
+    """Attention-free arch: a minimal 1x1 KV geometry keeps the engine's
+    page machinery (tables, placement, defrag) uniform while the real
+    memory — the recurrent state — rides as per-sequence resident state
+    whose bytes the sequence's AGAS registration carries."""
+    from repro.serving.paged import PageSpec
+
+    return PageSpec(layers=1, page_size=0, kv_heads=1, head_dim=1, dtype=jnp.float32)
+
+
+def paged_prefill(cfg, params, tokens, extras=None):
+    """tokens: (B, T) -> (k, v, state, last_logits).
+
+    k/v are zero dummies (nothing attends over them); ``state`` is the
+    batch-leading {'state': (B, L, H, N, P), 'conv': (B, L, W-1, C)}
+    recurrent cache the decode step threads.
+    """
+    x = L.embed(cfg, params["embed"], tokens)
+
+    def body(x, lp):
+        h = L.apply_norm(cfg, x, lp["ln"])
+        y, cache = S.ssm_prefill(cfg, lp["ssm"], h)
+        return x + y, (cache["state"], cache["conv"])
+
+    x, (states, convs) = jax.lax.scan(body, x, params["layers"])
+    x = L.apply_norm(cfg, x, params["final_norm"])
+    logits = L.unembed(cfg, params["embed"], x[:, -1:])
+    B, T = tokens.shape
+    k = jnp.zeros((B, 1, T, 1, 1), jnp.float32)
+    state = {"state": jnp.moveaxis(states, 0, 1), "conv": jnp.moveaxis(convs, 0, 1)}
+    return k, k, state, logits[:, 0]
+
+
+def paged_decode_step(cfg, params, k_pages, v_pages, state, tokens, positions, tables, lengths):
+    """Pages pass through untouched; the recurrent state advances one
+    token.  Position-free math, so ragged rows batch freely."""
+    tokens = tokens.reshape(-1, 1)
+    cache = {
+        "state": jnp.moveaxis(state["state"], 0, 1),
+        "conv": jnp.moveaxis(state["conv"], 0, 1),
+    }
+    logits, new = decode_step(cfg, params, cache, tokens, positions)
+    state = {
+        "state": jnp.moveaxis(new["state"], 0, 1),
+        "conv": jnp.moveaxis(new["conv"], 0, 1),
+    }
+    return k_pages, v_pages, state, logits[:, 0]

@@ -115,7 +115,7 @@ def _rope(cfg, positions):
 # forward (train / prefill)
 # ---------------------------------------------------------------------------
 
-def _attn_mlp_layer(cfg, lp, x, cos, sin, *, q_block, return_kv):
+def _attn_mlp_layer(cfg, lp, x, cos, sin, *, q_block, return_kv, moe_groups=None):
     h = L.apply_norm(cfg, x, lp["ln1"])
     q, k, v = L.qkv_proj(cfg, lp["attn"], h)
     if cos is not None:
@@ -130,7 +130,7 @@ def _attn_mlp_layer(cfg, lp, x, cos, sin, *, q_block, return_kv):
     h = L.apply_norm(cfg, x, lp["ln2"])
     aux = jnp.zeros((), jnp.float32)
     if cfg.moe is not None:
-        y, aux = M.moe_block(cfg, lp["moe"], h)
+        y, aux = M.moe_block(cfg, lp["moe"], h, groups=moe_groups)
     else:
         y = L.mlp(cfg, lp["mlp"], h)
     x = constrain(x + y, "batch", "seq", "embed")
@@ -146,6 +146,7 @@ def forward(
     remat: str = "none",
     return_kv: bool = False,
     last_only: bool = False,
+    moe_groups: "Optional[int]" = None,
 ):
     """Teacher-forcing forward. batch["tokens"]: (B, S) int32.
 
@@ -157,7 +158,8 @@ def forward(
     cos, sin = _rope(cfg, _positions(cfg, batch, S))
 
     def body(x, lp):
-        x, aux, kv = _attn_mlp_layer(cfg, lp, x, cos, sin, q_block=q_block, return_kv=return_kv)
+        x, aux, kv = _attn_mlp_layer(cfg, lp, x, cos, sin, q_block=q_block,
+                                     return_kv=return_kv, moe_groups=moe_groups)
         ys = (aux, kv) if return_kv else (aux, (jnp.zeros((), x.dtype),) * 2)
         return x, ys
 
@@ -235,3 +237,88 @@ def decode_step(cfg, params, cache, tokens, pos, *, positions=None):
     x = L.apply_norm(cfg, x, params["final_norm"])
     logits = L.unembed(cfg, params["embed"], x)
     return logits, {"k": ks, "v": vs}
+
+
+# ---------------------------------------------------------------------------
+# paged serving contract (DESIGN.md §17)
+# ---------------------------------------------------------------------------
+
+def paged_spec(cfg):
+    """Multi-layer KV folded into ONE page geometry: layer is the leading
+    slab dim, so a sequence's pages for every layer share one table."""
+    from repro.serving.paged import PageSpec
+
+    return PageSpec(
+        layers=cfg.num_layers,
+        page_size=0,  # 0 -> REPRO_PAGE_SIZE default
+        kv_heads=cfg.num_kv_heads,
+        head_dim=cfg.hd,
+        dtype=jnp.float32,
+    )
+
+
+def paged_prefill(cfg, params, tokens, extras=None):
+    """tokens: (B, T) int32 -> (k, v, state, last_logits).
+
+    k/v: (B, L, T, K, hd) per-request KV rows ready for
+    ``PagedKVCache.append``; state: None (attention-only arch);
+    last_logits: (B, V) fp32 for the sampling stage.  KV bits equal
+    ``forward(..., return_kv=True)`` — the padded oracle's prefill.
+    """
+    batch = {"tokens": tokens}
+    if extras:
+        batch.update(extras)
+    # moe_groups=B: capacity buckets stay per-row, so each request's
+    # prefill logits are independent of which rows batched with it.
+    logits, _, kv = forward(cfg, params, batch, return_kv=True, last_only=True,
+                            moe_groups=tokens.shape[0])
+    k = jnp.moveaxis(kv["k"], 0, 1)  # (L, B, T, K, hd) -> (B, L, T, K, hd)
+    v = jnp.moveaxis(kv["v"], 0, 1)
+    return k, v, None, logits[:, -1]
+
+
+def paged_decode_step(cfg, params, k_pages, v_pages, state, tokens, positions, tables, lengths):
+    """One ragged decode step straight against the page pool.
+
+    k_pages/v_pages: (L, N, P, K, hd) slabs; tokens: (B,) int32 last
+    tokens; positions == lengths: (B,) per-row write slot / tokens already
+    resident; tables: (B, M).  Returns (k_pages, v_pages, state, logits
+    (B, V)).  Per-row math is op-for-op ``decode_step``'s — the new token
+    is scattered at ``positions`` and each row attends over
+    ``lengths + 1`` slots — so greedy tokens are bit-identical to the
+    padded oracle.
+    """
+    tokens = tokens.reshape(-1, 1)
+    x = L.embed(cfg, params["embed"], tokens)
+    B = x.shape[0]
+    if cfg.rope_type == "mrope":
+        p3 = jnp.broadcast_to(positions[None, :, None], (3, B, 1)).astype(jnp.int32)
+        cos, sin = _rope(cfg, p3)
+    elif cfg.rope_type == "rope":
+        cos, sin = _rope(cfg, positions[:, None].astype(jnp.int32))
+    else:
+        cos, sin = None, None
+
+    def body(x, xs):
+        lp, kp, vp = xs
+        h = L.apply_norm(cfg, x, lp["ln1"])
+        q, k, v = L.qkv_proj(cfg, lp["attn"], h)
+        if cos is not None:
+            q = L.apply_rope(q, cos, sin)
+            k = L.apply_rope(k, cos, sin)
+        kp, vp = L.page_scatter(kp, vp, k, v, tables, positions)
+        o = L.paged_decode_attend(q, kp, vp, tables, lengths)
+        x = x + L.out_proj(cfg, lp["attn"], o)
+        h = L.apply_norm(cfg, x, lp["ln2"])
+        if cfg.moe is not None:
+            # per-row capacity buckets: a row's expert drops cannot depend
+            # on which other sequences share the decode micro-batch
+            y, _ = M.moe_block(cfg, lp["moe"], h, groups=B)
+        else:
+            y = L.mlp(cfg, lp["mlp"], h)
+        return x + y, (kp, vp)
+
+    x, (ks, vs) = jax.lax.scan(body, x, (params["layers"], k_pages, v_pages))
+    x = L.apply_norm(cfg, x, params["final_norm"])
+    logits = L.unembed(cfg, params["embed"], x)
+    return ks, vs, state, logits[:, 0]

@@ -8,7 +8,9 @@ from repro.serving.paged import (
     PagedServeEngine,
     PagePool,
     PageSpec,
+    SamplingParams,
     SeqPages,
+    sample_token,
 )
 from repro.serving.serve_step import (
     cache_to_rows,
@@ -29,8 +31,10 @@ __all__ = [
     "PagePool",
     "PagedKVCache",
     "PagedServeEngine",
+    "SamplingParams",
     "SeqPages",
     "OutOfPages",
+    "sample_token",
     "cache_to_rows",
     "make_prefill",
     "make_serve_engine",

@@ -279,6 +279,15 @@ class RequestEngine:
         self._graphs: "dict[tuple, _GraphEntry | None]" = {}  # None = don't graph
         self._streams: "dict[str, Any]" = {}
 
+        # Sticky micro-batch homes: route key -> device key.  Passed to
+        # ``Scheduler.select_batch`` as the ``prefer`` hint so
+        # consecutive batches of one request stream stay on the device
+        # whose caches they warmed.  The scheduler's own structural-yield
+        # hysteresis (recent-free occupancy, ``prefer_slack``) is the
+        # escape hatch: a genuinely backed-up home makes the hint lose,
+        # and the home then follows whatever the policy actually picked.
+        self._sticky: "dict[tuple, str]" = {}
+
         # Metrics (one lock; hot counters only).
         self._m_lock = threading.Lock()
         self._started = _now()
@@ -525,6 +534,36 @@ class RequestEngine:
 
         return get_scheduler()
 
+    def _place_batch(self, sched, group: "list[_Request]"):
+        """Place one micro-batch, sticky by route key.
+
+        ``least_loaded`` alone sprays consecutive micro-batches of one
+        request stream across the fleet: each batch's recent-placement
+        charge makes its own home score busiest, so the next batch hops
+        devices (self-repulsion), churning per-device executable/graph
+        caches — why fig9's batched_8dev row lost to batched_1dev.  The
+        fix rides the scheduler's own path: the route's last home goes in
+        as ``select_batch``'s ``prefer`` hint, which holds unless the
+        home is structurally busier than the policy's pick (occupancy
+        hysteresis, recent-free) or the policy is not load-based.  There
+        is deliberately no periodic re-ask: withholding the hint under a
+        self-repelling load policy *always* migrates the stream (the
+        home carries the recency charges its own batches deposited), so
+        a forced probe is a forced lane-warmup every N batches, not a
+        fair comparison.  The structural yield runs on every placement
+        and is the only mover; when it fires, the home follows the
+        device the policy actually picked."""
+        rkey = self._route_key(group[0].key)
+        with self._route_lock:
+            prefer = self._sticky.get(rkey)
+        try:
+            dev = sched.select_batch([r.leaves for r in group], prefer=prefer)
+        except TypeError:  # duck-typed scheduler without the prefer hint
+            dev = sched.select_batch([r.leaves for r in group])
+        with self._route_lock:
+            self._sticky[rkey] = dev.key
+        return dev
+
     @staticmethod
     def _concat_rows(group: "list[_Request]", i: int, meta, pad: int):
         """One row leaf, concatenated over members and zero-padded to the
@@ -558,7 +597,7 @@ class RequestEngine:
                 self._queue_waits.append(dispatched - r.arrived)
         sched = self._scheduler_for()
         try:
-            dev = sched.select_batch([r.leaves for r in group])
+            dev = self._place_batch(sched, group)
         except BaseException as e:  # noqa: BLE001 - dead fleet fails the batch
             self._finish(group, None, e)
             return

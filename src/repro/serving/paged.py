@@ -50,7 +50,7 @@ when their state is partitioned into fixed-size schedulable units.
   records) whether its sequences still belong here — a different answer
   migrates one sequence, pages percolating in one coalesced move.
 
-The model contract is two callables (see ``make_paged_lm`` in
+The **legacy** model contract is two callables (see ``make_paged_lm`` in
 ``benchmarks/fig9_serving.py`` or ``examples/paged_serving.py``):
 
 ``prefill_fn(tokens)``
@@ -62,6 +62,33 @@ The model contract is two callables (see ``make_paged_lm`` in
     through the page table (``repro.kernels.paged_attention``), return
     ``(k_pages, v_pages, next)``.  Donating the pool args keeps the
     update in place.
+
+The model **zoo** rides the richer ``contract="zoo"`` (DESIGN.md §17),
+wired by ``PagedServeEngine.from_config(cfg)`` from the uniform
+``repro.models.model.paged_surface`` triple:
+
+``prefill_fn(tokens, extras)``
+    ``-> (k, v, state, last_logits)`` with k/v ``(B, L, T', K, D)`` —
+    ``T'`` may exceed the prompt length (hybrid meta/register tokens
+    page in too; the engine pages ``k.shape[2]`` tokens) — ``state`` an
+    optional batch-leading pytree of fixed-size per-sequence residue
+    (SSM recurrent state, conv windows, encoder cross K/V) and
+    ``last_logits`` ``(B, V)``: the engine samples the first token
+    host-side.  ``extras`` carries modality inputs (whisper frames),
+    stacked from each request's ``submit(..., extras=...)``.
+``decode_fn(k_pages, v_pages, state, tokens, positions, tables, lengths)``
+    ``-> (k_pages, v_pages, state, logits)`` — one ragged step over the
+    pools plus the batch's stacked resident state; ``logits`` ``(B, V)``
+    come back to the host for sampling.
+
+Resident state spills, migrates and ships with the sequence's pages
+(``SeqPages.set_state`` folds its bytes into the AGAS record — the §14
+memory-aware scheduler sees SSM state as honestly as KV pages), and
+sampling is host-side and bit-reproducible: token ``position`` of
+request ``request_id`` draws from
+``np.random.default_rng([seed, request_id, position])`` — a pure
+function of request identity, never of batch composition or fleet size
+(greedy argmax when ``temperature <= 0``).
 
 Env knobs: ``REPRO_PAGE_SIZE`` (tokens per page, default 16),
 ``REPRO_PAGE_POOL_BYTES`` (per-device pool bytes, default 32 MiB),
@@ -93,8 +120,10 @@ __all__ = [
     "PagePool",
     "PagedKVCache",
     "PagedServeEngine",
+    "SamplingParams",
     "SeqPages",
     "OutOfPages",
+    "sample_token",
 ]
 
 
@@ -138,6 +167,59 @@ class PageSpec:
 
     def pages_for(self, tokens: int) -> int:
         return max(0, -(-int(tokens) // self.page_size))
+
+
+@dataclass(frozen=True)
+class SamplingParams:
+    """Per-request sampling knobs (zoo contract).
+
+    ``temperature <= 0`` means greedy argmax (the default, and the
+    parity-oracle mode).  ``top_k``/``top_p`` filter the distribution
+    after temperature scaling: keep the ``top_k`` highest-probability
+    tokens (0 = unlimited), then the smallest prefix of the descending
+    distribution whose cumulative probability reaches ``top_p``.
+    ``seed`` keys the per-request PRNG stream."""
+
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+    seed: int = 0
+
+
+def sample_token(logits, params: "SamplingParams | None",
+                 request_id: int, position: int) -> int:
+    """Sample ONE token from a ``(V,)`` logits row, bit-reproducibly.
+
+    The PRNG is seeded ``[seed, request_id, position]`` — a pure
+    function of the request's identity and the token's position, so the
+    same request emits the same tokens whether it shared its decode
+    batch with 0 or 63 neighbours and whether the fleet had 1 or 8
+    devices.  Math is float64 on host: no accelerator, dtype or fusion
+    variance can leak into the draw."""
+    logits = np.asarray(logits, np.float64).reshape(-1)
+    if params is None or params.temperature <= 0.0:
+        return int(np.argmax(logits))
+    x = logits / float(params.temperature)
+    order = np.argsort(-x, kind="stable")  # stable: ties break by token id
+    xs = x[order]
+    keep = xs.size
+    if params.top_k and params.top_k > 0:
+        keep = min(keep, int(params.top_k))
+    xs = xs[:keep]
+    probs = np.exp(xs - xs.max())
+    probs /= probs.sum()
+    if params.top_p < 1.0:
+        cum = np.cumsum(probs)
+        # smallest prefix reaching top_p (always >= 1 token)
+        cut = int(np.searchsorted(cum, params.top_p, side="left")) + 1
+        probs = probs[:cut]
+        probs /= probs.sum()
+    rng = np.random.default_rng(
+        [int(params.seed), int(request_id), int(position)])
+    u = rng.random()
+    idx = int(np.searchsorted(np.cumsum(probs), u, side="right"))
+    idx = min(idx, probs.size - 1)
+    return int(order[idx])
 
 
 # Consecutive empty decode steps (nothing fits in the pool) tolerated
@@ -316,6 +398,13 @@ class SeqPages:
         self.seq_id = seq_id
         self.pages: "list[int]" = []
         self.length = 0
+        # Per-sequence resident state (zoo contract): an opaque pytree of
+        # host arrays — SSM recurrent state, conv windows, cross K/V —
+        # that rides with the pages through spill/migrate/export.  Its
+        # bytes fold into ``nbytes`` so the memory-aware scheduler and
+        # the LRU spiller see recurrent residency as honestly as KV.
+        self.state: Any = None
+        self._state_bytes = 0
         self._spilled: "tuple[np.ndarray, np.ndarray] | None" = None
         self._lock = threading.RLock()
         self._last_use = _now()
@@ -332,11 +421,28 @@ class SeqPages:
 
     @property
     def nbytes(self) -> int:
-        return len(self.pages) * self.pool.spec.page_bytes
+        """Device-resident bytes: pages plus the recurrent state (which
+        lives with the sequence — spilled sequences pin nothing)."""
+        n = len(self.pages) * self.pool.spec.page_bytes
+        if self._spilled is None:
+            n += self._state_bytes
+        return n
 
     @property
     def spilled(self) -> bool:
         return self._spilled is not None
+
+    def set_state(self, state) -> None:
+        """Attach/replace the sequence's resident state (zoo contract)
+        and re-declare its bytes through AGAS — SSM/hybrid recurrent
+        state is real device pressure the §14 spill and memory-aware
+        placement must see, not a hidden side-car."""
+        with self._lock:
+            self.state = state
+            self._state_bytes = sum(
+                int(a.nbytes) for a in jax.tree_util.tree_leaves(state)
+                if hasattr(a, "nbytes"))
+            self._account()
 
     def _account(self) -> None:
         try:
@@ -484,6 +590,8 @@ class PagedKVCache:
                 seq.pool.free(seq.pages)
             seq.pages = []
             seq._spilled = None
+            seq.state = None
+            seq._state_bytes = 0
             seq.length = 0
             if seq._finalizer is not None:
                 seq._finalizer.detach()
@@ -588,6 +696,42 @@ class PagedKVCache:
             seq._account()
             seq._last_use = _now()
 
+    # -- cross-locality shipping (prefill -> decode disaggregation) ----------
+
+    def export_seq(self, seq: SeqPages) -> dict:
+        """Ship-ready snapshot of one sequence: page contents leave the
+        slabs as ONE coalesced gather (``read_pages``), plus length and
+        the resident state.  Plain numpy throughout — over a parcelport
+        ``invoke`` the big arrays ride the PR 6 shm lane, so a prefill
+        locality can hand a finished prompt to a decode locality without
+        serializing megabytes through the control channel."""
+        with seq._lock:
+            seq.ensure_resident()
+            k, v = seq.pool.read_pages(seq.pages)
+            state = seq.state
+            if state is not None:
+                state = jax.tree_util.tree_map(np.asarray, state)
+            return {"k": k, "v": v, "length": int(seq.length), "state": state}
+
+    def import_seq(self, device, payload: dict) -> SeqPages:
+        """Inverse of ``export_seq``, usually on another locality's
+        cache: allocate, ONE coalesced scatter, state re-attached (its
+        bytes re-declared against THIS device) — decode resumes from the
+        shipped table as if the prompt had prefilled here."""
+        seq = self.new_seq(device)
+        k = np.asarray(payload["k"])
+        v = np.asarray(payload["v"])
+        with seq._lock:
+            pages = seq.pool.alloc(len(k))
+            seq.pool.write_pages(pages, k, v)
+            seq.pages = pages
+            seq.length = int(payload["length"])
+            if payload.get("state") is not None:
+                seq.set_state(payload["state"])
+            seq._account()
+            seq._last_use = _now()
+        return seq
+
     def stats(self) -> dict:
         out = {}
         for key, pool in self.pools.items():
@@ -602,13 +746,21 @@ class PagedKVCache:
 
 class _PagedRequest:
     __slots__ = ("tokens", "max_new", "promise", "arrived", "seq", "out",
-                 "started", "first_token_s", "handed_off")
+                 "started", "first_token_s", "handed_off", "rid", "sampling",
+                 "extras")
 
-    def __init__(self, tokens, max_new, promise, arrived):
+    def __init__(self, tokens, max_new, promise, arrived, rid=0,
+                 sampling=None, extras=None):
         self.tokens = tokens
         self.max_new = max_new
         self.promise = promise
         self.arrived = arrived
+        # Zoo-contract identity + knobs: ``rid`` keys the sampling PRNG
+        # stream, ``sampling`` is a SamplingParams (None = greedy),
+        # ``extras`` carries per-request modality inputs (whisper frames).
+        self.rid = rid
+        self.sampling = sampling
+        self.extras = extras
         self.seq: "SeqPages | None" = None
         self.out: "list[int]" = []
         self.started = arrived
@@ -638,10 +790,15 @@ class PagedServeEngine:
                  decode: "LanePolicy | None" = None,
                  max_queue: int = 512, rebalance_every: int = 32,
                  decode_shapes: "Sequence[int] | None" = None,
+                 contract: str = "legacy",
                  name: str = "paged"):
+        if contract not in ("legacy", "zoo"):
+            raise ValueError(f"contract must be 'legacy' or 'zoo', got {contract!r}")
         self.kv = kv
         self.prefill_fn = prefill_fn
         self.decode_fn = decode_fn
+        self.contract = contract
+        self._next_rid = 0
         # Optional row-count palette preseeded into every decode lane's
         # warm-shape set (see _DecodeLane): a closed palette (e.g. powers
         # of two up to max_batch) makes the set of compiled decode shapes
@@ -699,9 +856,57 @@ class PagedServeEngine:
             target=self._prefill_loop, name=f"paged:{name}:prefill", daemon=True)
         self._prefill_thread.start()
 
+    # -- construction from the model zoo -------------------------------------
+
+    @classmethod
+    def from_config(cls, cfg, *, devices=None, params=None, seed: int = 0,
+                    max_seq_len: "int | None" = None,
+                    pool_pages: "int | None" = None,
+                    pool_bytes: "int | None" = None, **kw) -> "PagedServeEngine":
+        """Wire any zoo architecture (``repro.configs``) into a paged
+        engine: one ``PageSpec`` from ``paged_spec`` (multi-layer KV
+        folded into one slab geometry), a jitted prefill and a jitted
+        slab-donating decode step from ``paged_prefill`` /
+        ``paged_decode_step``, ``contract="zoo"``.  ``params`` defaults
+        to ``init(cfg, PRNGKey(seed))`` — two localities building from
+        the same seed hold bit-identical weights, which is what lets a
+        shipped sequence resume decoding elsewhere."""
+        from repro.models.model import get_model, paged_surface
+
+        spec_fn, prefill_fn, decode_fn = paged_surface(cfg)
+        spec = spec_fn(cfg)
+        if params is None:
+            params = get_model(cfg).init(cfg, jax.random.PRNGKey(int(seed)))
+        kv = PagedKVCache(spec, devices=devices, pool_pages=pool_pages,
+                          pool_bytes=pool_bytes)
+        if max_seq_len is None:
+            max_seq_len = 16 * spec.page_size
+
+        @jax.jit
+        def pre(tokens, extras):
+            return prefill_fn(cfg, params, tokens, extras)
+
+        @functools.partial(jax.jit, donate_argnums=(0, 1))
+        def dec(ks, vs, state, tokens, positions, tables, lengths):
+            return decode_fn(cfg, params, ks, vs, state, tokens,
+                             positions, tables, lengths)
+
+        kw.setdefault("name", f"paged-{getattr(cfg, 'name', cfg.family)}")
+        return cls(kv, pre, dec, max_seq_len=int(max_seq_len),
+                   contract="zoo", **kw)
+
     # -- submission ----------------------------------------------------------
 
-    def submit(self, prompt, max_new_tokens: int) -> Future:
+    def submit(self, prompt, max_new_tokens: int, *,
+               sampling: "SamplingParams | None" = None,
+               extras: "dict | None" = None,
+               request_id: "int | None" = None) -> Future:
+        """Queue one request.  ``sampling`` (zoo contract) selects the
+        host-side sampler (None = greedy); ``extras`` carries modality
+        inputs (e.g. whisper ``frames``); ``request_id`` keys the
+        sampling PRNG stream — pass an explicit, fleet-stable id when
+        reproducibility across deployments matters, else submission
+        order numbers the stream."""
         tokens = np.asarray(prompt, np.int32).reshape(-1)
         if tokens.size == 0:
             raise ValueError("empty prompt")
@@ -711,7 +916,11 @@ class PagedServeEngine:
                 f"prompt ({tokens.size}) + max_new_tokens ({max_new_tokens}) "
                 f"exceeds max_seq_len ({self.max_seq_len})")
         promise: Promise = Promise(name=f"{self.name}:seq")
-        req = _PagedRequest(tokens, int(max_new_tokens), promise, _now())
+        with self._m_lock:
+            rid = self._next_rid if request_id is None else int(request_id)
+            self._next_rid += 1
+        req = _PagedRequest(tokens, int(max_new_tokens), promise, _now(),
+                            rid=rid, sampling=sampling, extras=extras)
         with self._cv:
             if self._closed:
                 raise EngineClosed(f"engine {self.name!r} is closed")
@@ -824,12 +1033,30 @@ class PagedServeEngine:
                         self._prefill_done(r)
 
     def _run_prefill(self, group: "list[_PagedRequest]") -> None:
-        T = group[0].tokens.size
         batch = np.stack([r.tokens for r in group])  # (B, T) — equal-T: no padding
-        k, v, nxt = self.prefill_fn(batch)
+        state = None
+        if self.contract == "zoo":
+            extras = None
+            if group[0].extras is not None:
+                extras = {key: np.stack([np.asarray(r.extras[key]) for r in group])
+                          for key in group[0].extras}
+            k, v, state, logits = self.prefill_fn(batch, extras)
+            logits = np.asarray(logits)
+            if state is not None:
+                state = jax.tree_util.tree_map(np.asarray, state)
+            # First token samples host-side at position 0 of each
+            # request's own PRNG stream — batch composition cannot leak.
+            nxt = np.asarray(
+                [sample_token(logits[i], r.sampling, r.rid, 0)
+                 for i, r in enumerate(group)], np.int32)
+        else:
+            k, v, nxt = self.prefill_fn(batch)
+            nxt = np.asarray(nxt, np.int32)
         k = np.asarray(k)
         v = np.asarray(v)
-        nxt = np.asarray(nxt, np.int32)
+        # Page k.shape[2] tokens, not the prompt length: hybrid archs
+        # prepend meta/register tokens whose KV pages in with the prompt.
+        Tp = k.shape[2]
         sched = self._scheduler_for()
         done = _now()
         with self._m_lock:
@@ -838,10 +1065,13 @@ class PagedServeEngine:
             self._prefill_rows += len(group)
         for i, req in enumerate(group):
             dev = sched.select(args=())
-            pool = self._pool_with_room(dev, self.kv.spec.pages_for(T) + 1)
+            pool = self._pool_with_room(dev, self.kv.spec.pages_for(Tp) + 1)
             req.seq = self.kv.new_seq(pool.device)
-            # k[i]: (L, T, Kh, D) — the whole prompt pages in as one write.
+            # k[i]: (L, T', Kh, D) — the whole prompt pages in as one write.
             self.kv.append(req.seq, k[i], v[i])
+            if state is not None:
+                req.seq.set_state(
+                    jax.tree_util.tree_map(lambda a, i=i: a[i], state))
             req.out.append(int(nxt[i]))
             req.started = done
             req.first_token_s = done - req.arrived
@@ -1116,15 +1346,43 @@ class _DecodeLane:
                 lens = np.concatenate([lens, np.repeat(lens[-1:], pad)])
                 tokens = np.concatenate([tokens, np.repeat(tokens[-1:], pad)])
             pool = kv.pool_of(self.device)
-            with pool.lock:
-                ks, vs = pool.arrays()
-                # Host operands ride the call uncommitted: the computation
-                # follows the committed slabs to this lane's device, and the
-                # C++ dispatch path moves four tiny arrays faster than four
-                # python-level device_put round-trips would.
-                k2, v2, nxt = eng.decode_fn(ks, vs, tokens, lens, tbl, lens)
-                nxt = np.asarray(nxt, np.int32)  # sync before the slabs swap
-                pool.set_arrays(k2, v2)
+            if eng.contract == "zoo":
+                # Stack each row's resident state (pad rows duplicate the
+                # last row, discarded on the way back out).
+                rows = [r.seq.state for r in batch]
+                state = None
+                if rows[0] is not None:
+                    rows = rows + [rows[-1]] * pad
+                    state = jax.tree_util.tree_map(
+                        lambda *xs: np.stack(xs), *rows)
+                with pool.lock:
+                    ks, vs = pool.arrays()
+                    k2, v2, st2, logits = eng.decode_fn(
+                        ks, vs, state, tokens, lens, tbl, lens)
+                    logits = np.asarray(logits)  # sync before the slabs swap
+                    pool.set_arrays(k2, v2)
+                if st2 is not None:
+                    st2 = jax.tree_util.tree_map(np.asarray, st2)
+                nxt = np.empty(len(batch), np.int32)
+                for i, r in enumerate(batch):
+                    # Position = tokens already emitted (prefill's token
+                    # was position 0): identity-keyed, batch-independent.
+                    nxt[i] = sample_token(logits[i], r.sampling, r.rid,
+                                          len(r.out))
+                    if st2 is not None:
+                        r.seq.set_state(jax.tree_util.tree_map(
+                            lambda a, i=i: a[i], st2))
+            else:
+                with pool.lock:
+                    ks, vs = pool.arrays()
+                    # Host operands ride the call uncommitted: the
+                    # computation follows the committed slabs to this
+                    # lane's device, and the C++ dispatch path moves four
+                    # tiny arrays faster than four python-level
+                    # device_put round-trips would.
+                    k2, v2, nxt = eng.decode_fn(ks, vs, tokens, lens, tbl, lens)
+                    nxt = np.asarray(nxt, np.int32)  # sync before the slabs swap
+                    pool.set_arrays(k2, v2)
             for i, r in enumerate(batch):
                 kv.note_decoded(r.seq)
                 r.out.append(int(nxt[i]))
@@ -1195,3 +1453,120 @@ class _DecodeLane:
         with eng._m_lock:
             eng._migrations += 1
         eng._lane_for(dev).admit(victim)
+
+
+# ---------------------------------------------------------------------------
+# cross-locality disaggregation: parcel "invoke" actions (DESIGN.md §17)
+# ---------------------------------------------------------------------------
+#
+# Prefill on one locality, decode on another: the prefill side runs
+# ``paged_prefill`` + ``PagedKVCache.append`` locally, then ships
+# ``export_seq``'s payload (pages as ONE coalesced gather, plus length
+# and resident state) as a parcel —
+#
+#     port.call(lid, "invoke", {
+#         "fn": "repro.serving.paged:paged_worker_decode",
+#         "payload": {...}})
+#
+# — where the big arrays take the shm lane.  The decode side re-derives
+# the weights from the config name + PRNG seed (bit-identical params;
+# nothing but pages crosses the wire), imports the sequence into its own
+# pool and resumes decoding from the shipped table.  Sampling stays
+# keyed by (seed, request_id, position), so the shipped continuation is
+# bit-identical to a single-locality decode.
+
+_WORKER_LOCK = threading.Lock()
+_WORKERS: "dict[str, dict]" = {}
+
+
+def _worker_ctx(payload: dict) -> dict:
+    """Decode-side context for one shipped-page stream, built once per
+    ``name`` on this locality and cached: smoke'd (or full) config,
+    seed-derived params, a single-device ``PagedKVCache`` and the jitted
+    slab-donating decode step."""
+    name = payload["name"]
+    with _WORKER_LOCK:
+        ctx = _WORKERS.get(name)
+        if ctx is not None:
+            return ctx
+        from repro.configs import get_config
+        from repro.configs import smoke as _smoke
+        from repro.core.device import get_all_devices
+        from repro.models.model import get_model, paged_surface
+
+        cfg = get_config(payload["config"])
+        if payload.get("smoke", True):
+            cfg = _smoke(cfg)
+        spec_fn, _, decode_fn = paged_surface(cfg)
+        params = get_model(cfg).init(
+            cfg, jax.random.PRNGKey(int(payload.get("seed", 0))))
+        devs = list(get_all_devices().get())
+        dev = devs[int(payload.get("device_index", 0)) % len(devs)]
+        kv = PagedKVCache(spec_fn(cfg), devices=[dev],
+                          pool_pages=payload.get("pool_pages"))
+
+        @functools.partial(jax.jit, donate_argnums=(0, 1))
+        def dec(ks, vs, state, tokens, positions, tables, lengths):
+            return decode_fn(cfg, params, ks, vs, state, tokens,
+                             positions, tables, lengths)
+
+        ctx = _WORKERS[name] = {"cfg": cfg, "kv": kv, "dev": dev, "dec": dec}
+        return ctx
+
+
+def paged_worker_decode(payload: dict) -> np.ndarray:
+    """Parcel ``invoke`` target: resume decoding a shipped sequence.
+
+    payload keys: ``name`` (worker cache key), ``config`` (registry
+    name), ``smoke``, ``seed``, ``device_index``, ``pool_pages``,
+    ``seq`` (an ``export_seq`` payload), ``first_token`` (the
+    prefill-sampled token), ``max_new``, ``max_pages`` (table width —
+    must match the prefill side's so the attention geometry is
+    identical), ``sampling`` (SamplingParams fields or None) and
+    ``request_id``.  Returns all generated tokens (np.int32), first
+    token included."""
+    ctx = _worker_ctx(payload)
+    kv: PagedKVCache = ctx["kv"]
+    dev = ctx["dev"]
+    pool = kv.pool_of(dev)
+    seq = kv.import_seq(dev, payload["seq"])
+    sp = payload.get("sampling")
+    if sp is not None and not isinstance(sp, SamplingParams):
+        sp = SamplingParams(**sp)
+    rid = int(payload.get("request_id", 0))
+    max_pages = int(payload["max_pages"])
+    out = [int(payload["first_token"])]
+    try:
+        for _ in range(int(payload["max_new"]) - 1):
+            kv.ensure_slot(seq)
+            tbl, lens = kv.table([seq], max_pages)
+            tokens = np.asarray([out[-1]], np.int32)
+            state = None
+            if seq.state is not None:
+                state = jax.tree_util.tree_map(
+                    lambda a: np.asarray(a)[None], seq.state)
+            with pool.lock:
+                ks, vs = pool.arrays()
+                k2, v2, st2, logits = ctx["dec"](
+                    ks, vs, state, tokens, lens, tbl, lens)
+                logits = np.asarray(logits)
+                pool.set_arrays(k2, v2)
+            if st2 is not None:
+                seq.set_state(jax.tree_util.tree_map(
+                    lambda a: np.asarray(a)[0], st2))
+            kv.note_decoded(seq)
+            out.append(sample_token(logits[0], sp, rid, len(out)))
+    finally:
+        kv.free_seq(seq)
+    return np.asarray(out, np.int32)
+
+
+def paged_worker_reset(payload: dict) -> bool:
+    """Drop cached worker contexts (tests; ``payload`` may name one)."""
+    with _WORKER_LOCK:
+        name = (payload or {}).get("name")
+        if name is None:
+            _WORKERS.clear()
+        else:
+            _WORKERS.pop(name, None)
+    return True

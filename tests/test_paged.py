@@ -28,7 +28,7 @@ from repro.core import Scheduler, get_all_devices
 from repro.core import agas
 from repro.kernels.flash_attention.ref import flash_attention_ref
 from repro.kernels.paged_attention.kernel import paged_attention_bhd
-from repro.kernels.paged_attention.ops import paged_attention
+from repro.kernels.paged_attention.ops import paged_attention, paged_attention_layers
 from repro.kernels.paged_attention.ref import paged_attention_ref
 from repro.serving import LanePolicy, RequestEngine
 from repro.serving.paged import OutOfPages, PagedKVCache, PagedServeEngine, PageSpec
@@ -117,6 +117,56 @@ def test_paged_kernel_property_ragged(seed, page):
     ref = np.asarray(paged_attention_ref(q, kp, vp, tbl, lens))
     got = np.asarray(paged_attention_bhd(q, kp, vp, tbl, lens, interpret=True))
     np.testing.assert_allclose(got, ref, rtol=1e-4, atol=1e-4)
+
+
+def _random_layered(rng, Lc, B, H, K, D, P, M, lengths):
+    """Folded multi-layer slab: one table, per-layer page contents
+    (``_random_paged`` allocates pages deterministically from ``lengths``,
+    so each layer's table comes out identical — the zoo invariant)."""
+    qs, ks, vs = [], [], []
+    tbl = lens = None
+    for _ in range(Lc):
+        q, kp, vp, tbl, lens = _random_paged(rng, B, H, K, D, P, M, lengths)
+        qs.append(q), ks.append(kp), vs.append(vp)
+    return np.stack(qs), np.stack(ks), np.stack(vs), tbl, lens
+
+
+def test_paged_layers_matches_per_layer_ref():
+    rng = np.random.default_rng(3)
+    Lc, B, H, K, D, P, M = 3, 3, 4, 2, 8, 4, 5
+    q, kp, vp, tbl, lens = _random_layered(rng, Lc, B, H, K, D, P, M, [3, 8, 17])
+    got = np.asarray(paged_attention_layers(q, kp, vp, tbl, lens))
+    assert got.shape == (Lc, B, H, D)
+    for l in range(Lc):  # the fold is exactly L per-layer calls, bitwise
+        want = np.asarray(paged_attention_ref(q[l], kp[l], vp[l], tbl, lens))
+        np.testing.assert_array_equal(got[l], want)
+
+
+def test_paged_layers_rejects_mismatched_layer_dims():
+    rng = np.random.default_rng(4)
+    q, kp, vp, tbl, lens = _random_layered(rng, 2, 2, 2, 1, 4, 4, 3, [5, 9])
+    with pytest.raises(ValueError, match="layer dims"):
+        paged_attention_layers(q[:1], kp, vp, tbl, lens)
+
+
+@pytest.mark.parametrize("arch", ["olmo-1b", "qwen2-moe-a2.7b", "hymba-1.5b", "whisper-tiny"])
+def test_paged_kernel_zoo_geometries(arch):
+    """The Pallas kernel handles every zoo ``paged_spec`` geometry —
+    multi-layer folds and GQA head ratios — matching the gather ref."""
+    from repro.configs import get_config, smoke
+    from repro.models.model import paged_surface
+
+    cfg = smoke(get_config(arch))
+    spec = paged_surface(cfg)[0](cfg)
+    H, K, D = cfg.num_heads, spec.kv_heads, spec.head_dim
+    assert H % K == 0, f"{arch}: GQA ratio must be integral"
+    rng = np.random.default_rng(6)
+    P, M = 4, 4
+    q, kp, vp, tbl, lens = _random_layered(
+        rng, spec.layers, 2, H, K, D, P, M, [3, 10])
+    ref = np.asarray(paged_attention_layers(q, kp, vp, tbl, lens, impl="ref"))
+    got = np.asarray(paged_attention_layers(q, kp, vp, tbl, lens, impl="kernel"))
+    np.testing.assert_allclose(got, ref, rtol=1e-5, atol=1e-5)
 
 
 # ---------------------------------------------------------------------------

@@ -370,6 +370,57 @@ def test_select_batch_cold_start_spreads_over_fleet():
     assert len(set(keys)) == 4, keys  # blind batches round-robin, no pile-up
 
 
+def test_occupancy_recent_free_probe_ignores_own_charge():
+    devs = _fleet(2)
+    s = Scheduler(devs, policy="least_loaded", steal=False)
+    base = s.occupancy(devs[0])
+    s.charge(devs[0], 4)
+    assert s.occupancy(devs[0]) > base           # charge visible to placement
+    assert s.occupancy(devs[0], recent=False) == base  # ...but not to the probe
+
+
+def test_select_batch_prefer_holds_against_self_repulsion():
+    """A decode stream's own recent-placement charge must NOT bounce the
+    next micro-batch off its home (the fig9 batched_8dev regression):
+    with the ``prefer`` hint the home holds, and ``stats()`` honestly
+    records the held home, not the policy's repelled pick."""
+    s = Scheduler(_fleet(4), policy="least_loaded", steal=False)
+    home = s.select_batch([[np.ones(4, np.float32)]])
+    s.charge(home, 7)
+    for _ in range(5):
+        dev = s.select_batch([[np.ones(4, np.float32)]], prefer=home.key)
+        assert dev.key == home.key
+        s.charge(dev, 7)
+    assert s.stats()[home.key] == 6
+
+
+def test_select_batch_prefer_yields_to_structural_load():
+    devs = _fleet(2)
+    devs[0].ops_queue.depth = 20  # real backlog, beyond the 16.0 slack
+    s = Scheduler(devs, policy="least_loaded", steal=False)
+    dev = s.select_batch([[np.ones(4, np.float32)]], prefer="cpu:0")
+    assert dev.key == "cpu:1"
+
+
+def test_select_batch_prefer_holds_through_burst_depth():
+    # A burst keeps a few in-flight micro-batches queued on the home
+    # lane; that is not a reason to hop (each is ~100us of work, and the
+    # move costs an executable-cache warmup).  Depth within the slack
+    # holds.
+    devs = _fleet(2)
+    devs[0].ops_queue.depth = 8  # a full in-flight burst window
+    s = Scheduler(devs, policy="least_loaded", steal=False)
+    dev = s.select_batch([[np.ones(4, np.float32)]], prefer="cpu:0")
+    assert dev.key == "cpu:0"
+
+
+def test_select_batch_prefer_ignored_by_non_load_policies():
+    s = Scheduler(_fleet(3), policy="round_robin", steal=False)
+    keys = [s.select_batch([[np.ones(4, np.float32)]], prefer="cpu:0").key
+            for _ in range(3)]
+    assert keys == ["cpu:0", "cpu:1", "cpu:2"]  # hint never overrides rotation
+
+
 # ---------------------------------------------------------------------------
 # memory-aware placement (DESIGN.md §14): veto, LRU spill, honest accounting
 # ---------------------------------------------------------------------------
